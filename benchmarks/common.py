@@ -1,0 +1,66 @@
+"""Shared benchmark substrate: one tiny-but-real MoE trained on the synthetic
+LM task, cached on disk so every benchmark measures the same trained model
+(the paper's quality claims are meaningless on random weights)."""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.training import (SyntheticLMTask, TrainConfig, load_checkpoint,
+                            save_checkpoint, train_loop)
+from repro.training.adamw import AdamWConfig
+
+CKPT = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                    "bench_model")
+
+
+def bench_config():
+    """A granite-family MoE sized for CPU benchmarking: 4 layers, 8 experts
+    top-2 — small enough to serve in seconds, big enough to show skew."""
+    cfg = get_config("granite-moe-1b-a400m", reduced=True)
+    cfg = dataclasses.replace(
+        cfg, name="bench-moe", n_layers=4,
+        moe=dataclasses.replace(cfg.moe, num_experts=8, top_k=2,
+                                router_aux_coef=0.002))
+    return cfg
+
+
+def trained_model(steps: int = 120, force: bool = False):
+    cfg = bench_config()
+    task = SyntheticLMTask(cfg.vocab_size, seed=0)
+    params0 = init_params(jax.random.PRNGKey(0), cfg)
+    if not force and os.path.exists(os.path.join(CKPT, "manifest.json")):
+        try:
+            params, _ = load_checkpoint(CKPT, params0)
+            return cfg, params, task
+        except Exception:
+            pass
+    tcfg = TrainConfig(optimizer=AdamWConfig(lr=2e-3, warmup_steps=10,
+                                             total_steps=steps))
+    params, _, hist = train_loop(cfg, params0, task.batches(16, 65, steps),
+                                 tcfg, log_every=steps, log=lambda *_: None)
+    save_checkpoint(CKPT, params, step=steps)
+    return cfg, params, task
+
+
+def eval_batches(task, cfg, n=6, batch=8, length=65, workload=None, seed=777):
+    """Held-out eval batches; optionally conditioned on a serving workload's
+    token distribution (for the shift experiments)."""
+    from repro.serving.requests import make_prompts
+    for i in range(n):
+        if workload is None:
+            toks = task.sample(batch, length, seed=seed + i)
+        else:
+            toks = make_prompts(workload, cfg.vocab_size, batch, length,
+                                seed=seed + i)
+        yield {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+def clone(tree):
+    return jax.tree_util.tree_map(lambda x: x, tree)

@@ -1,0 +1,5 @@
+"""Hardware constants used by the transfer-cost models and rooflines."""
+PCIE_GBPS = 16.0       # PCIe gen4 x16 — host↔device tier (paper's A6000 rig)
+HBM_GBPS = 819.0       # TPU v5e HBM
+PEAK_TFLOPS_BF16 = 197.0
+ICI_GBPS = 50.0

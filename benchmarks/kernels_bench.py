@@ -1,0 +1,51 @@
+"""Kernel microbenchmarks: interpret-mode correctness-path timing plus the
+ANALYTIC TPU roofline for the quant-GEMM (the number that matters — this
+container has no TPU). derived = arithmetic-intensity/roofline speedup of the
+int4 fused path over bf16 weights for the memory-bound decode GEMM."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.hw import HBM_GBPS, PEAK_TFLOPS_BF16
+from repro.kernels.ops import quant_matmul_op
+from repro.kernels import ref
+from repro.quant import quantize
+
+
+def run(report):
+    m, k, n = 128, 2048, 768          # one qwen3 expert GEMM at decode
+    x = jax.random.normal(jax.random.PRNGKey(0), (m, k), jnp.bfloat16)
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, n), jnp.float32)
+    for bits in (8, 4, 2):
+        qt = quantize(w, bits=bits, group_size=64)
+        quant_matmul_op(x, qt).block_until_ready()      # compile
+        t0 = time.perf_counter()
+        quant_matmul_op(x, qt).block_until_ready()
+        dt = time.perf_counter() - t0
+        # analytic v5e roofline: memory-bound decode GEMM time = bytes/bw
+        w_bytes = qt.nbytes
+        t_mem = w_bytes / (HBM_GBPS * 1e9)
+        t_bf16 = (k * n * 2) / (HBM_GBPS * 1e9)
+        t_flops = (2 * m * k * n) / (PEAK_TFLOPS_BF16 * 1e12)
+        speedup = t_bf16 / max(t_mem, t_flops)
+        report(f"kernels/quant_matmul_int{bits}/interpret", dt * 1e6,
+               round(speedup, 2))
+
+
+def run_flash(report):
+    from repro.kernels.ops import flash_decode_op
+    B, H, Hkv, hd, S = 4, 8, 2, 64, 4096
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, H, hd), jnp.bfloat16)
+    kk = jax.random.normal(jax.random.PRNGKey(1), (B, S, Hkv, hd), jnp.bfloat16)
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, Hkv, hd), jnp.bfloat16)
+    valid = jnp.ones((B, S), bool)
+    flash_decode_op(q, kk, v, valid, bs=512).block_until_ready()
+    t0 = time.perf_counter()
+    flash_decode_op(q, kk, v, valid, bs=512).block_until_ready()
+    dt = time.perf_counter() - t0
+    kv_bytes = 2 * B * S * Hkv * hd * 2
+    report("kernels/flash_decode/interpret", dt * 1e6,
+           round(kv_bytes / (HBM_GBPS * 1e9) * 1e6, 3))  # derived: v5e µs

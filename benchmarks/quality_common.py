@@ -1,0 +1,61 @@
+"""Quality-benchmark helpers: perplexity under a given expert bank."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ver import build_bank
+from repro.training.train import eval_perplexity
+
+
+def stack_experts(params):
+    """granite-style single-position MoE stack → {'name': (L, E, K, N)}."""
+    return params["blocks"]["0"]["moe"]["experts"]
+
+
+def bank_with_hotset(params, lo_bits: int, hi_sets, hi_bits: int = 16):
+    """Build a DynaExq bank and publish ``hi_sets[l]`` (lists of expert ids)
+    into the hi pool — the state the controller converges to."""
+    experts = stack_experts(params)
+    n_hi = max((len(s) for s in hi_sets), default=0)
+    bank = build_bank(experts, n_hi=max(n_hi, 1), lo_bits=lo_bits,
+                      hi_bits=hi_bits)
+    sm = np.asarray(bank.slot_map).copy()
+    so = np.asarray(bank.slot_owner).copy()
+    hi = {n: np.asarray(a).copy() for n, a in bank.hi.items()}
+    if hi_bits >= 16:
+        host = {n: np.asarray(a) for n, a in experts.items()}
+    else:  # int-hi tier: slots hold the hi-bit RTN values (paper's Int4-hi)
+        from repro.quant import dequantize, quantize
+        host = {n: np.asarray(dequantize(quantize(a, bits=hi_bits,
+                                                  group_size=64)))
+                for n, a in experts.items()}
+    for l, hs in enumerate(hi_sets):
+        for slot, e in enumerate(hs):
+            sm[l, e] = slot
+            so[l, slot] = e
+            for n in hi:
+                hi[n][l, slot] = host[n][l, e]
+    bank.slot_map = jnp.asarray(sm)
+    bank.slot_owner = jnp.asarray(so)
+    bank.hi = {n: jnp.asarray(a) for n, a in hi.items()}
+    return bank
+
+
+def ppl(cfg, params, batches, bank=None) -> float:
+    return eval_perplexity(cfg, params, batches, capacity_factor=8.0,
+                           bank={"0": bank} if bank is not None else None)
+
+
+def hotness_from_counts(cfg, params, batches) -> np.ndarray:
+    """Router-trace hotness on an eval workload: (L, E) counts."""
+    from repro.models import forward_train
+    agg = None
+    for b in batches:
+        _, aux = forward_train(params, cfg,
+                               {"tokens": jnp.asarray(b["tokens"])},
+                               capacity_factor=8.0, remat=False)
+        c = np.asarray(aux["counts"]["0"])
+        agg = c if agg is None else agg + c
+    return agg

@@ -1,0 +1,45 @@
+"""Architecture registry. ``get_config(name)`` returns the full assigned
+config; ``get_config(name, reduced=True)`` the ≤2-layer smoke variant."""
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ArchConfig
+
+ARCH_IDS = (
+    "qwen3-moe-30b-a3b",
+    "h2o-danube-3-4b",
+    "granite-moe-1b-a400m",
+    "llama3_2-3b",
+    "whisper-tiny",
+    "deepseek-7b",
+    "jamba-v0_1-52b",
+    "phi4-mini-3.8b",
+    "mamba2-130m",
+    "llava-next-34b",
+    # the paper's own larger model family (extra, beyond the assigned ten)
+    "qwen3-moe-80b-a3b",
+)
+
+_ALIASES = {
+    "llama3.2-3b": "llama3_2-3b",
+    "jamba-v0.1-52b": "jamba-v0_1-52b",
+    "phi4-mini-3_8b": "phi4-mini-3.8b",
+}
+
+
+def _module_name(arch_id: str) -> str:
+    return arch_id.replace("-", "_").replace(".", "_")
+
+
+def get_config(name: str, reduced: bool = False) -> ArchConfig:
+    name = _ALIASES.get(name, name)
+    if name not in ARCH_IDS:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{_module_name(name)}")
+    cfg = mod.CONFIG
+    return cfg.reduced() if reduced else cfg
+
+
+def all_configs(reduced: bool = False):
+    return {a: get_config(a, reduced) for a in ARCH_IDS}

@@ -1,0 +1,17 @@
+"""DeepSeek-LLM-7B — llama-architecture dense model, MHA (kv=32).
+[arXiv:2401.02954]"""
+from repro.models.config import ArchConfig, AttnConfig
+
+CONFIG = ArchConfig(
+    name="deepseek-7b",
+    family="dense",
+    n_layers=30,
+    d_model=4096,
+    vocab_size=102400,
+    d_ff=11008,
+    attn=AttnConfig(n_heads=32, n_kv_heads=32, head_dim=128,
+                    rope_theta=10000.0),
+    norm_eps=1e-6,
+    max_seq_len=4096,
+    source="arXiv:2401.02954 (DeepSeek LLM)",
+)

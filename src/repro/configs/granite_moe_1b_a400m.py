@@ -1,0 +1,20 @@
+"""IBM Granite-3.0-1B-A400M — small MoE, 32 experts top-8.
+[hf:ibm-granite/granite-3.0-1b-a400m-base]"""
+from repro.models.config import ArchConfig, AttnConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="granite-moe-1b-a400m",
+    family="moe",
+    n_layers=24,
+    d_model=1024,
+    vocab_size=49155,
+    d_ff=0,
+    attn=AttnConfig(n_heads=16, n_kv_heads=8, head_dim=64,
+                    rope_theta=10000.0),
+    moe=MoEConfig(num_experts=32, top_k=8, d_ff_expert=512,
+                  norm_topk_prob=True),
+    norm_eps=1e-6,
+    tie_embeddings=True,
+    max_seq_len=4096,
+    source="hf:ibm-granite/granite-3.0-1b-a400m-base",
+)

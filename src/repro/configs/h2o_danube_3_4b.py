@@ -1,0 +1,17 @@
+"""H2O-Danube3-4B — dense llama+mistral mix with sliding-window attention.
+[arXiv:2401.16818]"""
+from repro.models.config import ArchConfig, AttnConfig
+
+CONFIG = ArchConfig(
+    name="h2o-danube-3-4b",
+    family="dense",
+    n_layers=24,
+    d_model=3840,
+    vocab_size=32000,
+    d_ff=10240,
+    attn=AttnConfig(n_heads=32, n_kv_heads=8, head_dim=120,
+                    rope_theta=10000.0, sliding_window=4096),
+    norm_eps=1e-5,
+    max_seq_len=524288,  # SWA ⇒ long-context decode is native
+    source="arXiv:2401.16818 (H2O-Danube); SWA per model card",
+)

@@ -1,0 +1,31 @@
+"""Jamba-v0.1-52B — hybrid Mamba/attention 7:1 interleave with MoE (16e top-2)
+on alternate layers. [arXiv:2403.19887]
+
+Super-block (8 layers): positions 0–6 Mamba, position 7 attention; MoE FFN on
+odd positions (1,3,5,7), dense FFN elsewhere — the paper's 1:7 attn ratio and
+every-other-layer MoE.
+"""
+from repro.models.config import ArchConfig, AttnConfig, MoEConfig, SSMConfig
+
+CONFIG = ArchConfig(
+    name="jamba-v0.1-52b",
+    family="hybrid",
+    n_layers=32,
+    d_model=4096,
+    vocab_size=65536,
+    d_ff=14336,
+    attn=AttnConfig(n_heads=32, n_kv_heads=8, head_dim=128,
+                    rope_theta=10000.0, sliding_window=8192, use_rope=False),
+    moe=MoEConfig(num_experts=16, top_k=2, d_ff_expert=14336,
+                  norm_topk_prob=False),
+    ssm=SSMConfig(d_state=16, d_conv=4, expand=2, head_dim=64, n_groups=1,
+                  chunk=64),
+    superblock=("mamba", "mamba", "mamba", "mamba",
+                "mamba", "mamba", "mamba", "attn"),
+    moe_positions=(1, 3, 5, 7),
+    norm_eps=1e-6,
+    max_seq_len=524288,  # SSM+SWA ⇒ long-context decode is native
+    source="arXiv:2403.19887 (Jamba). Note: Jamba uses no positional "
+           "encoding on its attention layers (use_rope=False); we add an "
+           "8192 sliding window for the long_500k shape.",
+)

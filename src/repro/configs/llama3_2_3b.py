@@ -1,0 +1,16 @@
+"""Llama-3.2-3B — small llama3 dense decoder. [hf:meta-llama/Llama-3.2-1B]"""
+from repro.models.config import ArchConfig, AttnConfig
+
+CONFIG = ArchConfig(
+    name="llama3.2-3b",
+    family="dense",
+    n_layers=28,
+    d_model=3072,
+    vocab_size=128256,
+    d_ff=8192,
+    attn=AttnConfig(n_heads=24, n_kv_heads=8, head_dim=128,
+                    rope_theta=500000.0),
+    norm_eps=1e-5,
+    max_seq_len=131072,
+    source="hf:meta-llama/Llama-3.2-1B family",
+)

@@ -1,0 +1,18 @@
+"""LLaVA-NeXT-34B — VLM language backbone; anyres-tiling ViT frontend is a
+STUB (input_specs supplies patch embeddings). [hf:llava-hf/llava-v1.6]"""
+from repro.models.config import ArchConfig, AttnConfig
+
+CONFIG = ArchConfig(
+    name="llava-next-34b",
+    family="vlm",
+    n_layers=60,
+    d_model=7168,
+    vocab_size=64000,
+    d_ff=20480,
+    attn=AttnConfig(n_heads=56, n_kv_heads=8, head_dim=128,
+                    rope_theta=5000000.0),
+    num_image_tokens=576,   # one anyres base tile (24×24 patches)
+    norm_eps=1e-5,
+    max_seq_len=131072,
+    source="hf:llava-hf/llava-v1.6-mistral-7b-hf (scaled to the 34B backbone)",
+)

@@ -1,0 +1,19 @@
+"""Mamba2-130m — attention-free SSM with SSD (state-space duality).
+[arXiv:2405.21060]"""
+from repro.models.config import ArchConfig, SSMConfig
+
+CONFIG = ArchConfig(
+    name="mamba2-130m",
+    family="ssm",
+    n_layers=24,
+    d_model=768,
+    vocab_size=50280,
+    d_ff=0,                 # mamba blocks only, no FFN
+    attn=None,
+    ssm=SSMConfig(d_state=128, d_conv=4, expand=2, head_dim=64, n_groups=1,
+                  chunk=64),
+    tie_embeddings=True,
+    norm_eps=1e-5,
+    max_seq_len=1048576,    # O(1) decode state ⇒ unbounded context
+    source="arXiv:2405.21060 (Mamba-2 / SSD)",
+)

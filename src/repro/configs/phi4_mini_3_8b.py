@@ -1,0 +1,16 @@
+"""Phi-4-mini-3.8B — dense decoder, RoPE + SwiGLU + GQA. [arXiv:2412.08905]"""
+from repro.models.config import ArchConfig, AttnConfig
+
+CONFIG = ArchConfig(
+    name="phi4-mini-3.8b",
+    family="dense",
+    n_layers=32,
+    d_model=3072,
+    vocab_size=200064,
+    d_ff=8192,
+    attn=AttnConfig(n_heads=24, n_kv_heads=8, head_dim=128,
+                    rope_theta=10000.0),
+    norm_eps=1e-5,
+    max_seq_len=131072,
+    source="arXiv:2412.08905 (Phi-4)",
+)

@@ -1,0 +1,19 @@
+"""Qwen3-30B-A3B — fine-grained MoE, 128 experts top-8, GQA kv=4.
+[hf:Qwen/Qwen3-30B-A3B] — the paper's primary evaluation model (Table 3)."""
+from repro.models.config import ArchConfig, AttnConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="qwen3-moe-30b-a3b",
+    family="moe",
+    n_layers=48,
+    d_model=2048,
+    vocab_size=151936,
+    d_ff=0,  # every layer is MoE; no dense FFN
+    attn=AttnConfig(n_heads=32, n_kv_heads=4, head_dim=128,
+                    rope_theta=1_000_000.0, qk_norm=True),
+    moe=MoEConfig(num_experts=128, top_k=8, d_ff_expert=768,
+                  norm_topk_prob=True),
+    norm_eps=1e-6,
+    max_seq_len=131072,
+    source="hf:Qwen/Qwen3-30B-A3B; paper Table 3",
+)

@@ -1,0 +1,24 @@
+"""Qwen3-Next-80B-A3B (paper Table 3) — 512 experts top-10 + 1 shared expert.
+
+EXTRA config beyond the assigned ten: this is the paper's flagship evaluation
+model (Int4-hi / Int2-lo tiers). We model its MoE/attention stack; the
+gated-deltanet hybrid layers of the real Qwen3-Next are approximated with
+standard attention (noted deviation).
+"""
+from repro.models.config import ArchConfig, AttnConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="qwen3-moe-80b-a3b",
+    family="moe",
+    n_layers=48,
+    d_model=2048,
+    vocab_size=151936,
+    d_ff=0,
+    attn=AttnConfig(n_heads=16, n_kv_heads=2, head_dim=256,
+                    rope_theta=10_000_000.0, qk_norm=True),
+    moe=MoEConfig(num_experts=512, top_k=10, d_ff_expert=512,
+                  n_shared_experts=1, d_ff_shared=512, norm_topk_prob=True),
+    norm_eps=1e-6,
+    max_seq_len=262144,
+    source="paper Table 3; hf:Qwen/Qwen3-Next-80B-A3B",
+)

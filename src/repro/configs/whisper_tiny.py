@@ -1,0 +1,24 @@
+"""Whisper-tiny — encoder-decoder ASR backbone; conv/mel frontend is a STUB
+(input_specs supplies precomputed frame embeddings). [arXiv:2212.04356]
+
+Deviation noted in DESIGN.md: positions use RoPE instead of Whisper's learned
+embeddings to stay shape-generic across the assigned input shapes.
+"""
+from repro.models.config import ArchConfig, AttnConfig
+
+CONFIG = ArchConfig(
+    name="whisper-tiny",
+    family="audio",
+    n_layers=4,               # decoder layers
+    d_model=384,
+    vocab_size=51865,
+    d_ff=1536,
+    attn=AttnConfig(n_heads=6, n_kv_heads=6, head_dim=64,
+                    rope_theta=10000.0),
+    is_encoder_decoder=True,
+    n_encoder_layers=4,
+    encoder_seq=1500,         # 30 s of audio at 50 Hz after the conv stub
+    norm_eps=1e-5,
+    max_seq_len=448,
+    source="arXiv:2212.04356 (Whisper)",
+)

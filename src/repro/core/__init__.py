@@ -1,0 +1,21 @@
+"""DynaExq core — the paper's contribution: online, budget-constrained
+precision allocation for MoE serving (hotness → top-n policy → VER +
+non-blocking transitions under a hard HBM budget)."""
+from repro.core.budget import BudgetTracker, BudgetPlan, plan_budget, BudgetExceeded
+from repro.core.controller import ControllerConfig, DynaExqController
+from repro.core.hotness import HotnessEstimator
+from repro.core.policy import PolicyConfig, select_hi_set
+from repro.core.pools import SlotPool
+from repro.core.transitions import TransitionManager
+from repro.core.ver import (
+    ExpertBankQ, Residency, build_bank, expert_hi_nbytes, expert_lo_nbytes,
+    publish, unpublish, write_hi_slot,
+)
+
+__all__ = [
+    "BudgetTracker", "BudgetPlan", "plan_budget", "BudgetExceeded",
+    "ControllerConfig", "DynaExqController", "HotnessEstimator",
+    "PolicyConfig", "select_hi_set", "SlotPool", "TransitionManager",
+    "ExpertBankQ", "Residency", "build_bank", "expert_hi_nbytes",
+    "expert_lo_nbytes", "publish", "unpublish", "write_hi_slot",
+]

@@ -1,0 +1,90 @@
+"""HBM budget model + admission control (paper §3.3).
+
+``BudgetModel`` performs the one-shot budget initialization: given the device
+envelope and the fixed allocations (non-expert params, KV cache, activation
+headroom), it derives the per-layer hi-precision capacity ``n_hi,l``.
+``BudgetTracker`` is the runtime admission gate: every promotion must
+``try_reserve`` its bytes before it may enter the transition pipeline, so the
+hi pool can never overflow — budget feasibility by construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+
+
+class BudgetExceeded(Exception):
+    pass
+
+
+class BudgetTracker:
+    """Thread-safe byte reservation ledger for the hi pool."""
+
+    def __init__(self, cap_bytes: int):
+        if cap_bytes < 0:
+            raise ValueError("cap must be >= 0")
+        self.cap = int(cap_bytes)
+        self._used = 0
+        self._lock = threading.Lock()
+
+    @property
+    def used(self) -> int:
+        return self._used
+
+    @property
+    def free(self) -> int:
+        return self.cap - self._used
+
+    def try_reserve(self, nbytes: int) -> bool:
+        with self._lock:
+            if self._used + nbytes > self.cap:
+                return False
+            self._used += nbytes
+            return True
+
+    def release(self, nbytes: int) -> None:
+        with self._lock:
+            self._used -= nbytes
+            if self._used < 0:
+                raise BudgetExceeded("released more than reserved")
+
+
+@dataclasses.dataclass(frozen=True)
+class BudgetPlan:
+    m_total: int          # usable device bytes
+    m_fixed: int          # non-expert params + KV cache + activations
+    m_lo: int             # always-resident lo-pool bytes
+    m_hi_cap: int         # hi-pool envelope
+    n_hi_per_layer: int   # derived per-layer hi capacity (experts)
+
+    def check(self):
+        if self.m_fixed + self.m_lo + self.m_hi_cap > self.m_total:
+            raise BudgetExceeded(
+                f"infeasible: fixed {self.m_fixed} + lo {self.m_lo} + hi "
+                f"{self.m_hi_cap} > total {self.m_total}")
+
+
+def plan_budget(m_total: int, m_fixed: int, lo_bytes_total: int,
+                hi_bytes_per_expert_layer: int, n_layers: int,
+                num_experts: int, align: int = 1) -> BudgetPlan:
+    """Budget initialization: everything left after fixed + lo goes to the hi
+    pool, expressed as a per-layer expert count (the paper's n_hi,l).
+
+    ``align``: round n_hi down to a multiple (e.g. the model-parallel degree,
+    so each shard owns an integer number of hi slots).
+    """
+    if m_fixed + lo_bytes_total > m_total:
+        raise BudgetExceeded(
+            f"lo tier alone does not fit: fixed {m_fixed} + lo "
+            f"{lo_bytes_total} > total {m_total}")
+    remaining = m_total - m_fixed - lo_bytes_total
+    n_hi = remaining // (hi_bytes_per_expert_layer * n_layers)
+    n_hi = min(int(n_hi), num_experts)
+    if align > 1:
+        n_hi = n_hi // align * align
+    plan = BudgetPlan(
+        m_total=m_total, m_fixed=m_fixed, m_lo=lo_bytes_total,
+        m_hi_cap=n_hi * hi_bytes_per_expert_layer * n_layers,
+        n_hi_per_layer=int(n_hi))
+    plan.check()
+    return plan

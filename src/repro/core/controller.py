@@ -1,0 +1,88 @@
+"""DynaExq control loop (paper Fig. 4): glue between the hotness estimator,
+the budget-feasible policy, and the transition pipeline.
+
+The worker (serving engine) calls ``observe(counts)`` after every step with
+the router-trace counts the MoE layers emit; ``maybe_update(now)`` runs the
+policy at the ``T_u`` cadence. All of this is host-side and O(L·E) — far off
+the token critical path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core.budget import BudgetTracker, plan_budget
+from repro.core.hotness import HotnessEstimator
+from repro.core.policy import PolicyConfig, select_hi_set
+from repro.core.transitions import TransitionManager
+from repro.core.ver import ExpertBankQ, build_bank, expert_hi_nbytes
+
+
+@dataclasses.dataclass
+class ControllerConfig:
+    update_interval_s: float = 1.0      # T_u
+    alpha: float = 0.8                  # EMA
+    margin: float = 0.0                 # hysteresis
+    migration_bytes_per_window: int = 0
+    max_transitions_per_layer: int = 0
+
+
+class DynaExqController:
+    def __init__(self, bank: ExpertBankQ, host_hi: Dict[str, np.ndarray],
+                 n_hi_per_layer: int, hi_bytes_per_expert: int,
+                 cfg: ControllerConfig = ControllerConfig()):
+        L, E = bank.slot_map.shape
+        self.cfg = cfg
+        self.hotness = HotnessEstimator(L, E, alpha=cfg.alpha)
+        self.policy = PolicyConfig(
+            n_hi=n_hi_per_layer, margin=cfg.margin,
+            max_transitions_per_layer=cfg.max_transitions_per_layer)
+        self.tracker = BudgetTracker(n_hi_per_layer * L * hi_bytes_per_expert)
+        self.tm = TransitionManager(
+            bank, host_hi, self.tracker, hi_bytes_per_expert,
+            migration_bytes_per_window=cfg.migration_bytes_per_window)
+        self._last_update = time.monotonic()
+
+    @property
+    def bank(self) -> ExpertBankQ:
+        return self.tm.bank
+
+    def observe(self, counts) -> None:
+        self.hotness.observe(counts)
+
+    def maybe_update(self, now: Optional[float] = None, force: bool = False) -> bool:
+        now = now if now is not None else time.monotonic()
+        if not force and now - self._last_update < self.cfg.update_interval_s:
+            # Still publish any copies that completed since last step.
+            self.tm.publish_ready()
+            return False
+        self._last_update = now
+        self.update()
+        return True
+
+    def update(self) -> None:
+        """One policy window: fold EMA → per-layer top-n w/ hysteresis →
+        enqueue transitions → drain → publish completed."""
+        scores = self.hotness.fold()
+        L = scores.shape[0]
+        for l in range(L):
+            current = self.tm.hi_set(l) | {
+                int(p.expert) for p in self.tm._pending if p.layer == l}
+            _, promos, demos = select_hi_set(scores[l], current, self.policy)
+            for e in demos:
+                self.tm.request_demotion(l, int(e))
+            for e in promos:
+                self.tm.request_promotion(l, int(e))
+        self.tm.drain()
+        self.tm.publish_ready()
+
+    def flush(self) -> None:
+        """Block on all in-flight transitions and publish (tests/shutdown)."""
+        self.tm.drain()
+        self.tm.publish_ready(wait=True)
+        # Anything still deferred (budget) is retried once after publish.
+        self.tm.drain()
+        self.tm.publish_ready(wait=True)

@@ -1,0 +1,42 @@
+"""Fixed-granularity slot pools (paper §3.3, TPU adaptation).
+
+On CUDA the paper fights allocator fragmentation with fixed-size block pools
+and constant-time free lists. In JAX the device arrays are preallocated once,
+so fragmentation cannot occur; what remains is the *slot accounting*: which
+hi-pool slot is free, which expert owns which slot. ``SlotPool`` is that
+constant-time free list, host-side, one per layer.
+"""
+from __future__ import annotations
+
+
+class SlotPool:
+    """Constant-time free list over ``n_slots`` fixed-granularity slots."""
+
+    def __init__(self, n_slots: int):
+        self._free = list(range(n_slots - 1, -1, -1))
+        self._owner: dict[int, int] = {}      # slot → expert
+        self.n_slots = n_slots
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self, expert: int) -> int:
+        """Pop a free slot for ``expert``; raises if full (the admission
+        check must prevent that)."""
+        if not self._free:
+            raise RuntimeError("pool exhausted — admission control bug")
+        slot = self._free.pop()
+        self._owner[slot] = expert
+        return slot
+
+    def free(self, slot: int) -> None:
+        if slot in self._owner:
+            del self._owner[slot]
+            self._free.append(slot)
+
+    def owner(self, slot: int) -> int | None:
+        return self._owner.get(slot)
+
+    def slots_of(self) -> dict[int, int]:
+        return dict(self._owner)

@@ -1,0 +1,194 @@
+"""Non-blocking transition pipeline (paper §3.4), JAX realization.
+
+Queues + admission control + publish-then-switch:
+
+* ``request_promotion/request_demotion`` enqueue candidates (from the policy).
+* ``drain()`` processes demotions first (reclaiming capacity enlarges the
+  feasible set — the paper's eviction priority), then admits promotions that
+  pass BOTH gates: the byte budget (``BudgetTracker.try_reserve``) and the
+  per-window migration-rate limit (bounded interference).
+* An admitted promotion allocates a slot from the layer's ``SlotPool`` and
+  issues the hi-weight copy (``write_hi_slot``). JAX dispatch is async — this
+  is the migration-stream analogue: the copy is independent of the in-flight
+  serve step because the slot is unpublished.
+* ``publish_ready()`` — called at a window boundary — publishes completed
+  copies by writing ``slot_map``/``slot_owner``. A copy is "complete" when
+  its result array is ready (the CUDA-event analogue).
+
+The forward pass never observes a partially-materialized version: ``slot_map``
+only ever points at slots whose copies completed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.budget import BudgetTracker
+from repro.core.pools import SlotPool
+from repro.core.ver import ExpertBankQ, Residency, write_hi_slot
+
+
+@dataclasses.dataclass
+class PendingPromotion:
+    layer: int
+    expert: int
+    slot: int
+    nbytes: int
+
+
+class TransitionManager:
+    def __init__(self, bank: ExpertBankQ,
+                 host_hi: Dict[str, np.ndarray],
+                 tracker: BudgetTracker,
+                 hi_bytes_per_expert: int,
+                 migration_bytes_per_window: int = 0):
+        """``host_hi``: name → (L, E, K, N) host copies of the hi tier (the
+        paper's pre-packed pinned-host source). ``migration_bytes_per_window``
+        0 = unlimited."""
+        self.bank = bank
+        self.host_hi = host_hi
+        self.tracker = tracker
+        self.hi_bytes = hi_bytes_per_expert
+        self.rate_limit = migration_bytes_per_window
+        L, n_hi = bank.slot_owner.shape
+        self.pools = [SlotPool(n_hi) for _ in range(L)]
+        self.state = np.full((L, bank.num_experts), Residency.RESIDENT_LO.value,
+                             np.int8)
+        self.update_q: deque[tuple[int, int]] = deque()
+        self.evict_q: deque[tuple[int, int]] = deque()
+        self._pending: List[PendingPromotion] = []
+        # Host mirrors of the published device maps (authoritative copies —
+        # reading device arrays back every window would sync the stream).
+        self.slot_map_h = np.asarray(bank.slot_map).copy()
+        self.slot_owner_h = np.asarray(bank.slot_owner).copy()
+        self.stats = {"promoted": 0, "demoted": 0, "deferred": 0,
+                      "bytes_moved": 0}
+
+    # -- queue side ------------------------------------------------------
+    def request_promotion(self, layer: int, expert: int) -> None:
+        if self.state[layer, expert] == Residency.RESIDENT_LO.value:
+            self.state[layer, expert] = Residency.PROMOTING.value
+            self.update_q.append((layer, expert))
+
+    def request_demotion(self, layer: int, expert: int) -> None:
+        if self.state[layer, expert] == Residency.RESIDENT_HI.value:
+            self.state[layer, expert] = Residency.DEMOTING.value
+            self.evict_q.append((layer, expert))
+
+    # -- worker side -----------------------------------------------------
+    def drain(self) -> None:
+        """Process evictions, then admit promotions under both gates."""
+        while self.evict_q:
+            l, e = self.evict_q.popleft()
+            if self.state[l, e] != Residency.DEMOTING.value:
+                continue
+            self._demote(l, e)
+        window_bytes = 0
+        deferred = deque()
+        while self.update_q:
+            l, e = self.update_q.popleft()
+            if self.state[l, e] != Residency.PROMOTING.value:
+                continue
+            if self.rate_limit and window_bytes + self.hi_bytes > self.rate_limit:
+                deferred.append((l, e))
+                continue
+            if self.pools[l].n_free == 0 or not self.tracker.try_reserve(self.hi_bytes):
+                deferred.append((l, e))   # backpressure: stay queued
+                self.stats["deferred"] += 1
+                continue
+            slot = self.pools[l].alloc(e)
+            self._issue_copy(l, e, slot)
+            window_bytes += self.hi_bytes
+        self.update_q = deferred
+
+    def _issue_copy(self, layer: int, expert: int, slot: int) -> None:
+        """Async hi-weight copy into the (unpublished) pool slot."""
+        new_hi = {}
+        for name, leaf in self.bank.hi.items():
+            w = jnp.asarray(self.host_hi[name][layer, expert])
+            new_hi[name] = write_hi_slot(leaf, jnp.int32(layer),
+                                         jnp.int32(slot), w)
+        self.bank.hi = new_hi  # dispatched, not yet waited on
+        self._pending.append(PendingPromotion(layer, expert, slot, self.hi_bytes))
+        self.stats["bytes_moved"] += self.hi_bytes
+
+    def _demote(self, layer: int, expert: int) -> None:
+        """Publish-then-reclaim: redirect the handle to lo, then free."""
+        slot = int(self.slot_map_h[layer, expert])
+        self.slot_map_h[layer, expert] = -1
+        if slot >= 0:
+            self.slot_owner_h[layer, slot] = -1
+            self.pools[layer].free(slot)
+            self.tracker.release(self.hi_bytes)
+        self.state[layer, expert] = Residency.RESIDENT_LO.value
+        self.stats["demoted"] += 1
+
+    def publish_ready(self, wait: bool = False) -> int:
+        """Publish completed copies (window boundary). ``wait=True`` blocks on
+        all in-flight copies (used at shutdown / in tests)."""
+        if not self._pending:
+            self._flush_maps()
+            return 0
+        still = []
+        published = 0
+        for p in self._pending:
+            leaf = self.bank.hi[next(iter(self.bank.hi))]
+            ready = wait or _is_ready(leaf)
+            if ready and wait:
+                jax.block_until_ready(leaf)
+            if not ready:
+                still.append(p)
+                continue
+            if self.state[p.layer, p.expert] == Residency.PROMOTING.value:
+                self.slot_map_h[p.layer, p.expert] = p.slot
+                self.slot_owner_h[p.layer, p.slot] = p.expert
+                self.state[p.layer, p.expert] = Residency.RESIDENT_HI.value
+                published += 1
+                self.stats["promoted"] += 1
+            else:
+                # Demoted while promoting — reclaim without publishing.
+                self.pools[p.layer].free(p.slot)
+                self.tracker.release(p.nbytes)
+                self.state[p.layer, p.expert] = Residency.RESIDENT_LO.value
+        self._pending = still
+        self._flush_maps()
+        return published
+
+    def _flush_maps(self) -> None:
+        """Push the host-side handle table to the device arrays (tiny)."""
+        self.bank.slot_map = jnp.asarray(self.slot_map_h)
+        self.bank.slot_owner = jnp.asarray(self.slot_owner_h)
+
+    # -- introspection ----------------------------------------------------
+    def hi_set(self, layer: int) -> set[int]:
+        return {int(e) for e in np.nonzero(self.slot_map_h[layer] >= 0)[0]}
+
+    def check_invariants(self) -> None:
+        """VER invariants (tested property-based): every published handle
+        resolves to a slot owned by that expert; budget counts match."""
+        L, E = self.slot_map_h.shape
+        n_used = 0
+        for l in range(L):
+            for e in range(E):
+                s = self.slot_map_h[l, e]
+                if s >= 0:
+                    assert self.slot_owner_h[l, s] == e, (l, e, s)
+                    n_used += 1
+        owners = (self.slot_owner_h >= 0).sum()
+        assert owners == n_used, (owners, n_used)
+        in_flight = len(self._pending)
+        assert self.tracker.used == (n_used + in_flight) * self.hi_bytes, \
+            (self.tracker.used, n_used, in_flight)
+
+
+def _is_ready(arr) -> bool:
+    try:
+        return arr.is_ready()
+    except AttributeError:
+        jax.block_until_ready(arr)
+        return True

@@ -1,0 +1,82 @@
+"""Pallas TPU kernel: single-token flash attention over a long KV cache.
+
+The decode_32k / long_500k hot spot: one query row per (batch, head) against
+S cached keys. Online-softmax accumulation over KV tiles keeps the working
+set at O(bs·hd) VMEM regardless of S; GQA is handled in the BlockSpec index
+map (q head → kv head), so kv tiles are fetched once per kv head group.
+
+Grid: (B, H, S/bs), S innermost/sequential with running (m, l, acc) scratch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, dtype)
+
+
+def _fd_kernel(q_ref, k_ref, v_ref, valid_ref, o_ref,
+               m_ref, l_ref, acc_ref, *, ns, scale):
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                 # (1, hd) via block
+    k = k_ref[0, :, 0].astype(jnp.float32)              # (bs, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32)              # (bs, hd)
+    logits = (q @ k.T) * scale                          # (1, bs)
+    logits = jnp.where(valid_ref[0][None, :], logits, -jnp.inf)
+
+    m_prev = m_ref[...]                                 # (1, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1, keepdims=True))
+    # All-masked tiles keep m at -inf; exp(-inf - -inf) is nan — guard.
+    alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_new), 0.0)
+    p = jnp.exp(logits - m_new)                         # (1, bs), 0 where -inf
+    p = jnp.where(jnp.isfinite(logits), p, 0.0)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + p @ v         # (1, hd)
+    m_ref[...] = m_new
+
+    @pl.when(s == ns - 1)
+    def _done():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom)[0].astype(o_ref.dtype)
+
+
+def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, valid: jax.Array,
+                 *, bs: int = 512, interpret: bool = False) -> jax.Array:
+    """q: (B, H, hd); k/v: (B, S, Hkv, hd); valid: (B, S) bool → (B, H, hd)."""
+    B, H, hd = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    rep = H // Hkv
+    bs = min(bs, S)
+    if S % bs:
+        raise ValueError(f"S={S} not tileable by bs={bs}")
+    ns = S // bs
+    grid = (B, H, ns)
+    return pl.pallas_call(
+        functools.partial(_fd_kernel, ns=ns, scale=hd ** -0.5),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, hd), lambda b, h, s: (b, h, 0)),
+            pl.BlockSpec((1, bs, 1, hd), lambda b, h, s: (b, s, h // rep, 0)),
+            pl.BlockSpec((1, bs, 1, hd), lambda b, h, s: (b, s, h // rep, 0)),
+            pl.BlockSpec((1, bs), lambda b, h, s: (b, s)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, hd), lambda b, h, s: (b, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
+        scratch_shapes=[_vmem((1, 1), jnp.float32),
+                        _vmem((1, 1), jnp.float32),
+                        _vmem((1, hd), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, valid)

@@ -1,0 +1,48 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+On TPU the kernels compile natively; everywhere else (this CPU container)
+they execute in ``interpret=True`` mode, which runs the kernel body in
+Python for correctness validation against ``ref.py``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quant_matmul import quant_matmul, grouped_quant_matmul
+from repro.kernels.flash_decode import flash_decode
+from repro.quant.qtensor import QuantizedTensor
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def quant_matmul_op(x: jax.Array, qt: QuantizedTensor, bm: int = 128,
+                    bn: int = 128, bk: int = 256,
+                    interpret: bool | None = None) -> jax.Array:
+    interpret = _interpret_default() if interpret is None else interpret
+    return quant_matmul(x, qt.packed, qt.scales, bits=qt.bits,
+                        group=qt.group_size, bm=bm, bn=bn, bk=bk,
+                        interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def grouped_quant_matmul_op(xg: jax.Array, qt: QuantizedTensor, bm: int = 128,
+                            bn: int = 128, bk: int = 256,
+                            interpret: bool | None = None) -> jax.Array:
+    interpret = _interpret_default() if interpret is None else interpret
+    return grouped_quant_matmul(xg, qt.packed, qt.scales, bits=qt.bits,
+                                group=qt.group_size, bm=bm, bn=bn, bk=bk,
+                                interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("bs", "interpret"))
+def flash_decode_op(q: jax.Array, k: jax.Array, v: jax.Array,
+                    valid: jax.Array, bs: int = 512,
+                    interpret: bool | None = None) -> jax.Array:
+    interpret = _interpret_default() if interpret is None else interpret
+    return flash_decode(q, k, v, valid, bs=bs, interpret=interpret)

@@ -1,0 +1,137 @@
+"""Pallas TPU kernel: fused dequant + matmul for int4/int2/int8 weights.
+
+The DynaExq lo-tier GEMM. The packed codes stream HBM→VMEM at ``bits``/8
+bytes per element — the entire memory-footprint benefit of the lo tier —
+and are expanded to f32 *in VMEM* right before feeding the MXU, so no
+dequantized copy ever exists in HBM.
+
+Tiling: grid (M/bm, N/bn, K/bk); K is the innermost (sequential) axis with an
+f32 VMEM accumulator. bm/bn default to 128 (MXU-aligned); bk is a multiple of
+the quantization group so each K-tile sees whole scale groups.
+
+``grouped_quant_matmul`` is the batched-over-experts variant used by the MoE
+serving path: grid (E, C/bm, N/bn, K/bk) over the dispatched activations
+(E, C, K) — the expert dim maps to the outermost grid axis, so on a
+model-sharded mesh each core sweeps only its local experts.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dequant_tile(wp: jax.Array, s: jax.Array, bits: int, group: int) -> jax.Array:
+    """wp: (bk//epb, bn) uint8; s: (bk//g, bn) → (bk, bn) f32 (in VMEM)."""
+    if bits == 8:
+        q = wp.astype(jnp.int32) - 128
+        bk = wp.shape[0]
+    else:
+        epb = 8 // bits
+        bkp, bn = wp.shape
+        bk = bkp * epb
+        shifts = (jnp.arange(epb, dtype=jnp.uint32) * bits)[None, :, None]
+        u = (wp.astype(jnp.uint32)[:, None, :] >> shifts) & ((1 << bits) - 1)
+        q = u.reshape(bk, bn).astype(jnp.int32) - (1 << (bits - 1))
+    scale = jnp.repeat(s.astype(jnp.float32), group, axis=0)  # (bk, bn)
+    return q.astype(jnp.float32) * scale
+
+
+def _qmm_kernel(x_ref, wp_ref, s_ref, o_ref, acc_ref, *, bits, group, nk):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = _dequant_tile(wp_ref[...], s_ref[...], bits, group)
+    acc_ref[...] += jnp.dot(x_ref[...].astype(jnp.float32), w,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def quant_matmul(x: jax.Array, packed: jax.Array, scales: jax.Array, *,
+                 bits: int, group: int, bm: int = 128, bn: int = 128,
+                 bk: int = 256, interpret: bool = False) -> jax.Array:
+    """x: (M, K) bf16 × packed (K//epb, N) uint8 / scales (K//g, N) → (M, N)."""
+    M, K = x.shape
+    epb = 8 // bits
+    N = packed.shape[1]
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    bk = max(group, bk // group * group)
+    if M % bm or N % bn or K % bk:
+        raise ValueError(f"shape ({M},{K})x({K},{N}) not tileable by "
+                         f"({bm},{bn},{bk})")
+    nk = K // bk
+    grid = (M // bm, N // bn, nk)
+    return pl.pallas_call(
+        functools.partial(_qmm_kernel, bits=bits, group=group, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk // epb, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bk // group, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[pl.ArrayRef((bm, bn), jnp.float32)]
+        if hasattr(pl, "ArrayRef") else
+        [_vmem_scratch((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, packed, scales)
+
+
+def _vmem_scratch(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, dtype)
+
+
+def _gqmm_kernel(x_ref, wp_ref, s_ref, o_ref, acc_ref, *, bits, group, nk):
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = _dequant_tile(wp_ref[0], s_ref[0], bits, group)
+    acc_ref[...] += jnp.dot(x_ref[0].astype(jnp.float32), w,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _done():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def grouped_quant_matmul(xg: jax.Array, packed: jax.Array, scales: jax.Array,
+                         *, bits: int, group: int, bm: int = 128,
+                         bn: int = 128, bk: int = 256,
+                         interpret: bool = False) -> jax.Array:
+    """xg: (E, C, K) × packed (E, K//epb, N) → (E, C, N)."""
+    E, C, K = xg.shape
+    epb = 8 // bits
+    N = packed.shape[2]
+    bm, bn, bk = min(bm, C), min(bn, N), min(bk, K)
+    bk = max(group, bk // group * group)
+    if C % bm or N % bn or K % bk:
+        raise ValueError(f"({E},{C},{K})x({K},{N}) not tileable by "
+                         f"({bm},{bn},{bk})")
+    nk = K // bk
+    grid = (E, C // bm, N // bn, nk)
+    return pl.pallas_call(
+        functools.partial(_gqmm_kernel, bits=bits, group=group, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda e, i, j, k: (e, i, k)),
+            pl.BlockSpec((1, bk // epb, bn), lambda e, i, j, k: (e, k, j)),
+            pl.BlockSpec((1, bk // group, bn), lambda e, i, j, k: (e, k, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda e, i, j, k: (e, i, j)),
+        out_shape=jax.ShapeDtypeStruct((E, C, N), xg.dtype),
+        scratch_shapes=[_vmem_scratch((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(xg, packed, scales)

@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.qtensor import unpack_bits
+
+
+def dequant_ref(packed: jax.Array, scales: jax.Array, bits: int,
+                group: int) -> jax.Array:
+    """packed: (..., K//epb, N) uint8; scales: (..., K//g, N) → (..., K, N) f32."""
+    epb = 8 // bits
+    *lead, kp, n = packed.shape
+    k = kp * epb
+    u = unpack_bits(packed, bits, k)
+    q = u - (1 << (bits - 1))
+    qf = q.reshape(*lead, k // group, group, n).astype(jnp.float32)
+    return (qf * scales[..., :, None, :].astype(jnp.float32)).reshape(*lead, k, n)
+
+
+def quant_matmul_ref(x: jax.Array, packed: jax.Array, scales: jax.Array,
+                     bits: int, group: int) -> jax.Array:
+    """x: (M, K) × quantized (K, N) → (M, N) f32-accumulated, x.dtype out."""
+    w = dequant_ref(packed, scales, bits, group)
+    return jnp.dot(x.astype(jnp.float32), w).astype(x.dtype)
+
+
+def grouped_quant_matmul_ref(xg: jax.Array, packed: jax.Array,
+                             scales: jax.Array, bits: int,
+                             group: int) -> jax.Array:
+    """xg: (E, C, K) × quantized (E, K, N) → (E, C, N)."""
+    w = dequant_ref(packed, scales, bits, group)
+    return jnp.einsum("eck,ekn->ecn", xg.astype(jnp.float32), w).astype(xg.dtype)
+
+
+def flash_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                     valid: jax.Array) -> jax.Array:
+    """q: (B, H, hd); k/v: (B, S, Hkv, hd); valid: (B, S) bool → (B, H, hd)."""
+    B, H, hd = q.shape
+    Hkv = k.shape[2]
+    rep = H // Hkv
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    logits = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * hd ** -0.5
+    logits = jnp.where(valid[:, None, :], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhs,bshd->bhd", p, v.astype(jnp.float32)).astype(q.dtype)

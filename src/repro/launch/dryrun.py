@@ -1,0 +1,204 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_DRYRUN_EXTRA_XLA", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch × input-shape) on the
+production mesh, print memory/cost analysis, and emit roofline terms.
+
+MUST be run as a module entry point (``python -m repro.launch.dryrun``) —
+the XLA_FLAGS line above executes before any jax import, giving this process
+512 placeholder CPU devices for the 16×16 (and 2×16×16) meshes.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen3-moe-30b-a3b --shape decode_32k
+    python -m repro.launch.dryrun --all --mesh single --out experiments/dryrun
+    python -m repro.launch.dryrun --arch ... --shape ... --mesh multi
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import analyze
+from repro.launch.shapes import SHAPES, SKIPS, build_dryrun
+
+ASSIGNED = tuple(a for a in ARCH_IDS if a != "qwen3-moe-80b-a3b")
+
+
+def _compile(arch, shape, mesh, planner_kw, nsb=None, microbatches=1):
+    spec = build_dryrun(arch, shape, mesh, planner_kw=planner_kw,
+                        nsb_override=nsb, microbatches=microbatches)
+    jitted = jax.jit(spec.step_fn,
+                     in_shardings=spec.in_shardings,
+                     donate_argnums=spec.donate_argnums)
+    with mesh:
+        compiled = jitted.lower(*spec.args).compile()
+    return spec, compiled
+
+
+def _raw_costs(compiled):
+    from repro.launch.roofline import collective_bytes, convert_bytes
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    txt = compiled.as_text()
+    coll = collective_bytes(txt)
+    detail = {k: v for k, v in coll.items() if k != "_counts"}
+    raw = float(ca.get("bytes accessed", 0.0))
+    # NOTE: raw CPU-HLO bytes are an UPPER BOUND for the TPU memory term —
+    # XLA:CPU legalizes bf16 dots via f32 operand converts at fusion
+    # boundaries (TPU MXUs take bf16 natively). Documented in EXPERIMENTS.md.
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": raw, "bytes_raw": raw,
+            "coll": {k: float(v) for k, v in detail.items()}}
+
+
+def _extrapolate(c2, c4, n_full):
+    """XLA cost_analysis counts while-loop bodies once. Two compiles at
+    nsb=2 / nsb=4 recover body (= (c4−c2)/2) and outside (= c2 − 2·body);
+    total(n) = outside + n·body. Clamped at ≥0 per metric."""
+    def comb(a, b):
+        body = max(0.0, (b - a) / 2.0)
+        outside = max(0.0, a - 2.0 * body)
+        return outside + n_full * body
+    out = {"flops": comb(c2["flops"], c4["flops"]),
+           "bytes": comb(c2["bytes"], c4["bytes"]),
+           "bytes_raw": comb(c2["bytes_raw"], c4["bytes_raw"]),
+           "coll": {k: comb(c2["coll"][k], c4["coll"][k])
+                    for k in c2["coll"]}}
+    return out
+
+
+def run_one(arch: str, shape: str, multi_pod: bool, planner_kw=None,
+            verbose: bool = True, microbatches: int = 1) -> dict:
+    from repro.launch.roofline import Roofline, model_flops
+    t0 = time.perf_counter()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+
+    # 1) FULL config: must lower+compile (deliverable e); memory from here.
+    spec, compiled = _compile(arch, shape, mesh, planner_kw,
+                              microbatches=microbatches)
+    t_full = time.perf_counter() - t0
+
+    # 2) nsb=2 / nsb=4 variants, scans UNROLLED, for the loop-cost
+    # extrapolation (cost_analysis counts rolled loop bodies once).
+    # The roofline table is single-pod only (EXPERIMENTS.md §Roofline); the
+    # multi-pod pass proves the 'pod' axis lowers and reports memory.
+    from repro.models.model import unrolled_scans
+    t1 = time.perf_counter()
+    if multi_pod:
+        costs = _raw_costs(compiled)
+    else:
+        with unrolled_scans():
+            _, c_2 = _compile(arch, shape, mesh, planner_kw, nsb=2,
+                              microbatches=microbatches)
+            _, c_4 = _compile(arch, shape, mesh, planner_kw, nsb=4,
+                              microbatches=microbatches)
+        costs = _extrapolate(_raw_costs(c_2), _raw_costs(c_4),
+                             spec.cfg.n_superblocks())
+    t_extra = time.perf_counter() - t1
+
+    rl = Roofline(
+        flops=costs["flops"], hbm_bytes=costs["bytes"],
+        coll_bytes=sum(costs["coll"].values()),
+        coll_detail={k: int(v) for k, v in costs["coll"].items()},
+        chips=chips,
+        model_flops=model_flops(spec.cfg, spec.kind, spec.tokens_per_step))
+
+    rec = {
+        "arch": arch, "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": spec.kind, "chips": chips,
+        "compile_s": round(t_full, 1), "extrapolate_s": round(t_extra, 1),
+        "roofline": rl.row(),
+        "hbm_gb_raw_cpu_hlo": round(costs["bytes_raw"] / 1e9, 3),
+        "collectives": rl.coll_detail,
+        "notes": spec.notes,
+    }
+    mem = compiled.memory_analysis()
+    if mem is not None:
+        for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                     "output_size_in_bytes"):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                rec[attr] = int(v)
+        args_b = rec.get("argument_size_in_bytes", 0)
+        temp_b = rec.get("temp_size_in_bytes", 0)
+        rec["per_device_hbm_gb"] = round((args_b + temp_b) / 1e9, 3)
+        rec["fits_16gb_hbm"] = (args_b + temp_b) <= 16 * (1 << 30)
+    if verbose:
+        print(json.dumps(rec, indent=2))
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true",
+                    help="all assigned (arch × shape) pairs")
+    ap.add_argument("--out", default=None, help="append JSONL records here")
+    ap.add_argument("--seq-shard-cache", type=int, default=1)
+    ap.add_argument("--pad-heads", type=int, default=0,
+                    help="§Perf variant: shard non-divisible head counts")
+    ap.add_argument("--microbatches", type=int, default=1)
+    args = ap.parse_args(argv)
+
+    planner_kw = dict(seq_shard_cache=bool(args.seq_shard_cache),
+                      pad_heads=bool(args.pad_heads))
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    pairs = []
+    if args.all:
+        for a in ASSIGNED:
+            for s in SHAPES:
+                pairs.append((a, s))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        pairs = [(args.arch, args.shape)]
+
+    ok = fail = skip = 0
+    for arch, shape in pairs:
+        for multi in meshes:
+            tag = f"{arch}×{shape}×{'2x16x16' if multi else '16x16'}"
+            if (arch, shape) in SKIPS:
+                print(f"SKIP {tag}: {SKIPS[(arch, shape)]}")
+                rec = {"arch": arch, "shape": shape,
+                       "mesh": "2x16x16" if multi else "16x16",
+                       "skipped": SKIPS[(arch, shape)]}
+                skip += 1
+            else:
+                try:
+                    rec = run_one(arch, shape, multi, planner_kw,
+                                  verbose=not args.all,
+                                  microbatches=args.microbatches)
+                    ok += 1
+                    rl = rec["roofline"]
+                    print(f"OK   {tag}  compile {rec['compile_s']}s  "
+                          f"bottleneck={rl['bottleneck']}  "
+                          f"hbm/dev={rec.get('per_device_hbm_gb', '?')}GB  "
+                          f"useful={rl['useful_flops_ratio']}")
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    fail += 1
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if multi else "16x16",
+                           "error": f"{type(e).__name__}: {e}"}
+                    print(f"FAIL {tag}: {type(e).__name__}: {e}")
+                    traceback.print_exc()
+            if args.out:
+                with open(args.out, "a") as f:
+                    f.write(json.dumps(rec) + "\n")
+    print(f"\ndone: {ok} ok, {fail} failed, {skip} skipped")
+    return 1 if fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,67 @@
+"""Serving launcher.
+
+On this CPU container it runs the reduced configs end to end (the full
+configs are exercised by the dry-run); on a real TPU slice the same command
+serves the full config under the production mesh:
+
+    python -m repro.launch.serve --arch granite-moe-1b-a400m --mode dynaexq \
+        --batch 4 --prompt-len 32 --new-tokens 16 [--full]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.core import ControllerConfig
+from repro.models import init_params
+from repro.serving import MoEServer, ServeConfig, make_prompts
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-moe-1b-a400m", choices=ARCH_IDS)
+    ap.add_argument("--mode", default="dynaexq",
+                    choices=["dynaexq", "static", "fp16"])
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--lo-bits", type=int, default=4, choices=[2, 4, 8])
+    ap.add_argument("--n-hi", type=int, default=2)
+    ap.add_argument("--hbm-gb", type=float, default=None,
+                    help="derive n_hi from a device envelope instead")
+    ap.add_argument("--full", action="store_true",
+                    help="full (assigned) config — needs a real accelerator")
+    ap.add_argument("--workload", default="text")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=not args.full)
+    print(f"[serve] {cfg.name} mode={args.mode} devices={jax.device_count()}")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    srv = MoEServer(
+        cfg, params,
+        ServeConfig(mode=args.mode, lo_bits=args.lo_bits,
+                    n_hi_per_layer=None if args.hbm_gb else args.n_hi,
+                    hbm_gb=args.hbm_gb,
+                    max_len=args.prompt_len + args.new_tokens + 8,
+                    controller=ControllerConfig(update_interval_s=0.25)),
+        batch=args.batch)
+    toks = jnp.asarray(make_prompts(args.workload, cfg.vocab_size,
+                                    args.batch, args.prompt_len))
+    t0 = time.perf_counter()
+    out, ttft, times = srv.generate({"tokens": toks}, args.new_tokens)
+    srv.flush()
+    wall = time.perf_counter() - t0
+    tput = args.batch * args.new_tokens / wall
+    print(f"[serve] TTFT {ttft*1e3:.1f} ms  TPOP "
+          f"{1e3*sum(times)/max(len(times),1):.1f} ms  "
+          f"throughput {tput:.2f} tok/s")
+    if srv.controllers:
+        ctl = next(iter(srv.controllers.values()))
+        print(f"[serve] transitions: {ctl.tm.stats}")
+        print(f"[serve] resident expert bytes: {srv.expert_device_bytes():,}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,221 @@
+"""Assigned input shapes + abstract (ShapeDtypeStruct) input builders.
+
+``build_dryrun`` assembles, for one (arch × shape × mesh): the step function
+to lower (train_step / prefill_step / serve_step), the abstract inputs (no
+device allocation — the shannon/kernels input_specs pattern), and the
+sharding tree from the planner. The dry-run and the roofline both consume it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.core.ver import build_bank
+from repro.launch.sharding import ShardingPlanner
+from repro.models import (decode_step, forward_train, init_caches,
+                          init_params, prefill)
+from repro.models.config import ArchConfig
+from repro.training.adamw import adamw_init
+from repro.training.train import TrainConfig, make_train_step
+
+SHAPES: Dict[str, Dict[str, Any]] = {
+    "train_4k":    dict(kind="train",   seq=4096,    batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768,   batch=32),
+    "decode_32k":  dict(kind="decode",  seq=32768,   batch=128),
+    "long_500k":   dict(kind="decode",  seq=524288,  batch=1, long=True),
+}
+
+LONG_SWA_WINDOW = 8192
+
+# whisper-tiny: enc-dec ASR with a 448-token decoder context — 500k-token
+# decode is meaningless for the family (DESIGN.md §5).
+SKIPS = {("whisper-tiny", "long_500k"): "enc-dec ASR: no 500k decode context"}
+
+
+def arch_for_shape(arch: str, shape: str) -> ArchConfig:
+    """Shape-specific config variant: long_500k forces sub-quadratic
+    attention (SWA window 8192) on full-attention archs."""
+    cfg = get_config(arch)
+    if SHAPES[shape].get("long") and cfg.attn is not None \
+            and cfg.attn.sliding_window is None:
+        cfg = dataclasses.replace(
+            cfg, attn=dataclasses.replace(cfg.attn,
+                                          sliding_window=LONG_SWA_WINDOW))
+    return cfg
+
+
+def _token_inputs(cfg: ArchConfig, batch: int, seq: int) -> Dict[str, Any]:
+    out: Dict[str, Any] = {}
+    text = seq
+    if cfg.family == "vlm":
+        text = seq - cfg.num_image_tokens
+        out["image_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.is_encoder_decoder:
+        out["audio_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    out["tokens"] = jax.ShapeDtypeStruct((batch, text), jnp.int32)
+    return out
+
+
+@dataclasses.dataclass
+class DryrunSpec:
+    name: str
+    step_fn: Callable
+    args: tuple                       # abstract args, ShapeDtypeStructs
+    in_shardings: tuple
+    donate_argnums: tuple
+    cfg: ArchConfig
+    kind: str
+    tokens_per_step: int
+    notes: list
+
+
+def _abstract(fn, *a, **k):
+    return jax.eval_shape(fn, *a, **k)
+
+
+def build_dryrun(arch: str, shape: str, mesh, *, lo_bits: int = 4,
+                 n_hi: Optional[int] = None, planner_kw: Optional[dict] = None,
+                 capacity_factor: float = 1.25,
+                 nsb_override: Optional[int] = None,
+                 microbatches: int = 1) -> DryrunSpec:
+    """``nsb_override``: reduce the stack to N super-blocks (the roofline's
+    two-point loop-cost extrapolation compiles nsb=2 and nsb=4 variants —
+    XLA's cost_analysis counts while-loop bodies once, so per-layer costs are
+    recovered by differencing)."""
+    if (arch, shape) in SKIPS:
+        raise ValueError(f"skip {arch}×{shape}: {SKIPS[(arch, shape)]}")
+    info = SHAPES[shape]
+    cfg = arch_for_shape(arch, shape)
+    if nsb_override is not None:
+        sb_len = len(cfg.superblock_or_default())
+        cfg = dataclasses.replace(
+            cfg, n_layers=sb_len * nsb_override,
+            n_encoder_layers=min(cfg.n_encoder_layers, nsb_override)
+            if cfg.is_encoder_decoder else 0)
+    notes: list = []
+    pkw = dict(planner_kw or {})
+    if info["kind"] == "train":
+        pkw.setdefault("fsdp", True)
+    planner = ShardingPlanner(cfg, mesh, notes=notes, **pkw)
+
+    # Distribution context for the shard_map MoE dispatch.
+    from repro.launch.dist import DistContext, dist_ctx
+    dctx = DistContext(
+        mesh=mesh,
+        dp_axes=tuple(a for a in mesh.axis_names if a != "model"),
+        tokens_dp_sharded=(info["batch"] % planner.dp_n == 0))
+
+    def with_ctx(fn):
+        def wrapped(*a, **k):
+            with dist_ctx(dctx):
+                return fn(*a, **k)
+        return wrapped
+
+    key = jax.random.PRNGKey(0)
+    params_abs = _abstract(lambda k: init_params(k, cfg), key)
+    params_sh = planner.tree_shardings(params_abs, "param")
+
+    batch, seq = info["batch"], info["seq"]
+
+    if info["kind"] == "train":
+        tcfg = TrainConfig(capacity_factor=capacity_factor,
+                           microbatches=microbatches)
+        step = make_train_step(cfg, tcfg)
+        opt_abs = _abstract(adamw_init, params_abs)
+        opt_sh = planner.tree_shardings(opt_abs, "param")
+        batch_abs = _token_inputs(cfg, batch, seq)
+        batch_abs["labels"] = jax.ShapeDtypeStruct(
+            batch_abs["tokens"].shape, jnp.int32)
+        batch_sh = planner.tree_shardings(batch_abs, "input")
+        return DryrunSpec(
+            name=f"{arch}×{shape}", step_fn=with_ctx(step),
+            args=(params_abs, opt_abs, batch_abs),
+            in_shardings=(params_sh, opt_sh, batch_sh),
+            donate_argnums=(0, 1), cfg=cfg, kind="train",
+            tokens_per_step=batch * seq, notes=notes)
+
+    # ---- serving shapes -------------------------------------------------
+    bank_abs = None
+    if cfg.is_moe:
+        sb = cfg.superblock_or_default()
+        banks = {}
+        for pos, _ in enumerate(sb):
+            if cfg.ffn_kind(pos) != "moe":
+                continue
+            E = cfg.moe.num_experts
+            # Per-shard budget semantics (DESIGN §2): each model-parallel
+            # rank owns E/16 experts and an integer number of hi slots, so
+            # the global n_hi is a multiple of the model axis — replicating
+            # the hi pool costs ~GBs/device on coarse-expert archs (jamba).
+            mn = mesh.shape["model"]
+            nh = n_hi if n_hi is not None else min(E, max(mn, E // 8))
+            nsb = cfg.n_superblocks()
+            ew = {
+                "w_gate": jax.ShapeDtypeStruct(
+                    (nsb, E, cfg.d_model, cfg.moe.d_ff_expert), jnp.bfloat16),
+                "w_up": jax.ShapeDtypeStruct(
+                    (nsb, E, cfg.d_model, cfg.moe.d_ff_expert), jnp.bfloat16),
+                "w_down": jax.ShapeDtypeStruct(
+                    (nsb, E, cfg.moe.d_ff_expert, cfg.d_model), jnp.bfloat16),
+            }
+            banks[str(pos)] = _abstract(
+                lambda w: build_bank(w, n_hi=nh, lo_bits=lo_bits), ew)
+        bank_abs = banks
+        # Serving never carries the dense experts — drop them (VER owns
+        # residency), mirroring MoEServer._build_banks.
+        params_abs = jax.eval_shape(lambda p: _strip_experts(p, cfg), params_abs)
+        params_sh = planner.tree_shardings(params_abs, "param")
+    bank_sh = planner.tree_shardings(bank_abs, "param") if bank_abs else None
+
+    cache_len = seq
+    if cfg.attn is not None and cfg.attn.sliding_window is not None:
+        cache_len = seq  # init_caches clamps per-position to the window
+    caches_abs = _abstract(lambda: init_caches(cfg, batch, cache_len))
+    caches_sh = planner.tree_shardings(caches_abs, "cache")
+
+    if info["kind"] == "prefill":
+        batch_abs = _token_inputs(cfg, batch, seq)
+        batch_sh = planner.tree_shardings(batch_abs, "input")
+
+        def prefill_step(params, bank, b, caches):
+            return prefill(params, cfg, b, caches, bank=bank,
+                           capacity_factor=capacity_factor)
+
+        return DryrunSpec(
+            name=f"{arch}×{shape}", step_fn=with_ctx(prefill_step),
+            args=(params_abs, bank_abs, batch_abs, caches_abs),
+            in_shardings=(params_sh, bank_sh, batch_sh, caches_sh),
+            donate_argnums=(3,), cfg=cfg, kind="prefill",
+            tokens_per_step=batch * seq, notes=notes)
+
+    # decode
+    tok_abs = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    tok_sh = planner.tree_shardings(tok_abs, "input")
+    pos_abs = jax.ShapeDtypeStruct((), jnp.int32)
+    pos_sh = NamedSharding(mesh, P())
+
+    def serve_step(params, bank, token, pos, caches):
+        return decode_step(params, cfg, token, pos, caches, bank=bank,
+                           capacity_factor=2.0)
+
+    return DryrunSpec(
+        name=f"{arch}×{shape}", step_fn=with_ctx(serve_step),
+        args=(params_abs, bank_abs, tok_abs, pos_abs, caches_abs),
+        in_shardings=(params_sh, bank_sh, tok_sh, pos_sh, caches_sh),
+        donate_argnums=(4,), cfg=cfg, kind="decode",
+        tokens_per_step=batch, notes=notes)
+
+
+def _strip_experts(params, cfg: ArchConfig):
+    sb = cfg.superblock_or_default()
+    for pos, _ in enumerate(sb):
+        if cfg.ffn_kind(pos) == "moe":
+            params["blocks"][str(pos)]["moe"]["experts"] = None
+    return params

@@ -1,0 +1,188 @@
+"""Sharding planner: param-tree paths → PartitionSpecs.
+
+Baseline rules (§6 of DESIGN.md). Every rule degrades to replication rather
+than failing, and the planner records *why* (the roofline §Perf loop reads
+this to find sharding-limited architectures):
+
+* embeddings (V, d)            → (model, None); lm_head (d, V) → (None, model)
+* attention, heads divisible   → shard the head (q_dim) axis over model
+* attention, heads NOT divisible → shard the d_model (contraction) axis —
+  params still split 16-way, at the cost of an all-reduce after the matmul
+* dense FFN                    → (None, model) / (model, None) classic TP
+* MoE expert banks             → expert axis over model (expert parallelism);
+  DynaExq hi pool + packed lo pool shard the same way; slot maps replicate
+* Mamba in/out projections     → contraction-axis sharding (the concatenated
+  zxBCdt output axis cannot be split without segment-aware reshards)
+* batch dims of activations/caches → ('pod','data'); KV cache sequence axis
+  → model (flash-decode style) so 32k-context decode fits HBM
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ArchConfig
+
+
+def _div(n: int, d: int) -> bool:
+    return n % d == 0
+
+
+def _flat(spec_entry):
+    """Axis names in one PartitionSpec entry (str | tuple | None)."""
+    if spec_entry is None:
+        return ()
+    return (spec_entry,) if isinstance(spec_entry, str) else tuple(spec_entry)
+
+
+class ShardingPlanner:
+    def __init__(self, cfg: ArchConfig, mesh: Mesh,
+                 notes: list | None = None, seq_shard_cache: bool = True,
+                 pad_heads: bool = False, fsdp: bool = False):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.model_n = mesh.shape["model"]
+        self.dp = tuple(a for a in mesh.axis_names if a != "model")
+        self.dp_n = int(np.prod([mesh.shape[a] for a in self.dp]))
+        self.notes = notes if notes is not None else []
+        self.seq_shard_cache = seq_shard_cache
+        self.pad_heads = pad_heads  # §Perf variant: uneven head sharding
+        # FSDP (train): additionally shard params/optimizer over the data
+        # axes on one divisible dim — 30B×(2+8)B of params+AdamW moments
+        # cannot live 16-way-sharded on 16 GB chips.
+        self.fsdp = fsdp
+
+    # ---- leaves ---------------------------------------------------------
+    def spec_for_param(self, path: str, shape: tuple) -> P:
+        spec = self._base_param_spec(path, shape)
+        if self.fsdp and shape:
+            spec = self._add_fsdp(spec, shape)
+        return spec
+
+    def _add_fsdp(self, spec: P, shape: tuple) -> P:
+        parts = list(spec) + [None] * (len(shape) - len(spec))
+        best, best_dim = None, -1
+        for i, (axis, dim) in enumerate(zip(parts, shape)):
+            if axis is None and dim % self.dp_n == 0 and dim > best_dim:
+                best, best_dim = i, dim
+        if best is None:
+            return spec
+        parts[best] = self.dp if len(self.dp) > 1 else self.dp[0]
+        return P(*parts)
+
+    def _base_param_spec(self, path: str, shape: tuple) -> P:
+        cfg, mn = self.cfg, self.model_n
+        p = path.lower()
+        nd = len(shape)
+
+        def lead(spec_tail: tuple) -> P:
+            """Prepend Nones for stacked (layer) leading dims."""
+            return P(*((None,) * (nd - len(spec_tail)) + spec_tail))
+
+        if "embed" in p:
+            return P("model", None) if _div(shape[0], mn) else P()
+        if "lm_head" in p:
+            return P(None, "model") if _div(shape[1], mn) else P()
+        if ("wq" in p or "wk" in p or "wv" in p or "wo" in p) and cfg.attn:
+            a = cfg.attn
+            heads = a.n_heads if ("wq" in p or "wo" in p) else a.n_kv_heads
+            if _div(heads, mn) or (self.pad_heads and "cross" not in p):
+                if "wo" in p:
+                    return lead(("model", None))
+                return lead((None, "model"))
+            # non-divisible heads: replicate the projections (FSDP still
+            # shards their storage over data) and let the model apply
+            # sequence-parallel attention (layers._seq_parallel_constraint).
+            self._note(f"{path}: {heads} heads % {mn} != 0 → replicated "
+                       f"params + sequence-parallel attention")
+            return lead(())
+        if "experts" in p or (".lo" in p or ".hi" in p):
+            # stacked expert banks: (L, E, K, N) / packed / scales / hi pool
+            if nd >= 3 and _div(shape[1], mn):
+                return P(None, "model", *(None,) * (nd - 2))
+            self._note(f"{path}: expert dim {shape} not divisible → replicated")
+            return lead(())
+        if "slot" in p:
+            return lead(())
+        if "router" in p:
+            return lead(())
+        if "mlp" in p or "shared" in p:
+            if "w_down" in p:
+                return lead(("model", None)) if _div(shape[-2], mn) else lead(())
+            return lead((None, "model")) if _div(shape[-1], mn) else lead(())
+        if "in_proj" in p or "out_proj" in p:
+            # contraction sharding (see module docstring)
+            return lead(("model", None)) if _div(shape[-2], mn) else lead(())
+        return lead(())  # norms, conv, A_log, biases, scalars
+
+    def _batch_spec(self, batch: int):
+        """Batch dims shard over data×model when divisible (serving: keeps
+        attention fully batch-local — no seq/head resharding collectives),
+        else data-only, else replicated."""
+        full = self.dp + ("model",)
+        if _div(batch, self.dp_n * self.model_n):
+            return full
+        if _div(batch, self.dp_n):
+            return self.dp
+        if _div(batch, self.mesh.shape[self.dp[-1]]):
+            return self.dp[-1]
+        return None
+
+    def spec_for_cache(self, path: str, shape: tuple) -> P:
+        """Caches are stacked (nsb, B, ...)."""
+        p = path.lower()
+        nd = len(shape)
+        batch = shape[1] if nd > 1 else 1
+        bspec = self._batch_spec(batch)
+        if bspec is None and batch > 1:
+            self._note(f"{path}: cache batch {batch} → replicated")
+        if "cross" in p and nd == 5:
+            # (nsb, B, Senc, Hkv, hd) — encoder cross-attn KV, seq-major.
+            return P(None, bspec, None, None, None)
+        if (".k" in p or ".v" in p) and nd == 5:
+            # (nsb, B, Hkv, C, hd) — head-major decode cache; shard the
+            # sequence axis (3) over model when the batch does not use it.
+            seq = "model" if (self.seq_shard_cache and bspec is not None
+                              and "model" not in _flat(bspec)
+                              and _div(shape[3], self.model_n)) else None
+            return P(None, bspec, None, seq, None)
+        if "state" in p and nd == 5:   # (nsb, B, H, P, N)
+            return P(None, bspec, None, None, None)
+        if "conv" in p and nd == 4:    # (nsb, B, K, c)
+            return P(None, bspec, None, None)
+        return P(*((None,) * nd))
+
+    def spec_for_input(self, name: str, shape: tuple) -> P:
+        nd = len(shape)
+        if nd == 0:
+            return P()
+        batch = shape[0]
+        # Decode token vectors follow the cache's full batch split; 2-D token
+        # grids (train/prefill) stay data-sharded for the MoE dispatch/loss.
+        if nd == 1 and _div(batch, self.dp_n * self.model_n):
+            return P(self.dp + ("model",))
+        if _div(batch, self.dp_n):
+            return P(self.dp, *(None,) * (nd - 1))
+        # batch-1 long-context: replicate (baseline; §Perf shards seq)
+        self._note(f"input {name}: batch {batch} % {self.dp_n} → replicated")
+        return P(*(None,) * nd)
+
+    def _note(self, msg: str) -> None:
+        if msg not in self.notes:
+            self.notes.append(msg)
+
+    # ---- trees ----------------------------------------------------------
+    def tree_shardings(self, tree: Any, kind: str):
+        """kind: 'param' | 'cache' | 'input' → NamedSharding tree."""
+        fn = {"param": self.spec_for_param, "cache": self.spec_for_cache,
+              "input": self.spec_for_input}[kind]
+
+        def one(kp, leaf):
+            path = jax.tree_util.keystr(kp)
+            shape = tuple(leaf.shape) if hasattr(leaf, "shape") else ()
+            return NamedSharding(self.mesh, fn(path, shape))
+
+        return jax.tree_util.tree_map_with_path(one, tree)

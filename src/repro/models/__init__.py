@@ -1,0 +1,11 @@
+from repro.models.config import ArchConfig, AttnConfig, MoEConfig, SSMConfig
+from repro.models.model import (
+    init_params, init_caches, forward_train, prefill, decode_step,
+    DecodeCaches,
+)
+
+__all__ = [
+    "ArchConfig", "AttnConfig", "MoEConfig", "SSMConfig",
+    "init_params", "init_caches", "forward_train", "prefill", "decode_step",
+    "DecodeCaches",
+]

@@ -1,0 +1,199 @@
+"""Architecture configuration system.
+
+Every assigned architecture is expressed as an :class:`ArchConfig`; the
+model builder in ``models/model.py`` consumes only this dataclass, so new
+architectures are added by writing a config, not new model code.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    rope_theta: float = 10000.0
+    sliding_window: Optional[int] = None   # None = full causal
+    use_rope: bool = True                  # whisper uses learned positions
+    qk_norm: bool = False                  # qwen3-style per-head RMSNorm on q/k
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared_experts: int = 0
+    d_ff_shared: int = 0
+    router_aux_coef: float = 0.01
+    capacity_factor: float = 2.0           # train/smoke; serving uses its own
+    norm_topk_prob: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    chunk: int = 64
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                  # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    vocab_size: int
+    d_ff: int = 0                # dense-MLP hidden dim (0 = no dense MLP)
+    attn: Optional[AttnConfig] = None
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    # Hybrid stacks: per-position block kinds within a repeating super-block,
+    # e.g. jamba = ('mamba',)*7 + ('attn',) with MoE on odd positions.
+    superblock: Tuple[str, ...] = ()
+    moe_positions: Tuple[int, ...] = ()    # super-block positions using MoE FFN
+    # Encoder-decoder (audio).
+    is_encoder_decoder: bool = False
+    n_encoder_layers: int = 0
+    encoder_seq: int = 0                  # stub frontend frames
+    # VLM.
+    num_image_tokens: int = 0
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    max_seq_len: int = 131072
+    source: str = ""
+
+    # ---- derived ------------------------------------------------------
+    @property
+    def is_moe(self) -> bool:
+        return self.moe is not None
+
+    @property
+    def uses_attention(self) -> bool:
+        return self.attn is not None
+
+    def superblock_or_default(self) -> Tuple[str, ...]:
+        """Layer-kind pattern of one repeating super-block."""
+        if self.superblock:
+            return self.superblock
+        if self.family == "ssm":
+            return ("mamba",)
+        return ("attn",)
+
+    def n_superblocks(self) -> int:
+        sb = self.superblock_or_default()
+        if self.n_layers % len(sb):
+            raise ValueError(f"{self.name}: n_layers={self.n_layers} not a "
+                             f"multiple of super-block {len(sb)}")
+        return self.n_layers // len(sb)
+
+    def ffn_kind(self, pos_in_superblock: int) -> str:
+        """'moe' or 'dense' for the FFN at this super-block position."""
+        if self.moe is None:
+            return "dense"
+        if not self.moe_positions:          # pure-MoE stacks: every layer
+            return "moe"
+        return "moe" if pos_in_superblock in self.moe_positions else "dense"
+
+    # ---- parameter accounting (for 6ND roofline terms) ----------------
+    def param_count(self) -> int:
+        return _count_params(self, active_only=False)
+
+    def active_param_count(self) -> int:
+        return _count_params(self, active_only=True)
+
+    def reduced(self, n_layers: int = 2, d_model: int = 256,
+                num_experts: int = 4, vocab: int = 512,
+                max_seq_len: int = 1024) -> "ArchConfig":
+        """Smoke-test variant of the same family (per assignment rules)."""
+        d_model = min(d_model, 512)
+        attn = self.attn
+        if attn is not None:
+            n_heads = max(2, min(attn.n_heads, 4))
+            n_kv = max(1, min(attn.n_kv_heads, n_heads))
+            attn = dataclasses.replace(
+                attn, n_heads=n_heads, n_kv_heads=n_kv,
+                head_dim=min(attn.head_dim, 64),
+                sliding_window=(64 if attn.sliding_window else None))
+        moe = self.moe
+        if moe is not None:
+            moe = dataclasses.replace(
+                moe, num_experts=min(moe.num_experts, num_experts),
+                top_k=min(moe.top_k, 2),
+                d_ff_expert=min(moe.d_ff_expert, 2 * d_model),
+                d_ff_shared=min(moe.d_ff_shared, d_model) if moe.n_shared_experts else 0)
+        ssm = self.ssm
+        if ssm is not None:
+            ssm = dataclasses.replace(ssm, d_state=min(ssm.d_state, 32),
+                                      head_dim=32, chunk=16)
+        sb = self.superblock_or_default()
+        n_layers = max(n_layers, len(sb)) if self.superblock else n_layers
+        if self.superblock and n_layers % len(sb):
+            n_layers = len(sb)
+        return dataclasses.replace(
+            self, name=self.name + "-smoke", n_layers=n_layers,
+            d_model=d_model, vocab_size=vocab,
+            d_ff=min(self.d_ff, 2 * d_model) if self.d_ff else 0,
+            attn=attn, moe=moe, ssm=ssm,
+            n_encoder_layers=min(self.n_encoder_layers, 2),
+            encoder_seq=min(self.encoder_seq, 64) if self.encoder_seq else 0,
+            num_image_tokens=min(self.num_image_tokens, 16) if self.num_image_tokens else 0,
+            max_seq_len=max_seq_len)
+
+
+def _count_params(cfg: ArchConfig, active_only: bool) -> int:
+    d = cfg.d_model
+    total = cfg.vocab_size * d * (1 if cfg.tie_embeddings else 2)
+    sb = cfg.superblock_or_default()
+    per_sb = 0
+    for pos, kind in enumerate(sb):
+        per_sb += 2 * d  # pre-norms
+        if kind == "attn" and cfg.attn is not None:
+            a = cfg.attn
+            per_sb += d * a.q_dim + 2 * d * a.kv_dim + a.q_dim * d
+        elif kind == "mamba" and cfg.ssm is not None:
+            s = cfg.ssm
+            di = s.d_inner(d)
+            nh = s.n_heads(d)
+            conv_dim = di + 2 * s.n_groups * s.d_state
+            per_sb += d * (2 * di + 2 * s.n_groups * s.d_state + nh)
+            per_sb += conv_dim * s.d_conv + 3 * nh + di  # conv, A/D/dt, gate-norm
+            per_sb += di * d
+        if cfg.ffn_kind(pos) == "moe":
+            m = cfg.moe
+            per_sb += d * m.num_experts  # router
+            e = m.num_experts if not active_only else m.top_k
+            per_sb += e * 3 * d * m.d_ff_expert
+            if m.n_shared_experts:
+                per_sb += m.n_shared_experts * 3 * d * m.d_ff_shared
+        elif cfg.d_ff:
+            per_sb += 3 * d * cfg.d_ff
+    total += per_sb * cfg.n_superblocks()
+    if cfg.is_encoder_decoder and cfg.attn is not None:
+        a = cfg.attn
+        enc_layer = 2 * d + d * a.q_dim + 2 * d * a.kv_dim + a.q_dim * d + 3 * d * cfg.d_ff
+        cross = d * a.q_dim + 2 * d * a.kv_dim + a.q_dim * d + d
+        total += cfg.n_encoder_layers * enc_layer + cfg.n_layers * cross
+    return int(total)

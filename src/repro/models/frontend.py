@@ -1,0 +1,27 @@
+"""Modality frontends — STUBS per the assignment carve-out.
+
+The audio (mel-spectrogram + conv feature extractor) and vision (ViT/SigLIP +
+projector) frontends are not implemented; ``input_specs`` supplies
+precomputed frame/patch embeddings of the right shape, and these helpers
+generate random-but-deterministic stand-ins for runnable smoke tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+
+
+def audio_frame_embeddings(key, cfg: ArchConfig, batch: int) -> jax.Array:
+    """Stand-in for (log-mel → conv1d×2 → GELU) Whisper frontend output:
+    (B, n_frames, d_model)."""
+    return jax.random.normal(key, (batch, cfg.encoder_seq, cfg.d_model),
+                             jnp.bfloat16) * 0.02
+
+
+def image_patch_embeddings(key, cfg: ArchConfig, batch: int) -> jax.Array:
+    """Stand-in for (anyres tiling → ViT → projector) LLaVA frontend output:
+    (B, n_image_tokens, d_model)."""
+    return jax.random.normal(key, (batch, cfg.num_image_tokens, cfg.d_model),
+                             jnp.bfloat16) * 0.02

@@ -1,0 +1,33 @@
+"""Dense feed-forward blocks (SwiGLU and GELU variants)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _init
+
+
+def init_swiglu(key, d_model: int, d_ff: int):
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": _init(ks[0], (d_model, d_ff)),
+        "w_up": _init(ks[1], (d_model, d_ff)),
+        "w_down": _init(ks[2], (d_ff, d_model)),
+    }
+
+
+def swiglu(p, x: jax.Array) -> jax.Array:
+    return (jax.nn.silu((x @ p["w_gate"]).astype(jnp.float32)).astype(x.dtype)
+            * (x @ p["w_up"])) @ p["w_down"]
+
+
+def init_gelu_mlp(key, d_model: int, d_ff: int):
+    ks = jax.random.split(key, 2)
+    return {
+        "w_up": _init(ks[0], (d_model, d_ff)),
+        "w_down": _init(ks[1], (d_ff, d_model)),
+    }
+
+
+def gelu_mlp(p, x: jax.Array) -> jax.Array:
+    return jax.nn.gelu((x @ p["w_up"]).astype(jnp.float32)).astype(x.dtype) @ p["w_down"]

@@ -1,0 +1,363 @@
+"""Unified model builder covering all six assigned families.
+
+A model is a stack of repeating *super-blocks* (one layer-kind pattern, e.g.
+jamba = 7×mamba + 1×attn with MoE FFN on odd positions). Parameters for each
+super-block position are stacked over the number of super-blocks so the whole
+stack runs under one ``lax.scan`` — keeping the lowered HLO small enough to
+compile 40 (arch × shape) × 2 meshes on this container.
+
+Three entry points:
+* ``forward_train``  — full-sequence causal forward (training / quality eval)
+* ``prefill``        — full forward writing KV/SSM caches, last-token logits
+* ``decode_step``    — ONE token against the caches (the serving hot path)
+
+MoE layers accept an optional DynaExq ``ExpertBankQ`` override (serving in
+mixed precision); without it they use the dense bf16 experts in ``params``.
+Every MoE layer emits its router-selection counts — the hotness signal.
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models import layers as L
+from repro.models import mlp as M
+from repro.models import moe as X
+from repro.models import ssm as S
+from repro.models.layers import KVCache
+from repro.models.ssm import MambaCache
+
+PyTree = Any
+
+# Roofline instrumentation: when True, layer scans fully unroll so XLA's
+# cost_analysis (which counts while-loop bodies once) sees every iteration.
+# Enabled only by the dry-run's reduced-depth variant compiles.
+_SCAN_UNROLL = False
+
+
+@contextlib.contextmanager
+def unrolled_scans():
+    global _SCAN_UNROLL
+    prev = _SCAN_UNROLL
+    _SCAN_UNROLL = True
+    try:
+        yield
+    finally:
+        _SCAN_UNROLL = prev
+
+
+def _scan(body, carry, xs, length=None):
+    return jax.lax.scan(body, carry, xs, length=length,
+                        unroll=True if _SCAN_UNROLL else 1)
+
+
+# --------------------------------------------------------------------------
+# Init
+# --------------------------------------------------------------------------
+
+def _init_block(key, cfg: ArchConfig, kind: str, ffn: str) -> Dict:
+    ks = jax.random.split(key, 4)
+    p: Dict = {"norm1": L.init_rmsnorm(cfg.d_model),
+               "norm2": L.init_rmsnorm(cfg.d_model)}
+    if kind == "attn":
+        p["attn"] = L.init_attention(ks[0], cfg.d_model, cfg.attn)
+    elif kind == "mamba":
+        p["mamba"] = S.init_mamba(ks[0], cfg.d_model, cfg.ssm)
+    else:
+        raise ValueError(kind)
+    if ffn == "moe":
+        p["moe"] = X.init_moe(ks[1], cfg.d_model, cfg.moe)
+    elif cfg.d_ff:
+        p["mlp"] = M.init_swiglu(ks[1], cfg.d_model, cfg.d_ff)
+    if cfg.is_encoder_decoder and kind == "attn":
+        p["norm_cross"] = L.init_rmsnorm(cfg.d_model)
+        p["cross"] = L.init_cross_attention(ks[2], cfg.d_model, cfg.attn)
+    return p
+
+
+def _init_enc_block(key, cfg: ArchConfig) -> Dict:
+    ks = jax.random.split(key, 2)
+    return {"norm1": L.init_rmsnorm(cfg.d_model),
+            "attn": L.init_attention(ks[0], cfg.d_model, cfg.attn),
+            "norm2": L.init_rmsnorm(cfg.d_model),
+            "mlp": M.init_gelu_mlp(ks[1], cfg.d_model, cfg.d_ff or 4 * cfg.d_model)}
+
+
+def init_params(key, cfg: ArchConfig) -> Dict:
+    sb = cfg.superblock_or_default()
+    nsb = cfg.n_superblocks()
+    keys = jax.random.split(key, 4 + len(sb))
+    params: Dict = {
+        "embed": (jax.random.normal(keys[0], (cfg.vocab_size, cfg.d_model),
+                                    jnp.float32) * 0.02).astype(jnp.bfloat16),
+        "final_norm": L.init_rmsnorm(cfg.d_model),
+        "blocks": {},
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.normal(
+            keys[1], (cfg.d_model, cfg.vocab_size), jnp.float32)
+            * cfg.d_model ** -0.5).astype(jnp.bfloat16)
+    for pos, kind in enumerate(sb):
+        ffn = cfg.ffn_kind(pos)
+        pos_keys = jax.random.split(keys[4 + pos], nsb)
+        params["blocks"][str(pos)] = jax.vmap(
+            lambda k: _init_block(k, cfg, kind, ffn))(pos_keys)
+    if cfg.is_encoder_decoder:
+        enc_keys = jax.random.split(keys[2], cfg.n_encoder_layers)
+        params["encoder"] = jax.vmap(
+            lambda k: _init_enc_block(k, cfg))(enc_keys)
+        params["enc_final_norm"] = L.init_rmsnorm(cfg.d_model)
+    return params
+
+
+# --------------------------------------------------------------------------
+# Caches
+# --------------------------------------------------------------------------
+
+class DecodeCaches(NamedTuple):
+    """Per super-block-position stacked caches + (audio) cross-attn KV."""
+    blocks: Dict[str, Any]       # pos → KVCache | MambaCache (leading nsb)
+    cross: Optional[Dict[str, jax.Array]]  # {'k','v'}: (nsb, B, Senc, Hkv, hd)
+
+
+def init_caches(cfg: ArchConfig, batch: int, max_len: int,
+                dtype=jnp.bfloat16) -> DecodeCaches:
+    sb = cfg.superblock_or_default()
+    nsb = cfg.n_superblocks()
+    blocks = {}
+    for pos, kind in enumerate(sb):
+        if kind == "attn":
+            cap = max_len if cfg.attn.sliding_window is None \
+                else min(max_len, cfg.attn.sliding_window)
+            c = L.init_kv_cache(batch, cap, cfg.attn, dtype)
+        else:
+            c = S.init_mamba_cache(batch, cfg.d_model, cfg.ssm, dtype)
+        blocks[str(pos)] = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (nsb,) + a.shape).copy(), c)
+    cross = None
+    if cfg.is_encoder_decoder:
+        shape = (nsb, batch, cfg.encoder_seq, cfg.attn.n_kv_heads,
+                 cfg.attn.head_dim)
+        cross = {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    return DecodeCaches(blocks=blocks, cross=cross)
+
+
+# --------------------------------------------------------------------------
+# Block application
+# --------------------------------------------------------------------------
+
+def _apply_ffn(bp: Dict, cfg: ArchConfig, pos: int, x2d: jax.Array,
+               capacity: int, bank):
+    """x2d: (T, d) → (y, counts|None, aux_loss)."""
+    ffn = cfg.ffn_kind(pos)
+    if ffn == "moe":
+        b = bank[str(pos)] if bank is not None else bp["moe"]["experts"]
+        y, aux = X.moe_apply(bp["moe"], b, x2d, cfg.moe, capacity)
+        return y, aux.counts, aux.aux_loss
+    if "mlp" in bp:
+        return M.swiglu(bp["mlp"], x2d), None, jnp.float32(0)
+    return jnp.zeros_like(x2d), None, jnp.float32(0)
+
+
+def _block_train(bp: Dict, cfg: ArchConfig, pos: int, kind: str, x: jax.Array,
+                 capacity: int, bank, enc_out: Optional[jax.Array]):
+    B, Sq, d = x.shape
+    h = L.rmsnorm(bp["norm1"], x, cfg.norm_eps)
+    if kind == "attn":
+        attn_out = L.attention_full(bp["attn"], cfg.attn, h)
+        if cfg.is_encoder_decoder:
+            x = x + attn_out
+            hc = L.rmsnorm(bp["norm_cross"], x, cfg.norm_eps)
+            ek, ev = L.encode_cross_kv(bp["cross"], cfg.attn, enc_out)
+            attn_out = L.cross_attention(bp["cross"], cfg.attn, hc, ek, ev)
+    else:
+        attn_out, _ = S.ssd_forward(bp["mamba"], cfg.ssm, cfg.d_model, h)
+    x = x + attn_out
+    h = L.rmsnorm(bp["norm2"], x, cfg.norm_eps)
+    y, counts, aux = _apply_ffn(bp, cfg, pos, h.reshape(B * Sq, d), capacity, bank)
+    return x + y.reshape(B, Sq, d), counts, aux
+
+
+def _block_step(bp: Dict, cfg: ArchConfig, pos: int, kind: str, x: jax.Array,
+                cache, pos_idx, capacity: int, bank,
+                cross_kv, prefill: bool):
+    """Shared prefill/decode body. x: (B, S, d) (S=1 for decode)."""
+    B, Sq, d = x.shape
+    h = L.rmsnorm(bp["norm1"], x, cfg.norm_eps)
+    if kind == "attn":
+        if prefill:
+            attn_out, cache = L.attention_prefill(bp["attn"], cfg.attn, h, cache)
+        else:
+            attn_out, cache = L.attention_decode(bp["attn"], cfg.attn, h,
+                                                 pos_idx, cache)
+        if cfg.is_encoder_decoder:
+            x = x + attn_out
+            hc = L.rmsnorm(bp["norm_cross"], x, cfg.norm_eps)
+            attn_out = L.cross_attention(bp["cross"], cfg.attn, hc,
+                                         cross_kv["k"], cross_kv["v"])
+    else:
+        if prefill:
+            attn_out, cache = S.ssd_forward(bp["mamba"], cfg.ssm, cfg.d_model, h)
+        else:
+            attn_out, cache = S.ssd_decode_step(bp["mamba"], cfg.ssm,
+                                                cfg.d_model, h, cache)
+    x = x + attn_out
+    h = L.rmsnorm(bp["norm2"], x, cfg.norm_eps)
+    y, counts, _ = _apply_ffn(bp, cfg, pos, h.reshape(B * Sq, d), capacity, bank)
+    return x + y.reshape(B, Sq, d), cache, counts
+
+
+# --------------------------------------------------------------------------
+# Encoder (audio)
+# --------------------------------------------------------------------------
+
+def encode(params: Dict, cfg: ArchConfig, frames: jax.Array) -> jax.Array:
+    """frames: (B, Senc, d) stub frontend output → encoder hidden states."""
+    def body(x, bp):
+        h = L.rmsnorm(bp["norm1"], x, cfg.norm_eps)
+        x = x + L.attention_full(bp["attn"], cfg.attn, h, causal=False)
+        h = L.rmsnorm(bp["norm2"], x, cfg.norm_eps)
+        return x + M.gelu_mlp(bp["mlp"], h), None
+    x, _ = _scan(body, frames, params["encoder"])
+    return L.rmsnorm(params["enc_final_norm"], x, cfg.norm_eps)
+
+
+# --------------------------------------------------------------------------
+# Embedding / head
+# --------------------------------------------------------------------------
+
+def _embed_inputs(params: Dict, cfg: ArchConfig, batch: Dict) -> jax.Array:
+    x = params["embed"][batch["tokens"]]  # (B, S, d)
+    if cfg.family == "vlm" and "image_embeds" in batch:
+        x = jnp.concatenate(
+            [batch["image_embeds"].astype(x.dtype), x], axis=1)
+    return x
+
+
+def _lm_logits(params: Dict, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return (x @ head).astype(jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# Entry points
+# --------------------------------------------------------------------------
+
+def forward_train(params: Dict, cfg: ArchConfig, batch: Dict,
+                  capacity_factor: Optional[float] = None,
+                  remat: bool = True):
+    """Full causal forward. Returns (logits (B,S,V) f32, aux dict)."""
+    sb = cfg.superblock_or_default()
+    x = _embed_inputs(params, cfg, batch)
+    B, Stot, d = x.shape
+    cap = X.moe_capacity(B * Stot, cfg.moe, capacity_factor) if cfg.is_moe else 0
+    enc_out = encode(params, cfg, batch["audio_embeds"]) \
+        if cfg.is_encoder_decoder else None
+
+    def sb_body(carry, bp_sliced):
+        x, aux_sum = carry
+        counts_out = {}
+        for pos, kind in enumerate(sb):
+            x, counts, aux = _block_train(bp_sliced[str(pos)], cfg, pos, kind,
+                                          x, cap, None, enc_out)
+            aux_sum = aux_sum + aux
+            if counts is not None:
+                counts_out[str(pos)] = counts
+        return (x, aux_sum), counts_out
+
+    body = jax.checkpoint(sb_body) if remat else sb_body
+    (x, aux_sum), counts = _scan(body, (x, jnp.float32(0)),
+                                        params["blocks"])
+    logits = _lm_logits(params, cfg, x)
+    return logits, {"aux_loss": aux_sum, "counts": counts}
+
+
+def prefill(params: Dict, cfg: ArchConfig, batch: Dict, caches: DecodeCaches,
+            bank=None, capacity_factor: Optional[float] = None):
+    """Full forward writing caches. Returns (last-token logits (B,V),
+    caches, counts)."""
+    sb = cfg.superblock_or_default()
+    x = _embed_inputs(params, cfg, batch)
+    B, Stot, d = x.shape
+    cap = X.moe_capacity(B * Stot, cfg.moe, capacity_factor) if cfg.is_moe else 0
+
+    cross = caches.cross
+    if cfg.is_encoder_decoder:
+        enc_out = encode(params, cfg, batch["audio_embeds"])
+
+        def fill_cross(bp_sliced):
+            out = {}
+            for pos, kind in enumerate(sb):
+                if kind == "attn":
+                    k, v = L.encode_cross_kv(bp_sliced[str(pos)]["cross"],
+                                             cfg.attn, enc_out)
+                    out = {"k": k, "v": v}
+            return out
+        cross = jax.vmap(fill_cross)(params["blocks"])
+
+    def sb_body(x, xs):
+        if bank is not None:
+            bp_sliced, cache_sliced, cross_sliced, bank_sliced = xs
+        else:
+            bp_sliced, cache_sliced, cross_sliced = xs
+            bank_sliced = None
+        counts_out, new_caches = {}, {}
+        for pos, kind in enumerate(sb):
+            x, c, counts = _block_step(bp_sliced[str(pos)], cfg, pos, kind, x,
+                                       cache_sliced[str(pos)], None, cap,
+                                       bank_sliced, cross_sliced,
+                                       prefill=True)
+            new_caches[str(pos)] = c
+            if counts is not None:
+                counts_out[str(pos)] = counts
+        return x, (new_caches, counts_out)
+
+    xs = (params["blocks"], caches.blocks, cross)
+    if bank is not None:
+        xs = xs + (bank,)
+    x, (new_blocks, counts) = _scan(sb_body, x, xs)
+    logits = _lm_logits(params, cfg, x[:, -1:, :])[:, 0]
+    return logits, DecodeCaches(blocks=new_blocks, cross=cross), counts
+
+
+def decode_step(params: Dict, cfg: ArchConfig, token: jax.Array,
+                pos_idx: jax.Array, caches: DecodeCaches, bank=None,
+                capacity_factor: float = 2.0):
+    """One-token decode. token: (B,) int32; pos_idx: scalar int32 position.
+    Returns (logits (B,V), caches, counts)."""
+    sb = cfg.superblock_or_default()
+    x = params["embed"][token][:, None, :]  # (B, 1, d)
+    B = x.shape[0]
+    cap = X.moe_capacity(B, cfg.moe, capacity_factor) if cfg.is_moe else 0
+
+    def sb_body(x, xs):
+        if bank is not None:
+            bp_sliced, cache_sliced, cross_sliced, bank_sliced = xs
+        else:
+            bp_sliced, cache_sliced, cross_sliced = xs
+            bank_sliced = None
+        counts_out, new_caches = {}, {}
+        for pos, kind in enumerate(sb):
+            x, c, counts = _block_step(bp_sliced[str(pos)], cfg, pos, kind, x,
+                                       cache_sliced[str(pos)], pos_idx, cap,
+                                       bank_sliced, cross_sliced,
+                                       prefill=False)
+            new_caches[str(pos)] = c
+            if counts is not None:
+                counts_out[str(pos)] = counts
+        return x, (new_caches, counts_out)
+
+    xs = (params["blocks"], caches.blocks, caches.cross)
+    if bank is not None:
+        xs = xs + (bank,)
+    x, (new_blocks, counts) = _scan(sb_body, x, xs)
+    logits = _lm_logits(params, cfg, x)[:, 0]
+    return logits, DecodeCaches(blocks=new_blocks, cross=caches.cross), counts
+
+

@@ -1,0 +1,400 @@
+"""Mixture-of-Experts layer with capacity-based dispatch and a pluggable
+expert bank (dense bf16 for training, DynaExq mixed-precision for serving).
+
+Two execution regimes, one code path:
+
+* Single device (tests, CPU serving, benchmarks): ``moe_apply`` sorts the
+  token→expert assignments, scatters into a fixed-capacity (E, C, d) buffer,
+  runs the batched expert GEMM, and combines with the router gates.
+* Distributed (dry-run / launcher, via ``repro.launch.dist``): the same
+  kernel body runs inside ``shard_map`` — each data shard routes its own
+  tokens, each model shard computes only its local E/n experts
+  (``e_offset``/``e_local``), and the partial token outputs reduce with a
+  single psum over the model axis. This is the formulation GSPMD cannot
+  derive on its own (data-dependent sort/scatter) and the reason dispatch is
+  explicit here.
+
+Per-(layer, expert) selection counts — the hotness signal the DynaExq
+scheduler consumes (paper §3.5) — fall out of dispatch for free.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ver import ExpertBankQ
+from repro.models.config import MoEConfig
+from repro.models.layers import _init
+from repro.models.mlp import init_swiglu, swiglu
+from repro.quant.qtensor import dequantize
+
+
+class MoEAux(NamedTuple):
+    counts: jax.Array     # (E,) int32 — router selections this call
+    aux_loss: jax.Array   # scalar f32 — load-balance loss
+    dropped: jax.Array    # scalar f32 — fraction of assignments dropped
+
+
+def init_moe(key, d_model: int, cfg: MoEConfig) -> Dict:
+    ks = jax.random.split(key, 5)
+    E, f = cfg.num_experts, cfg.d_ff_expert
+    p = {
+        "router": _init(ks[0], (d_model, E), scale=d_model ** -0.5,
+                        dtype=jnp.float32),
+        "experts": {
+            "w_gate": _init(ks[1], (E, d_model, f)),
+            "w_up": _init(ks[2], (E, d_model, f)),
+            "w_down": _init(ks[3], (E, f, d_model)),
+        },
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_swiglu(ks[4], d_model,
+                                  cfg.d_ff_shared * cfg.n_shared_experts)
+    return p
+
+
+def effective_expert_weights(bank: Union[Dict, ExpertBankQ],
+                             e_offset: int = 0,
+                             e_local: Optional[int] = None,
+                             slot_lo: int = 0,
+                             n_slot_local: Optional[int] = None
+                             ) -> Dict[str, jax.Array]:
+    """Materialize per-expert weights (E_local, K, N) in bf16.
+
+    Dense bank: identity. DynaExq bank: dequantize the lo tier then scatter
+    the published hi versions over their owners — experts whose stable handle
+    points at a hi slot compute with hi weights, the rest with lo. Under
+    expert parallelism the bank leaves arrive pre-sliced to the local expert
+    (and hi-slot) ranges; ``slot_owner`` stays global, so owners are shifted
+    by ``e_offset`` and out-of-range owners drop out of the scatter.
+    (The Pallas serving kernel performs the same selection in-kernel without
+    materializing; this jnp path is the oracle + dry-run path.)
+    """
+    if isinstance(bank, ExpertBankQ):
+        owner = bank.slot_owner            # (n_hi,) global, after scan slicing
+        E = bank.slot_map.shape[-1]
+        e_local = e_local if e_local is not None else E
+        if n_slot_local is not None:
+            owner = jax.lax.dynamic_slice_in_dim(owner, slot_lo, n_slot_local)
+        owner = owner - e_offset
+        safe_owner = jnp.where((owner >= 0) & (owner < e_local),
+                               owner, e_local)          # OOB ⇒ dropped
+        out = {}
+        for name, qt in bank.lo.items():
+            w = dequantize(qt)             # (E_local, K, N)
+            out[name] = w.at[safe_owner].set(bank.hi[name], mode="drop")
+        return out
+    return bank
+
+
+def route(router_w: jax.Array, x: jax.Array, cfg: MoEConfig):
+    """x: (T, d) → gates (T, k), idx (T, k), probs (T, E)."""
+    logits = (x.astype(jnp.float32) @ router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, cfg.top_k)
+    if cfg.norm_topk_prob:
+        gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+    return gates, idx, probs
+
+
+def dispatch_compute(bank, x: jax.Array, idx: jax.Array, gates: jax.Array,
+                     e_local: int, capacity: int, e_offset: int = 0,
+                     n_slot_local: Optional[int] = None, slot_lo: int = 0,
+                     ff_axis=None):
+    """Sort-scatter dispatch + batched expert GEMM + gated combine.
+
+    x: (T, d); idx: (T, k) LOCAL expert ids with ``e_local`` as the
+    out-of-range sentinel; gates: (T, k) with zeros on sentinel entries.
+    Returns (y (T, d), counts (e_local,), dropped scalar).
+    """
+    T, d = x.shape
+    k = idx.shape[1]
+    fidx = idx.reshape(-1)                                   # (T*k,)
+    order = jnp.argsort(fidx, stable=True)
+    sorted_eid = fidx[order]
+    counts_all = jnp.bincount(fidx, length=e_local + 1)
+    counts = counts_all[:e_local]
+    starts = jnp.cumsum(counts_all) - counts_all
+    pos_in_e = jnp.arange(T * k, dtype=jnp.int32) - starts[sorted_eid]
+    tok = order // k                                         # source token
+
+    xg = jnp.zeros((e_local, capacity, d), x.dtype)
+    xg = xg.at[sorted_eid, pos_in_e].set(x[tok], mode="drop")
+
+    if isinstance(bank, ExpertBankQ):
+        yg = _quant_expert_ffn(bank, xg, e_offset=e_offset, e_local=e_local,
+                               slot_lo=slot_lo, n_slot_local=n_slot_local,
+                               ff_axis=ff_axis)
+    else:
+        w = bank
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xg, w["w_gate"])
+                        .astype(jnp.float32)).astype(x.dtype)
+        h = h * jnp.einsum("ecd,edf->ecf", xg, w["w_up"])
+        yg = jnp.einsum("ecf,efd->ecd", h, w["w_down"])
+
+    valid = (pos_in_e < capacity) & (sorted_eid < e_local)
+    pos_safe = jnp.minimum(pos_in_e, capacity - 1)
+    eid_safe = jnp.minimum(sorted_eid, e_local - 1)
+    y_sorted = yg[eid_safe, pos_safe]
+    gate_sorted = gates.reshape(-1)[order].astype(x.dtype)
+    contrib = jnp.where(valid[:, None], y_sorted * gate_sorted[:, None], 0)
+    # yg's output-feature dim may be data-sliced under 2-D expert sharding.
+    y = jnp.zeros((T, yg.shape[-1]), x.dtype).at[tok].add(contrib)
+
+    routed = jnp.sum(jnp.where(sorted_eid < e_local, 1.0, 0.0))
+    kept = jnp.sum(jnp.where(valid, 1.0, 0.0))
+    dropped = 1.0 - kept / jnp.maximum(routed, 1.0)
+    return y, counts.astype(jnp.int32), dropped
+
+
+def _qgemm_grouped(xg: jax.Array, packed: jax.Array, scales: jax.Array,
+                   bits: int, group: int) -> jax.Array:
+    """Group-blocked quantized expert GEMM: xg (E, C, K) × int codes (E, K, N)
+    with per-(group, N) scales applied AFTER the per-group partial matmuls —
+    the dequantized (K, N) weight matrix is never materialized. This is the
+    jnp expression of the Pallas fused quant-matmul (kernels/quant_matmul.py)
+    and cuts the decode memory term ~4× vs dequantize-then-einsum."""
+    from repro.quant.qtensor import unpack_codes_int8
+    E_, C, K = xg.shape
+    codes = unpack_codes_int8(packed, bits)          # (E, K, N) int8
+    N = codes.shape[-1]
+    G = K // group
+    # (e, g) merge into ONE batch dim (multi-batch-dim bf16 dots are not
+    # universally supported by backends).
+    xr = xg.reshape(E_, C, G, group).transpose(0, 2, 1, 3) \
+        .reshape(E_ * G, C, group)
+    qr = codes.reshape(E_ * G, group, N).astype(xg.dtype)
+    part = jnp.einsum("bcd,bdn->bcn", xr, qr,
+                      preferred_element_type=jnp.float32)
+    part = part.reshape(E_, G, C, N).transpose(0, 2, 1, 3)   # (E, C, G, N)
+    out = jnp.einsum("ecgn,egn->ecn", part,
+                     scales.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    return out.astype(xg.dtype)
+
+
+def _quant_expert_ffn(bank: ExpertBankQ, xg: jax.Array, e_offset=0,
+                      e_local: Optional[int] = None, slot_lo: int = 0,
+                      n_slot_local: Optional[int] = None,
+                      ff_axis=None) -> jax.Array:
+    """SwiGLU expert FFN on the lo tier (blocked quantized GEMMs) with the
+    published hi-precision experts overlaid: hi slots compute in bf16 and
+    their outputs replace the lo outputs of the experts they own —
+    numerically identical to swapping the weights, without materializing
+    per-expert dense weights."""
+    E_, C, d = xg.shape
+    lo = bank.lo
+    g1 = _qgemm_grouped(xg, lo["w_gate"].packed, lo["w_gate"].scales,
+                        lo["w_gate"].bits, lo["w_gate"].group_size)
+    up = _qgemm_grouped(xg, lo["w_up"].packed, lo["w_up"].scales,
+                        lo["w_up"].bits, lo["w_up"].group_size)
+    h = (jax.nn.silu(g1.astype(jnp.float32)).astype(xg.dtype) * up)
+    if ff_axis is not None:
+        # 2-D expert sharding for token-replicated decode (batch-1 long
+        # context): gate/up are FF-sliced over the otherwise-idle data axis,
+        # so each rank dequantized/read only F/|data| of every expert. The
+        # activations are tiny at decode — gathering h costs ~100 KB.
+        h = jax.lax.all_gather(h, ff_axis, axis=2, tiled=True)
+    y = _qgemm_grouped(h, lo["w_down"].packed, lo["w_down"].scales,
+                       lo["w_down"].bits, lo["w_down"].group_size)
+
+    owner = bank.slot_owner
+    if n_slot_local is not None:
+        owner = jax.lax.dynamic_slice_in_dim(owner, slot_lo, n_slot_local)
+        hi = bank.hi
+    else:
+        hi = bank.hi
+    n_slots = owner.shape[0]
+    if n_slots == 0:
+        return y
+    owner_l = owner - e_offset
+    valid = (owner_l >= 0) & (owner_l < E_)
+    safe = jnp.where(valid, owner_l, 0)
+    xh = xg[safe]                                     # (n_hi, C, d)
+    hh = jax.nn.silu(jnp.einsum("scd,sdf->scf", xh, hi["w_gate"])
+                     .astype(jnp.float32)).astype(xg.dtype)
+    hh = hh * jnp.einsum("scd,sdf->scf", xh, hi["w_up"])
+    if ff_axis is not None:
+        hh = jax.lax.all_gather(hh, ff_axis, axis=2, tiled=True)
+    yh = jnp.einsum("scf,sfd->scd", hh, hi["w_down"])
+    sentinel = jnp.where(valid, owner_l, E_)          # OOB ⇒ dropped
+    return y.at[sentinel].set(yh, mode="drop")
+
+
+def _moe_local(params: Dict, bank, x: jax.Array, cfg: MoEConfig,
+               capacity: int, e_offset, e_local: int,
+               slot_lo=0, n_slot_local: Optional[int] = None, ff_axis=None):
+    """Route + dispatch for one shard (e_offset may be traced)."""
+    E, k = cfg.num_experts, cfg.top_k
+    gates, idx, probs = route(params["router"], x, cfg)
+    sel = (idx >= e_offset) & (idx < e_offset + e_local)
+    idx_l = jnp.where(sel, idx - e_offset, e_local)          # sentinel
+    gates_l = jnp.where(sel, gates, 0.0)
+    y, counts_l, dropped = dispatch_compute(
+        bank, x, idx_l, gates_l, e_local, capacity,
+        e_offset=e_offset, slot_lo=slot_lo, n_slot_local=n_slot_local,
+        ff_axis=ff_axis)
+
+    # Load-balance aux on the full (replicated) router distribution.
+    full_counts = jnp.zeros((E + 1,), jnp.int32).at[
+        jnp.clip(idx.reshape(-1), 0, E)].add(1)[:E]
+    frac_routed = full_counts.astype(jnp.float32) / jnp.maximum(x.shape[0] * k, 1)
+    mean_prob = jnp.mean(probs, axis=0)
+    aux_loss = cfg.router_aux_coef * E * jnp.sum(frac_routed * mean_prob)
+    return y, counts_l, full_counts.astype(jnp.int32), aux_loss, dropped
+
+
+def moe_apply(params: Dict, bank: Union[Dict, ExpertBankQ], x: jax.Array,
+              cfg: MoEConfig, capacity: int) -> tuple[jax.Array, MoEAux]:
+    """Single-device path. params: {'router', ['shared']}; x: (T, d)."""
+    dist = _get_dist()
+    if dist is not None:
+        return _moe_apply_sharded(params, bank, x, cfg, capacity, dist)
+    y, counts, _full, aux_loss, dropped = _moe_local(
+        params, bank, x, cfg, capacity, 0, cfg.num_experts)
+    if "shared" in params:
+        y = y + swiglu(params["shared"], x)
+    return y, MoEAux(counts=counts, aux_loss=aux_loss, dropped=dropped)
+
+
+def _get_dist():
+    try:
+        from repro.launch.dist import get_dist
+        return get_dist()
+    except ImportError:  # pragma: no cover
+        return None
+
+
+def _moe_apply_sharded(params, bank, x, cfg: MoEConfig, capacity, dist):
+    """shard_map expert parallelism (see module docstring).
+
+    The bank is decomposed into plain dicts around the shard_map boundary
+    (PartitionSpec trees must structurally match the args; custom pytree
+    metadata like QuantizedTensor's logical shape changes under slicing)."""
+    from jax.sharding import PartitionSpec as P
+    try:
+        from jax import shard_map
+    except ImportError:  # pragma: no cover
+        from jax.experimental.shard_map import shard_map
+
+    mesh = dist.mesh
+    mn = dist.model_size
+    E = cfg.num_experts
+    if E % mn:
+        # Cannot expert-shard — run replicated (noted by the planner).
+        y, counts, _f, aux, dropped = _moe_local(params, bank, x, cfg,
+                                                 capacity, 0, E)
+        if "shared" in params:
+            y = y + swiglu(params["shared"], x)
+        return y, MoEAux(counts, aux, dropped)
+    e_local = E // mn
+    is_q = isinstance(bank, ExpertBankQ)
+    n_hi = bank.n_hi if is_q else 0
+    hi_shard = n_hi > 0 and n_hi % mn == 0
+    nh_local = n_hi // mn if hi_shard else None
+
+    dp_n = 1
+    for a in dist.dp_axes:
+        dp_n *= mesh.shape[a]
+    # capacity was computed for global T and global E; the local shard keeps
+    # the same per-expert expectation: T_loc·k·cf / E = capacity / dp_n.
+    cap_local = max(8, (capacity // dp_n + 7) // 8 * 8) \
+        if dist.tokens_dp_sharded else capacity
+
+    # FF-slice over the idle data axis when tokens are replicated (batch-1
+    # long-context decode) and every sliced dim divides: 2-D expert sharding.
+    dp1 = dist.dp_axes if len(dist.dp_axes) > 1 else dist.dp_axes[0]
+    ff_axis = None
+    if is_q and not dist.tokens_dp_sharded and dp_n > 1:
+        f_dim = bank.lo["w_gate"].packed.shape[-1]
+        d_dim = bank.lo["w_down"].packed.shape[-1]
+        if f_dim % dp_n == 0 and d_dim % dp_n == 0:
+            ff_axis = dp1
+
+    # ---- flatten bank to plain dicts + spec trees -----------------------
+    eshard = P("model")          # prefix spec: shard dim 0 (E / n_hi)
+    repl = P()
+    if is_q:
+        flat = {f"lo_packed.{n}": qt.packed for n, qt in bank.lo.items()}
+        flat.update({f"lo_scales.{n}": qt.scales for n, qt in bank.lo.items()})
+        flat.update({f"hi.{n}": a for n, a in bank.hi.items()})
+        flat["slot_owner"] = bank.slot_owner
+        flat["slot_map"] = bank.slot_map
+        meta = {n: (qt.bits, qt.group_size) for n, qt in bank.lo.items()}
+
+        def spec_of(k):
+            he = eshard if hi_shard else repl
+            if k.startswith("slot"):
+                return repl
+            base = eshard if k.startswith("lo_") else he
+            if ff_axis is not None:   # slice the last (F or D-out) dim
+                return P(*(tuple(base) + (None,) * (2 - len(tuple(base))) + (dp1,)))
+            return base
+        bank_spec = {k: spec_of(k) for k in flat}
+    else:
+        flat = dict(bank)
+        meta = None
+        bank_spec = {k: eshard for k in flat}
+
+    def rebuild(flat_l):
+        if not is_q:
+            return flat_l
+        lo = {n: QuantizedTensorLike(flat_l[f"lo_packed.{n}"],
+                                     flat_l[f"lo_scales.{n}"], *meta[n])
+              for n in bank.lo}
+        return ExpertBankQ(lo=lo, hi={n: flat_l[f"hi.{n}"] for n in bank.hi},
+                           slot_owner=flat_l["slot_owner"],
+                           slot_map=flat_l["slot_map"])
+
+    params_spec = jax.tree_util.tree_map(lambda _: repl, params)
+    x_spec = P(dist.dp_axes) if dist.tokens_dp_sharded else repl
+
+    def body(params_l, flat_l, x_l):
+        j = jax.lax.axis_index(dist.model_axis)
+        e_off = j * e_local
+        slot_lo = (j * nh_local) if hi_shard else 0
+        y, counts_l, _full, aux, dropped = _moe_local(
+            params_l, rebuild(flat_l), x_l, cfg, cap_local, e_off, e_local,
+            slot_lo=slot_lo, n_slot_local=nh_local, ff_axis=ff_axis)
+        y = jax.lax.psum(y, dist.model_axis)
+        if ff_axis is not None:   # y is D-sliced over data: gather (tiny)
+            y = jax.lax.all_gather(y, ff_axis, axis=1, tiled=True)
+        if "shared" in params_l:
+            y = y + swiglu(params_l["shared"], x_l)
+        # Global hotness counts: place the local expert slice, reduce over
+        # model (expert partition) and data (token partition).
+        counts = jnp.zeros((cfg.num_experts,), jnp.int32)
+        counts = jax.lax.dynamic_update_slice(counts, counts_l, (e_off,))
+        counts = jax.lax.psum(counts, dist.model_axis)
+        if dist.tokens_dp_sharded and dist.dp_axes:
+            counts = jax.lax.psum(counts, dist.dp_axes)
+            aux = jax.lax.pmean(aux, dist.dp_axes)
+            dropped = jax.lax.pmean(dropped, dist.dp_axes)
+        dropped = jax.lax.pmean(dropped, dist.model_axis)
+        return y, counts, aux, dropped
+
+    y, counts, aux, dropped = shard_map(
+        body, mesh=mesh,
+        in_specs=(params_spec, bank_spec, x_spec),
+        out_specs=(x_spec, repl, repl, repl),
+        check_vma=False,
+    )(params, flat, x)
+    return y, MoEAux(counts=counts, aux_loss=aux, dropped=dropped)
+
+
+class QuantizedTensorLike(NamedTuple):
+    """Local-shard view of a QuantizedTensor inside shard_map (plain tuple:
+    no global-shape metadata to go stale)."""
+    packed: jax.Array
+    scales: jax.Array
+    bits: int
+    group_size: int
+
+
+def moe_capacity(n_tokens: int, cfg: MoEConfig, factor: float | None = None) -> int:
+    f = factor if factor is not None else cfg.capacity_factor
+    cap = int(n_tokens * cfg.top_k * f / cfg.num_experts) + 1
+    # Round up to a multiple of 8 for friendlier tiling/sharding.
+    return max(8, (cap + 7) // 8 * 8)

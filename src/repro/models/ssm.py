@@ -1,0 +1,196 @@
+"""Mamba-2 block (SSD — state-space duality, arXiv:2405.21060).
+
+Implements the chunked SSD algorithm for train/prefill (quadratic within a
+chunk, linear recurrence across chunks via ``lax.scan``) and the O(1)
+recurrent step for decode. Used standalone (mamba2-130m) and inside the
+Jamba hybrid super-block.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import SSMConfig
+from repro.models.layers import _init
+
+
+class MambaCache(NamedTuple):
+    conv: jax.Array   # (B, d_conv, conv_dim) rolling window of conv inputs
+    state: jax.Array  # (B, H, P, N) SSM state
+
+
+def conv_dim(cfg: SSMConfig, d_model: int) -> int:
+    return cfg.d_inner(d_model) + 2 * cfg.n_groups * cfg.d_state
+
+
+def init_mamba(key, d_model: int, cfg: SSMConfig) -> Dict:
+    di = cfg.d_inner(d_model)
+    nh = cfg.n_heads(d_model)
+    cdim = conv_dim(cfg, d_model)
+    d_in_proj = 2 * di + 2 * cfg.n_groups * cfg.d_state + nh
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": _init(ks[0], (d_model, d_in_proj)),
+        "conv_w": _init(ks[1], (cfg.d_conv, cdim), scale=cfg.d_conv ** -0.5),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "gate_norm": {"scale": jnp.ones((di,), jnp.bfloat16)},
+        "out_proj": _init(ks[3], (di, d_model)),
+    }
+
+
+def init_mamba_cache(batch: int, d_model: int, cfg: SSMConfig,
+                     dtype=jnp.bfloat16) -> MambaCache:
+    di = cfg.d_inner(d_model)
+    nh = cfg.n_heads(d_model)
+    return MambaCache(
+        conv=jnp.zeros((batch, cfg.d_conv, conv_dim(cfg, d_model)), dtype),
+        state=jnp.zeros((batch, nh, cfg.head_dim, cfg.d_state), jnp.float32),
+    )
+
+
+def _gated_rmsnorm(p, y: jax.Array, z: jax.Array, eps: float = 1e-6):
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(var + eps)).astype(y.dtype) * p["scale"]
+
+
+def _split_proj(zxbcdt, d_model: int, cfg: SSMConfig):
+    di = cfg.d_inner(d_model)
+    gn = cfg.n_groups * cfg.d_state
+    nh = cfg.n_heads(d_model)
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di:di + di + 2 * gn]
+    dt = zxbcdt[..., di + di + 2 * gn:di + di + 2 * gn + nh]
+    return z, xBC, dt
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """a: (..., L) → (..., L, L) with out[i, j] = sum_{j<t<=i} a_t (−inf above
+    the diagonal)."""
+    L = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_forward(params: Dict, cfg: SSMConfig, d_model: int, x: jax.Array,
+                init_state: jax.Array | None = None):
+    """Full-sequence SSD. x: (B, S, d_model) → (y: (B, S, d_model),
+    final MambaCache)."""
+    B, S, _ = x.shape
+    di = cfg.d_inner(d_model)
+    nh = cfg.n_heads(d_model)
+    P, N, G = cfg.head_dim, cfg.d_state, cfg.n_groups
+    Q = cfg.chunk
+    if S % Q:
+        raise ValueError(f"seq {S} not divisible by SSD chunk {Q}")
+
+    zxbcdt = x @ params["in_proj"]
+    z, xBC, dt_raw = _split_proj(zxbcdt, d_model, cfg)
+
+    # Causal depthwise conv over the sequence.
+    K = params["conv_w"].shape[0]
+    pad = jnp.zeros((B, K - 1, xBC.shape[-1]), xBC.dtype)
+    xBC_pad = jnp.concatenate([pad, xBC], axis=1)
+    # Conv cache = last K raw inputs (decode shifts one off before appending).
+    conv_tail = xBC_pad[:, S - 1: S + K - 1]
+    windows = jnp.stack([xBC_pad[:, i:i + S] for i in range(K)], axis=2)
+    xBC = jnp.einsum("bskc,kc->bsc", windows, params["conv_w"].astype(xBC.dtype))
+    xBC = jax.nn.silu(xBC.astype(jnp.float32)).astype(x.dtype)
+
+    xh = xBC[..., :di].reshape(B, S, nh, P)
+    Bm = xBC[..., di:di + G * N].reshape(B, S, G, N)
+    Cm = xBC[..., di + G * N:].reshape(B, S, G, N)
+    hpg = nh // G
+    Bm = jnp.repeat(Bm, hpg, axis=2)  # (B, S, H, N)
+    Cm = jnp.repeat(Cm, hpg, axis=2)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(params["A_log"])                                          # (H,)
+    dA = dt * A                                                            # (B,S,H)
+
+    nc = S // Q
+    def chunked(t, shape):
+        return t.reshape(B, nc, Q, *shape)
+    xh_c = chunked(xh.astype(jnp.float32), (nh, P))
+    B_c = chunked(Bm.astype(jnp.float32), (nh, N))
+    C_c = chunked(Cm.astype(jnp.float32), (nh, N))
+    dt_c = chunked(dt, (nh,))
+    dA_c = chunked(dA, (nh,))
+
+    Acum = jnp.cumsum(dA_c, axis=2)                         # (B,nc,Q,H)
+    Lmat = jnp.exp(_segsum(jnp.moveaxis(dA_c, -1, 2)))      # (B,nc,H,Q,Q)
+
+    xdt = xh_c * dt_c[..., None]                            # (B,nc,Q,H,P)
+    y_diag = jnp.einsum("bclhn,bcshn,bchls,bcshp->bclhp",
+                        C_c, B_c, Lmat, xdt)
+
+    decay_states = jnp.exp(Acum[:, :, -1:, :] - Acum)       # (B,nc,Q,H)
+    states = jnp.einsum("bcshn,bcsh,bcshp->bchpn",
+                        B_c, decay_states * dt_c, xh_c)     # (B,nc,H,P,N)
+    chunk_decay = jnp.exp(Acum[:, :, -1, :])                # (B,nc,H)
+
+    def scan_fn(carry, xs):
+        st_in, cd = xs                                      # (B,H,P,N), (B,H)
+        new = carry * cd[..., None, None] + st_in
+        return new, carry                                   # emit state BEFORE chunk
+
+    init = init_state if init_state is not None else jnp.zeros((B, nh, P, N), jnp.float32)
+    final_state, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)           # (B,nc,H,P,N)
+
+    state_decay = jnp.exp(Acum)                             # (B,nc,Q,H)
+    y_off = jnp.einsum("bclhn,bchpn,bclh->bclhp", C_c, prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(B, S, nh, P)
+    y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = _gated_rmsnorm(params["gate_norm"], y, z)
+    out = y @ params["out_proj"]
+
+    cache = MambaCache(conv=conv_tail.astype(jnp.bfloat16), state=final_state)
+    return out, cache
+
+
+def ssd_decode_step(params: Dict, cfg: SSMConfig, d_model: int, x: jax.Array,
+                    cache: MambaCache):
+    """One-token recurrence. x: (B, 1, d_model) → (y (B,1,d_model), cache)."""
+    B = x.shape[0]
+    di = cfg.d_inner(d_model)
+    nh = cfg.n_heads(d_model)
+    P, N, G = cfg.head_dim, cfg.d_state, cfg.n_groups
+
+    zxbcdt = x[:, 0] @ params["in_proj"]
+    z, xBC, dt_raw = _split_proj(zxbcdt, d_model, cfg)
+
+    conv = jnp.concatenate([cache.conv[:, 1:], xBC[:, None, :].astype(cache.conv.dtype)], axis=1)
+    xBC = jnp.einsum("bkc,kc->bc", conv, params["conv_w"].astype(conv.dtype))
+    xBC = jax.nn.silu(xBC.astype(jnp.float32))
+
+    xh = xBC[..., :di].reshape(B, nh, P)
+    Bm = xBC[..., di:di + G * N].reshape(B, G, N)
+    Cm = xBC[..., di + G * N:].reshape(B, G, N)
+    hpg = nh // G
+    Bm = jnp.repeat(Bm, hpg, axis=1)
+    Cm = jnp.repeat(Cm, hpg, axis=1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dt * A)                                    # (B,H)
+
+    dBx = jnp.einsum("bh,bhn,bhp->bhpn", dt, Bm, xh)
+    state = cache.state * dA[..., None, None] + dBx
+    y = jnp.einsum("bhn,bhpn->bhp", Cm, state)
+    y = y + params["D"][None, :, None] * xh
+    y = y.reshape(B, di).astype(x.dtype)
+    y = _gated_rmsnorm(params["gate_norm"], y, z)
+    out = (y @ params["out_proj"])[:, None, :]
+    return out, MambaCache(conv=conv, state=state)

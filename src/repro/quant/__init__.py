@@ -1,0 +1,30 @@
+"""Quantization substrate: symmetric group-wise PTQ with int8/int4/int2 packing.
+
+This is the numeric foundation DynaExq's precision tiers are built on.
+Weights are quantized per output-channel group (``group_size`` input elements
+share one scale), packed little-endian into uint8 words, and dequantized
+either in pure jnp (reference / CPU path) or fused inside the Pallas
+quant-matmul kernels (TPU path).
+"""
+from repro.quant.qtensor import (
+    QuantizedTensor,
+    quantize,
+    dequantize,
+    pack_bits,
+    unpack_bits,
+    bits_per_element,
+    quantized_nbytes,
+)
+from repro.quant.ptq import quantize_expert_bank, quantize_tree
+
+__all__ = [
+    "QuantizedTensor",
+    "quantize",
+    "dequantize",
+    "pack_bits",
+    "unpack_bits",
+    "bits_per_element",
+    "quantized_nbytes",
+    "quantize_expert_bank",
+    "quantize_tree",
+]

@@ -1,0 +1,72 @@
+"""Post-training quantization entry points.
+
+``quantize_expert_bank`` prepares the two DynaExq weight tiers for a stacked
+expert bank; ``quantize_tree`` applies uniform static PTQ to a whole param
+pytree (the paper's static baseline) while leaving norms/embeddings/router in
+high precision — the standard weight-only PTQ recipe (GPTQ/AWQ-style scoping,
+RTN rounding).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.qtensor import QuantizedTensor, quantize
+
+# Param-name fragments that are never quantized (tiny and/or precision-critical).
+_PTQ_SKIP = ("norm", "embed", "router", "bias", "scale", "ln_", "a_log", "dt_bias", "conv")
+
+
+def _quantizable(path: str, leaf: Any, min_size: int) -> bool:
+    if not isinstance(leaf, jax.Array) and not hasattr(leaf, "shape"):
+        return False
+    if any(s in path for s in _PTQ_SKIP):
+        return False
+    if getattr(leaf, "ndim", 0) < 2:
+        return False
+    return leaf.size >= min_size
+
+
+def quantize_tree(params, bits: int, group_size: int = 64,
+                  min_size: int = 1 << 14,
+                  predicate: Callable[[str, Any], bool] | None = None):
+    """Uniform static PTQ over a param pytree. Returns a tree where matmul
+    weights are replaced by :class:`QuantizedTensor` leaves."""
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree_util.tree_structure(params)
+
+    out = []
+    for path, leaf in flat:
+        name = jax.tree_util.keystr(path).lower()
+        take = predicate(name, leaf) if predicate else _quantizable(name, leaf, min_size)
+        if take and leaf.shape[-2] % group_size == 0:
+            out.append(quantize(leaf, bits=bits, group_size=group_size))
+        else:
+            out.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def quantize_expert_bank(w: jax.Array, lo_bits: int, group_size: int = 64):
+    """Quantize a stacked expert weight ``(E, K, N)`` into the lo tier.
+
+    Returns the lo-precision :class:`QuantizedTensor` with leading expert dim.
+    The hi tier is either the original bf16 (hi_bits=16) or a higher-bit
+    QuantizedTensor prepared separately.
+    """
+    return quantize(w, bits=lo_bits, group_size=group_size)
+
+
+def dequant_or_identity(leaf, dtype=jnp.bfloat16):
+    if isinstance(leaf, QuantizedTensor):
+        return leaf.dequantize(dtype)
+    return leaf
+
+
+def dequantize_tree(params, dtype=jnp.bfloat16):
+    return jax.tree_util.tree_map(
+        lambda l: dequant_or_identity(l, dtype),
+        params,
+        is_leaf=lambda l: isinstance(l, QuantizedTensor),
+    )

@@ -1,0 +1,166 @@
+"""Symmetric group-wise quantization with sub-byte packing.
+
+Layout contract (used by both the jnp reference path and the Pallas kernels):
+
+* A weight ``w`` with shape ``(..., K, N)`` is quantized along the
+  contraction axis ``K``: every ``group_size`` consecutive rows of a column
+  share one scale.  ``scales`` has shape ``(..., K // group_size, N)``.
+* Integer codes are symmetric, ``q in [-qmax, qmax]`` with
+  ``qmax = 2**(bits-1) - 1`` (int2 uses the degenerate-but-useful
+  ``[-1, 1]`` two-level-plus-zero code the paper's Int2 tier implies).
+* Codes are stored biased (``u = q + 2**(bits-1)``) and packed
+  little-endian along ``K``: ``8 // bits`` consecutive K-rows per uint8.
+  ``packed`` has shape ``(..., K // elems_per_byte, N)`` dtype uint8.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SUPPORTED_BITS = (2, 4, 8)
+
+
+def bits_per_element(bits: int) -> int:
+    if bits not in SUPPORTED_BITS:
+        raise ValueError(f"unsupported bit-width {bits}; supported: {SUPPORTED_BITS}")
+    return bits
+
+
+def _elems_per_byte(bits: int) -> int:
+    return 8 // bits
+
+
+@jax.tree_util.register_pytree_with_keys_class
+@dataclasses.dataclass
+class QuantizedTensor:
+    """Packed integer weight + per-group scales. A pytree node.
+
+    ``shape`` is the logical (dequantized) shape; ``bits``/``group_size``
+    are static metadata (part of the treedef, not traced).
+    """
+
+    packed: jax.Array          # uint8, (..., K // epb, N)
+    scales: jax.Array          # float32/bf16, (..., K // group_size, N)
+    bits: int
+    group_size: int
+    shape: tuple               # logical (..., K, N)
+
+    def tree_flatten_with_keys(self):
+        K = jax.tree_util.GetAttrKey
+        return (((K("packed"), self.packed), (K("scales"), self.scales)),
+                (self.bits, self.group_size, tuple(self.shape)))
+
+    def tree_flatten(self):
+        return (self.packed, self.scales), (self.bits, self.group_size, tuple(self.shape))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        packed, scales = children
+        bits, group_size, shape = aux
+        return cls(packed=packed, scales=scales, bits=bits, group_size=group_size, shape=shape)
+
+    @property
+    def nbytes(self) -> int:
+        return quantized_nbytes(self.shape, self.bits, self.group_size)
+
+    def dequantize(self, dtype=jnp.bfloat16) -> jax.Array:
+        return dequantize(self, dtype=dtype)
+
+
+def quantized_nbytes(shape, bits: int, group_size: int, scale_bytes: int = 2) -> int:
+    """Device bytes of the packed representation (packed codes + scales)."""
+    n_elem = int(np.prod(shape))
+    k = shape[-2]
+    n_groups = n_elem // shape[-2] * (k // group_size)
+    return n_elem * bits // 8 + n_groups * scale_bytes
+
+
+def pack_bits(u: jax.Array, bits: int) -> jax.Array:
+    """Pack biased codes ``u`` (uint8-valued, (..., K, N)) along axis -2."""
+    epb = _elems_per_byte(bits)
+    if bits == 8:
+        return u.astype(jnp.uint8)
+    *lead, k, n = u.shape
+    if k % epb:
+        raise ValueError(f"K={k} not divisible by elems/byte={epb}")
+    u = u.astype(jnp.uint8).reshape(*lead, k // epb, epb, n)
+    shifts = (jnp.arange(epb, dtype=jnp.uint8) * bits).reshape((1,) * len(lead) + (1, epb, 1))
+    word = jnp.sum(
+        (u.astype(jnp.uint32) << shifts.astype(jnp.uint32)), axis=-2
+    ).astype(jnp.uint8)
+    return word  # (..., K // epb, N)
+
+
+def unpack_bits(packed: jax.Array, bits: int, k: int) -> jax.Array:
+    """Inverse of :func:`pack_bits`; returns biased codes (..., K, N) int32."""
+    epb = _elems_per_byte(bits)
+    if bits == 8:
+        return packed.astype(jnp.int32)
+    *lead, kp, n = packed.shape
+    if kp * epb != k:
+        raise ValueError(f"packed K={kp} * epb={epb} != K={k}")
+    mask = (1 << bits) - 1
+    shifts = (jnp.arange(epb, dtype=jnp.uint32) * bits).reshape((1,) * len(lead) + (1, epb, 1))
+    u = (packed.astype(jnp.uint32)[..., :, None, :] >> shifts) & mask
+    return u.reshape(*lead, k, n).astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("bits", "group_size", "scale_dtype"))
+def quantize(w: jax.Array, bits: int, group_size: int = 64,
+             scale_dtype=jnp.bfloat16) -> QuantizedTensor:
+    """Symmetric group-wise quantization of ``w`` (..., K, N) along K."""
+    bits_per_element(bits)
+    *lead, k, n = w.shape
+    if k % group_size:
+        raise ValueError(f"K={k} not divisible by group_size={group_size}")
+    if group_size % _elems_per_byte(bits):
+        raise ValueError(f"group_size={group_size} not divisible by elems/byte")
+    qmax = 2 ** (bits - 1) - 1
+    wf = w.astype(jnp.float32).reshape(*lead, k // group_size, group_size, n)
+    absmax = jnp.max(jnp.abs(wf), axis=-2, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax / qmax, 1.0)
+    q = jnp.clip(jnp.round(wf / scale), -qmax, qmax).astype(jnp.int32)
+    u = (q + (1 << (bits - 1))).reshape(*lead, k, n)
+    packed = pack_bits(u, bits)
+    scales = scale.squeeze(-2).astype(scale_dtype)
+    return QuantizedTensor(packed=packed, scales=scales, bits=bits,
+                           group_size=group_size, shape=tuple(w.shape))
+
+
+def unpack_codes_int8(packed: jax.Array, bits: int) -> jax.Array:
+    """Unpack to CENTERED int8 codes (..., K, N) without widening to int32 —
+    the narrow-dtype unpack used by the group-blocked quantized matmul."""
+    if bits == 8:
+        return (packed.astype(jnp.int16) - 128).astype(jnp.int8)
+    epb = _elems_per_byte(bits)
+    *lead, kp, n = packed.shape
+    mask = jnp.uint8((1 << bits) - 1)
+    shifts = (jnp.arange(epb, dtype=jnp.uint8) * bits).reshape(
+        (1,) * len(lead) + (1, epb, 1))
+    u = (packed[..., :, None, :] >> shifts) & mask
+    bias = jnp.int8(1 << (bits - 1))
+    return (u.astype(jnp.int8) - bias).reshape(*lead, kp * epb, n)
+
+
+def dequant_arrays(packed: jax.Array, scales: jax.Array, bits: int,
+                   group_size: int, dtype=jnp.bfloat16) -> jax.Array:
+    """Dequantize from raw arrays (duck-typed; usable on shard-local views).
+
+    Shapes are derived from the *arrays*, not stored metadata, so a tensor
+    whose leading (layer/expert) axes were sliced by lax.scan or shard_map
+    still dequantizes correctly."""
+    *lead, kp, n = packed.shape
+    k = kp * _elems_per_byte(bits)
+    u = unpack_bits(packed, bits, k)
+    q = u - (1 << (bits - 1))
+    qf = q.reshape(*lead, k // group_size, group_size, n).astype(jnp.float32)
+    w = qf * scales[..., :, None, :].astype(jnp.float32)
+    return w.reshape(*lead, k, n).astype(dtype)
+
+
+def dequantize(qt, dtype=jnp.bfloat16) -> jax.Array:
+    return dequant_arrays(qt.packed, qt.scales, qt.bits, qt.group_size, dtype)

@@ -1,0 +1,6 @@
+from repro.serving.engine import MoEServer, ServeConfig
+from repro.serving.requests import WORKLOADS, make_prompts
+from repro.serving.offload_baseline import OffloadServer, OffloadConfig
+
+__all__ = ["MoEServer", "ServeConfig", "WORKLOADS", "make_prompts",
+           "OffloadServer", "OffloadConfig"]

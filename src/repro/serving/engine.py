@@ -1,0 +1,231 @@
+"""MoE serving engine with DynaExq mixed-precision residency.
+
+Modes:
+* ``fp16``    — dense bf16 experts (quality/latency reference)
+* ``static``  — uniform static PTQ (paper's static baseline): lo tier only
+* ``dynaexq`` — lo tier + budget-derived hi pool driven by the online
+                controller (the paper's system)
+
+The engine owns the jitted prefill/decode closures, the per-MoE-position
+expert banks + controllers, and the serving loop instrumentation (TTFT,
+TPOP, router-trace observation, window updates).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (ControllerConfig, DynaExqController, build_bank,
+                        expert_hi_nbytes, expert_lo_nbytes, plan_budget)
+from repro.models import (decode_step, init_caches, prefill)
+from repro.models.config import ArchConfig
+
+GiB = 1 << 30
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    mode: str = "dynaexq"            # dynaexq | static | fp16
+    lo_bits: int = 4
+    hi_bits: int = 16
+    group_size: int = 64
+    hbm_gb: Optional[float] = None   # derive n_hi from a device envelope
+    n_hi_per_layer: Optional[int] = None  # or set it directly
+    max_len: int = 512
+    capacity_factor: float = 2.0
+    controller: ControllerConfig = dataclasses.field(
+        default_factory=ControllerConfig)
+    activation_slack_bytes: int = 64 << 20
+
+
+def _param_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(tree)
+               if hasattr(x, "dtype"))
+
+
+class MoEServer:
+    def __init__(self, cfg: ArchConfig, params: Dict, scfg: ServeConfig,
+                 batch: int):
+        self.cfg = cfg
+        self.scfg = scfg
+        self.batch = batch
+        sb = cfg.superblock_or_default()
+        self.moe_positions = [p for p, _ in enumerate(sb)
+                              if cfg.ffn_kind(p) == "moe"] if cfg.is_moe else []
+        self.controllers: Dict[str, DynaExqController] = {}
+        self.banks = None
+        self.params = params
+        self.stats = {"steps": 0, "prefills": 0}
+
+        if scfg.mode != "fp16" and self.moe_positions:
+            self._build_banks()
+
+        self._jit_prefill = jax.jit(
+            lambda p, b, c, banks: prefill(
+                p, cfg, b, c, bank=banks,
+                capacity_factor=scfg.capacity_factor))
+        self._jit_decode = jax.jit(
+            lambda p, t, i, c, banks: decode_step(
+                p, cfg, t, i, c, bank=banks,
+                capacity_factor=scfg.capacity_factor))
+        self.caches = None
+        self.pos = 0
+        self._counts_last: Dict = {}
+
+    # ------------------------------------------------------------------
+    def _build_banks(self):
+        cfg, scfg = self.cfg, self.scfg
+        banks = {}
+        for pos in self.moe_positions:
+            experts = self.params["blocks"][str(pos)]["moe"]["experts"]
+            shapes = {k: tuple(v.shape) for k, v in experts.items()}
+            hi_b = expert_hi_nbytes(shapes, hi_bits=scfg.hi_bits,
+                                    group_size=scfg.group_size)
+            lo_b = expert_lo_nbytes(shapes, scfg.lo_bits, scfg.group_size)
+            L = experts["w_gate"].shape[0]
+            E = experts["w_gate"].shape[1]
+            n_hi = 0
+            if scfg.mode == "dynaexq":
+                if scfg.n_hi_per_layer is not None:
+                    n_hi = scfg.n_hi_per_layer
+                elif scfg.hbm_gb is not None:
+                    nonexp = _param_bytes({k: v for k, v in self.params.items()
+                                           if k != "blocks"})
+                    kv_b = self._kv_bytes()
+                    plan = plan_budget(
+                        m_total=int(scfg.hbm_gb * GiB),
+                        m_fixed=nonexp + kv_b + scfg.activation_slack_bytes,
+                        lo_bytes_total=lo_b * L * E,
+                        hi_bytes_per_expert_layer=hi_b,
+                        n_layers=L, num_experts=E)
+                    n_hi = plan.n_hi_per_layer
+                else:
+                    n_hi = max(1, E // 8)
+            host_hi = {k: np.asarray(v) for k, v in experts.items()}
+            bank = build_bank(experts, n_hi=n_hi, lo_bits=scfg.lo_bits,
+                              group_size=scfg.group_size,
+                              hi_bits=scfg.hi_bits)
+            banks[str(pos)] = bank
+            if scfg.mode == "dynaexq" and n_hi > 0:
+                self.controllers[str(pos)] = DynaExqController(
+                    bank, host_hi, n_hi_per_layer=n_hi,
+                    hi_bytes_per_expert=hi_b, cfg=scfg.controller)
+            # Free the dense copies — the bank is now the only residency.
+            self.params["blocks"][str(pos)]["moe"]["experts"] = None
+        self.banks = banks
+
+    def _kv_bytes(self) -> int:
+        cfg = self.cfg
+        if cfg.attn is None:
+            return 0
+        sb = cfg.superblock_or_default()
+        n_attn = sum(1 for k in sb if k == "attn") * cfg.n_superblocks()
+        cap = self.scfg.max_len if cfg.attn.sliding_window is None else \
+            min(self.scfg.max_len, cfg.attn.sliding_window)
+        return (2 * self.batch * cap * cfg.attn.n_kv_heads *
+                cfg.attn.head_dim * 2 * n_attn)
+
+    def _current_banks(self):
+        if self.banks is None:
+            return None
+        out = {}
+        for pos in self.moe_positions:
+            k = str(pos)
+            out[k] = self.controllers[k].bank if k in self.controllers \
+                else self.banks[k]
+        return out
+
+    # ------------------------------------------------------------------
+    def start(self, batch: Dict) -> tuple[jax.Array, float]:
+        """Prefill. Returns (last-token logits, wall seconds)."""
+        extra = batch["tokens"].shape[1] + self.cfg.num_image_tokens
+        self.caches = init_caches(self.cfg, self.batch,
+                                  max(self.scfg.max_len, extra))
+        t0 = time.perf_counter()
+        logits, self.caches, counts = self._jit_prefill(
+            self.params, batch, self.caches, self._current_banks())
+        logits.block_until_ready()
+        dt = time.perf_counter() - t0
+        self.pos = extra
+        self._observe(counts)
+        self.stats["prefills"] += 1
+        return logits, dt
+
+    def step(self, tokens: jax.Array) -> tuple[jax.Array, float]:
+        """One decode step for the whole batch."""
+        t0 = time.perf_counter()
+        logits, self.caches, counts = self._jit_decode(
+            self.params, tokens, jnp.int32(self.pos), self.caches,
+            self._current_banks())
+        logits.block_until_ready()
+        dt = time.perf_counter() - t0
+        self.pos += 1
+        self._observe(counts)
+        self.stats["steps"] += 1
+        return logits, dt
+
+    def generate(self, batch: Dict, n_tokens: int):
+        """Greedy generation; returns (tokens, ttft_s, per_token_s list)."""
+        logits, ttft = self.start(batch)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        out, times = [tok], []
+        for _ in range(n_tokens - 1):
+            logits, dt = self.step(tok)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            out.append(tok)
+            times.append(dt)
+        return jnp.stack(out, 1), ttft, times
+
+    # ------------------------------------------------------------------
+    def _observe(self, counts: Dict) -> None:
+        self._counts_last = counts
+        if not self.controllers:
+            return
+        for k, ctl in self.controllers.items():
+            c = counts.get(k)
+            if c is not None:
+                ctl.observe(np.asarray(c))
+            ctl.maybe_update()
+
+    def force_update(self) -> None:
+        for ctl in self.controllers.values():
+            ctl.update()
+
+    def flush(self) -> None:
+        for ctl in self.controllers.values():
+            ctl.flush()
+
+    # Introspection for benchmarks/tests -------------------------------
+    def hi_sets(self) -> Dict[str, list]:
+        out = {}
+        for k, ctl in self.controllers.items():
+            L = ctl.tm.slot_map_h.shape[0]
+            out[k] = [sorted(ctl.tm.hi_set(l)) for l in range(L)]
+        return out
+
+    def expert_device_bytes(self) -> int:
+        """Resident expert bytes under the budget model (lo + hi tiers)."""
+        if self.banks is None:
+            total = 0
+            for pos in self.moe_positions:
+                total += _param_bytes(
+                    self.params["blocks"][str(pos)]["moe"]["experts"])
+            return total
+        total = 0
+        for k, bank in self.banks.items():
+            # bank.lo[n].shape is the logical dense shape (L, E, K, N).
+            shapes = {n: tuple(q.shape) for n, q in bank.lo.items()}
+            L, E = bank.slot_map.shape
+            per_lo = expert_lo_nbytes(shapes, self.scfg.lo_bits,
+                                      self.scfg.group_size)   # one expert-layer
+            per_hi = expert_hi_nbytes(shapes, hi_bits=self.scfg.hi_bits,
+                                      group_size=self.scfg.group_size)
+            n_resident = int((np.asarray(bank.slot_owner) >= 0).sum())
+            total += per_lo * L * E + n_resident * per_hi
+        return total

@@ -1,0 +1,46 @@
+"""Synthetic request workloads with controllable routing skew & shift.
+
+The paper's Fig. 2 shows the hot expert set is disjoint across text / math /
+code workloads. We reproduce the *mechanism* without real datasets: each
+workload draws tokens Zipf-distributed over a workload-specific slice of the
+vocabulary. Different input statistics → different embedding clusters →
+different router hot sets (measured, not assumed — see
+benchmarks/workload_shift.py).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+WORKLOADS = ("text", "math", "code")
+
+
+def _zipf_probs(n: int, s: float = 1.2) -> np.ndarray:
+    p = 1.0 / np.arange(1, n + 1) ** s
+    return p / p.sum()
+
+
+def make_prompts(workload: str, vocab_size: int, batch: int, length: int,
+                 seed: int = 0) -> np.ndarray:
+    """(batch, length) int32 token ids for one workload."""
+    if workload not in WORKLOADS:
+        raise KeyError(f"unknown workload {workload!r}")
+    wi = WORKLOADS.index(workload)
+    rng = np.random.default_rng(seed + 1000 * wi)
+    # Each workload occupies a third of the vocab, shuffled so slices are not
+    # trivially ordered; heavy-tailed within the slice.
+    perm = np.random.default_rng(42).permutation(vocab_size)
+    lo = wi * vocab_size // 3
+    hi = (wi + 1) * vocab_size // 3
+    slice_ids = perm[lo:hi]
+    probs = _zipf_probs(len(slice_ids))
+    draws = rng.choice(len(slice_ids), size=(batch, length), p=probs)
+    return slice_ids[draws].astype(np.int32)
+
+
+def mixed_stream(vocab_size: int, batch: int, length: int, phases,
+                 seed: int = 0):
+    """Yield (workload_name, prompts) per phase — the shifting serving mix."""
+    for i, (workload, n_batches) in enumerate(phases):
+        for j in range(n_batches):
+            yield workload, make_prompts(workload, vocab_size, batch, length,
+                                         seed=seed + 17 * i + j)

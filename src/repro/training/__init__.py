@@ -1,0 +1,10 @@
+from repro.training.adamw import adamw_init, adamw_update, AdamWConfig
+from repro.training.train import TrainConfig, make_train_step, train_loop, loss_fn
+from repro.training.data import SyntheticLMTask
+from repro.training.checkpoint import save_checkpoint, load_checkpoint
+
+__all__ = [
+    "adamw_init", "adamw_update", "AdamWConfig", "TrainConfig",
+    "make_train_step", "train_loop", "loss_fn", "SyntheticLMTask",
+    "save_checkpoint", "load_checkpoint",
+]

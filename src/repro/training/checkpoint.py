@@ -1,0 +1,49 @@
+"""Checkpointing: pytree → directory of .npy leaves + a treedef manifest.
+
+No pickle of arrays (portable, memory-mappable); QuantizedTensor leaves
+round-trip through their registered flatten/unflatten.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+
+def _sanitize(key: str) -> str:
+    return key.replace("/", "_").replace("[", "(").replace("]", ")")
+
+
+def save_checkpoint(path: str, tree, step: int | None = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    flat, treedef = jax.tree_util.tree_flatten(tree)
+    manifest = {"n_leaves": len(flat), "treedef": str(treedef), "step": step}
+    dtypes = []
+    for i, leaf in enumerate(flat):
+        arr = np.asarray(leaf)
+        dtypes.append(str(arr.dtype))
+        if arr.dtype.kind not in "biufc":   # ml_dtypes (bf16): store as f32,
+            arr = arr.astype(np.float32)    # lossless superset of bf16
+        np.save(os.path.join(path, f"leaf_{i:05d}.npy"), arr)
+    manifest["dtypes"] = dtypes
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+
+
+def load_checkpoint(path: str, like_tree):
+    """Restore into the structure of ``like_tree`` (shapes must match)."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    flat_like, treedef = jax.tree_util.tree_flatten(like_tree)
+    if manifest["n_leaves"] != len(flat_like):
+        raise ValueError(
+            f"checkpoint has {manifest['n_leaves']} leaves, expected "
+            f"{len(flat_like)}")
+    out = []
+    for i, like in enumerate(flat_like):
+        arr = np.load(os.path.join(path, f"leaf_{i:05d}.npy"))
+        out.append(jax.numpy.asarray(arr).astype(like.dtype)
+                   if hasattr(like, "dtype") else arr)
+    return jax.tree_util.tree_unflatten(treedef, out), manifest.get("step")

@@ -1,0 +1,168 @@
+"""Training loop: cross-entropy + MoE load-balance aux loss, AdamW, remat'd
+scan forward. ``make_train_step`` returns the jittable step used by both the
+CPU examples and the multi-pod dry-run (same function, different shardings).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import forward_train
+from repro.models.config import ArchConfig
+from repro.training.adamw import AdamWConfig, adamw_init, adamw_update
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: AdamWConfig = AdamWConfig()
+    capacity_factor: float = 2.0
+    remat: bool = True
+    z_loss: float = 1e-4
+    # Gradient-accumulation microbatches: divides peak activation memory by
+    # ~microbatches at the cost of re-gathering FSDP-sharded params per
+    # microbatch (§Perf trade-off, measured in EXPERIMENTS.md).
+    microbatches: int = 1
+
+
+def loss_fn(params, cfg: ArchConfig, batch: Dict, tcfg: TrainConfig):
+    logits, aux = forward_train(params, cfg, batch,
+                                capacity_factor=tcfg.capacity_factor,
+                                remat=tcfg.remat)
+    labels = batch["labels"]
+    V = logits.shape[-1]
+    if logits.shape[1] != labels.shape[1]:
+        # VLM: image-prefix positions carry no labels.
+        logits = logits[:, logits.shape[1] - labels.shape[1]:]
+    # Sharding-friendly CE: never gathers the vocab axis. The label logit is
+    # an iota-masked reduction (fuses; no one-hot materialization, no
+    # take_along_axis gather that would force a vocab all-gather under SPMD).
+    logits32 = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits32, axis=-1)                        # (B, S)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+    label_logit = jnp.sum(
+        jnp.where(vocab_iota == labels[..., None], logits32, 0.0), axis=-1)
+    nll = lse - label_logit
+    mask = (labels >= 0).astype(jnp.float32)
+    ce = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    # z-loss stabilizes the router-facing logits scale.
+    zl = tcfg.z_loss * jnp.mean(lse ** 2)
+    total = ce + aux["aux_loss"] + zl
+    return total, {"ce": ce, "aux": aux["aux_loss"], "z": zl,
+                   "counts": aux["counts"]}
+
+
+def make_train_step(cfg: ArchConfig, tcfg: TrainConfig = TrainConfig()):
+    nmb = tcfg.microbatches
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch, tcfg), has_aux=True)(params)
+
+    def train_step(params, opt_state, batch):
+        if nmb == 1:
+            (loss, metrics), grads = grads_of(params, batch)
+        else:
+            from repro.models.model import _scan
+            mbs = jax.tree_util.tree_map(
+                lambda x: x.reshape(nmb, x.shape[0] // nmb, *x.shape[1:]),
+                batch)
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def mb_body(carry, mb):
+                g_acc, l_acc = carry
+                (loss, _m), grads = grads_of(params, mb)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(jnp.float32), g_acc, grads)
+                return (g_acc, l_acc + loss), None
+
+            (g32, loss), _ = _scan(mb_body, (zeros, jnp.float32(0)), mbs)
+            grads = jax.tree_util.tree_map(
+                lambda g, p: (g / nmb).astype(p.dtype), g32, params)
+            loss = loss / nmb
+            metrics = {"ce": loss}
+        params, opt_state, opt_metrics = adamw_update(
+            tcfg.optimizer, params, grads, opt_state)
+        metrics = dict(metrics)
+        metrics.pop("counts", None)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+    return train_step
+
+
+def train_loop(cfg: ArchConfig, params, batches, tcfg: TrainConfig = TrainConfig(),
+               log_every: int = 20, log=print):
+    step_fn = jax.jit(make_train_step(cfg, tcfg))
+    opt_state = adamw_init(params)
+    history = []
+    t0 = time.perf_counter()
+    for i, batch in enumerate(batches):
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, opt_state, m = step_fn(params, opt_state, batch)
+        if i % log_every == 0 or i < 3:
+            m = {k: float(v) for k, v in m.items()}
+            m["step"] = i
+            m["wall_s"] = time.perf_counter() - t0
+            history.append(m)
+            log(f"step {i:4d}  loss {m['loss']:.4f}  ce {m['ce']:.4f}  "
+                f"aux {m['aux']:.4f}  gnorm {m['gnorm']:.2f}")
+    return params, opt_state, history
+
+
+def eval_perplexity(cfg: ArchConfig, params, batches,
+                    capacity_factor: float = 4.0, bank=None) -> float:
+    """Held-out perplexity; ``bank`` switches the MoE layers to a quantized
+    (static or DynaExq) expert bank — the quality-benchmark hook."""
+    from repro.models import prefill, init_caches  # noqa
+    total_nll, total_tok = 0.0, 0
+
+    @jax.jit
+    def batch_nll(params, batch, the_bank):
+        logits, _ = forward_train(params, cfg,
+                                  {k: v for k, v in batch.items()
+                                   if k != "labels"},
+                                  capacity_factor=capacity_factor,
+                                  remat=False) if the_bank is None else \
+            _forward_with_bank(params, cfg, batch, the_bank, capacity_factor)
+        labels = batch["labels"]
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+        return jnp.sum(nll), nll.size
+
+    for batch in batches:
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        nll, n = batch_nll(params, batch, bank)
+        total_nll += float(nll)
+        total_tok += int(n)
+    return float(jnp.exp(total_nll / total_tok))
+
+
+def _forward_with_bank(params, cfg, batch, bank, capacity_factor):
+    """Full-sequence forward through the serving (bank) path: prefill
+    without caring about the caches, returning per-position logits."""
+    from repro.models.model import (_embed_inputs, _lm_logits, _block_step)
+    sb = cfg.superblock_or_default()
+    x = _embed_inputs(params, cfg, batch)
+    B, S, d = x.shape
+    from repro.models import moe as X
+    cap = X.moe_capacity(B * S, cfg.moe, capacity_factor) if cfg.is_moe else 0
+
+    def sb_body(x, xs):
+        bp, bank_sliced = xs
+        for pos, kind in enumerate(sb):
+            x, counts, _ = _train_block_with_bank(bp[str(pos)], cfg, pos, kind,
+                                                  x, cap, bank_sliced)
+        return x, None
+
+    x, _ = jax.lax.scan(sb_body, x, (params["blocks"], bank))
+    return _lm_logits(params, cfg, x), None
+
+
+def _train_block_with_bank(bp, cfg, pos, kind, x, cap, bank):
+    from repro.models.model import _block_train
+    return _block_train(bp, cfg, pos, kind, x, cap, bank, None)

@@ -1,0 +1,9 @@
+import os
+
+# Tests run single-device: the multi-device dry-run tests spawn subprocesses
+# with their own XLA_FLAGS (jax locks device count at first init).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,66 @@
+"""BudgetTracker / SlotPool / budget planning (paper §3.3)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.budget import BudgetExceeded, BudgetTracker, plan_budget
+from repro.core.pools import SlotPool
+
+
+@settings(max_examples=60, deadline=None)
+@given(cap=st.integers(0, 1000),
+       ops=st.lists(st.integers(1, 200), max_size=40))
+def test_tracker_never_exceeds_cap(cap, ops):
+    t = BudgetTracker(cap)
+    reserved = []
+    for n in ops:
+        if t.try_reserve(n):
+            reserved.append(n)
+        assert 0 <= t.used <= cap
+        # OOM-safety invariant: used equals the sum of granted reservations
+        assert t.used == sum(reserved)
+    for n in reserved:
+        t.release(n)
+    assert t.used == 0
+
+
+def test_tracker_release_underflow():
+    t = BudgetTracker(10)
+    assert t.try_reserve(5)
+    with pytest.raises(BudgetExceeded):
+        t.release(6)
+
+
+def test_slot_pool_constant_time_semantics():
+    p = SlotPool(3)
+    s = [p.alloc(e) for e in (7, 8, 9)]
+    assert sorted(s) == [0, 1, 2] and p.n_free == 0
+    with pytest.raises(RuntimeError):
+        p.alloc(1)
+    p.free(s[1])
+    assert p.n_free == 1
+    s2 = p.alloc(42)
+    assert s2 == s[1] and p.owner(s2) == 42
+
+
+def test_plan_budget_derives_n_hi():
+    # 10 GB device, 2 GB fixed, 1 GB lo tier, hi expert = 50 MB, 16 layers.
+    plan = plan_budget(m_total=10 << 30, m_fixed=2 << 30,
+                       lo_bytes_total=1 << 30,
+                       hi_bytes_per_expert_layer=50 << 20,
+                       n_layers=16, num_experts=64)
+    assert plan.n_hi_per_layer == ((7 << 30) // ((50 << 20) * 16))
+    plan.check()
+
+
+def test_plan_budget_infeasible_lo():
+    with pytest.raises(BudgetExceeded):
+        plan_budget(m_total=1 << 30, m_fixed=512 << 20,
+                    lo_bytes_total=1 << 30, hi_bytes_per_expert_layer=1 << 20,
+                    n_layers=4, num_experts=8)
+
+
+def test_plan_budget_alignment():
+    plan = plan_budget(m_total=100 << 30, m_fixed=0, lo_bytes_total=0,
+                       hi_bytes_per_expert_layer=1 << 30, n_layers=10,
+                       num_experts=64, align=4)
+    assert plan.n_hi_per_layer % 4 == 0

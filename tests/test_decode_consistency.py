@@ -1,0 +1,79 @@
+"""Incremental decode == full forward, for every cache type (KV full, KV
+ring/sliding-window, Mamba recurrent state, enc-dec cross-attn, VLM prefix)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import (decode_step, forward_train, init_caches, init_params,
+                          prefill)
+from repro.models.frontend import audio_frame_embeddings, image_patch_embeddings
+
+CASES = ["granite-moe-1b-a400m", "mamba2-130m", "jamba-v0_1-52b",
+         "h2o-danube-3-4b", "llava-next-34b", "whisper-tiny",
+         "qwen3-moe-80b-a3b"]
+
+
+@pytest.mark.parametrize("arch", CASES)
+def test_decode_matches_full_forward(arch):
+    cfg = get_config(arch, reduced=True)
+    key = jax.random.PRNGKey(1)
+    params = init_params(key, cfg)
+    B, S, n_dec = 2, 16, 4
+    toks = jax.random.randint(key, (B, S + n_dec), 0, cfg.vocab_size)
+    batch = {"tokens": toks}
+    if cfg.family == "audio":
+        batch["audio_embeds"] = audio_frame_embeddings(key, cfg, B)
+    if cfg.family == "vlm":
+        batch["image_embeds"] = image_patch_embeddings(key, cfg, B)
+
+    # full forward over S + n_dec positions (chunk-divisible for SSD: pad)
+    pad = 0
+    if cfg.ssm is not None:
+        chunk = cfg.ssm.chunk
+        total = S + n_dec
+        pad = (-total) % chunk
+    toks_full = jnp.pad(toks, ((0, 0), (0, pad)))
+    full_logits, _ = forward_train(params, cfg, {**batch, "tokens": toks_full},
+                                   capacity_factor=8.0)
+    img = cfg.num_image_tokens if cfg.family == "vlm" else 0
+
+    caches = init_caches(cfg, B, 64 + img)
+    lg, caches, _ = prefill(params, cfg,
+                            {**batch, "tokens": toks[:, :S]}, caches,
+                            capacity_factor=8.0)
+    np.testing.assert_allclose(np.asarray(lg),
+                               np.asarray(full_logits[:, S - 1 + img]),
+                               rtol=6e-2, atol=6e-1)
+    pos = S + img
+    for i in range(n_dec):
+        lg, caches, _ = decode_step(params, cfg, toks[:, S + i],
+                                    jnp.int32(pos + i), caches,
+                                    capacity_factor=8.0)
+        np.testing.assert_allclose(np.asarray(lg),
+                                   np.asarray(full_logits[:, S + i + img]),
+                                   rtol=6e-2, atol=6e-1)
+
+
+def test_sliding_window_ring_cache_consistency():
+    """Decode far past the window: ring cache must equal full forward with
+    the same window mask."""
+    cfg = get_config("h2o-danube-3-4b", reduced=True)   # window 64 reduced
+    assert cfg.attn.sliding_window == 64
+    key = jax.random.PRNGKey(2)
+    params = init_params(key, cfg)
+    B, total = 2, 96                                    # > window
+    toks = jax.random.randint(key, (B, total), 0, cfg.vocab_size)
+    full_logits, _ = forward_train(params, cfg, {"tokens": toks})
+    S = 80
+    caches = init_caches(cfg, B, 64)                    # ring of 64 slots
+    lg, caches, _ = prefill(params, cfg, {"tokens": toks[:, :S]}, caches)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(full_logits[:, S - 1]),
+                               rtol=6e-2, atol=6e-1)
+    for i in range(S, total - 1):
+        lg, caches, _ = decode_step(params, cfg, toks[:, i], jnp.int32(i),
+                                    caches)
+        np.testing.assert_allclose(np.asarray(lg),
+                                   np.asarray(full_logits[:, i]),
+                                   rtol=6e-2, atol=6e-1)

@@ -1,0 +1,50 @@
+"""Hotness estimator (paper §3.5): EMA fold semantics."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hotness import HotnessEstimator
+
+
+def test_fold_ema_math():
+    h = HotnessEstimator(1, 3, alpha=0.5)
+    h.observe([[10, 0, 2]])
+    s1 = h.fold().copy()
+    np.testing.assert_allclose(s1, [[5.0, 0.0, 1.0]])
+    h.observe([[0, 4, 2]])
+    s2 = h.fold()
+    np.testing.assert_allclose(s2, [[2.5, 2.0, 1.5]])
+    assert h.counts.sum() == 0   # counters reset each interval
+
+
+def test_observe_accumulates_within_interval():
+    h = HotnessEstimator(2, 2, alpha=0.0)
+    h.observe([[1, 2], [3, 4]])
+    h.observe([[1, 0], [0, 1]])
+    s = h.fold()
+    np.testing.assert_allclose(s, [[2, 2], [3, 5]])
+
+
+@settings(max_examples=30, deadline=None)
+@given(alpha=st.floats(0.0, 0.99), n=st.integers(1, 20),
+       seed=st.integers(0, 999))
+def test_scores_bounded_by_max_interval_count(alpha, n, seed):
+    """EMA of nonneg counts is bounded by the max per-interval count."""
+    rng = np.random.default_rng(seed)
+    h = HotnessEstimator(1, 4, alpha=alpha)
+    mx = 0
+    for _ in range(n):
+        c = rng.integers(0, 100, size=(1, 4))
+        mx = max(mx, c.max())
+        h.observe(c)
+        h.fold()
+    assert (h.scores <= mx + 1e-9).all()
+    assert (h.scores >= 0).all()
+
+
+def test_shape_validation():
+    h = HotnessEstimator(2, 4)
+    with pytest.raises(ValueError):
+        h.observe(np.zeros((3, 4)))
+    with pytest.raises(ValueError):
+        HotnessEstimator(1, 1, alpha=1.0)

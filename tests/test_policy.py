@@ -1,0 +1,67 @@
+"""Budget-feasible top-n selection + hysteresis (paper §3.5) — property tests."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.policy import PolicyConfig, select_hi_set
+
+
+@settings(max_examples=100, deadline=None)
+@given(e=st.integers(2, 64), n_hi=st.integers(0, 16),
+       margin=st.floats(0, 10), seed=st.integers(0, 2 ** 16),
+       cur_size=st.integers(0, 16))
+def test_budget_never_exceeded(e, n_hi, margin, seed, cur_size):
+    rng = np.random.default_rng(seed)
+    scores = rng.random(e) * 100
+    current = set(rng.choice(e, size=min(cur_size, min(n_hi, e)),
+                             replace=False).tolist())
+    cfg = PolicyConfig(n_hi=n_hi, margin=margin)
+    target, promos, demos = select_hi_set(scores, current, cfg)
+    assert len(target) <= min(n_hi, e)                 # (C1) budget feasible
+    assert target == (current - set(demos)) | set(promos)
+    assert not (set(promos) & current)
+    assert set(demos) <= current
+
+
+@settings(max_examples=50, deadline=None)
+@given(e=st.integers(4, 32), seed=st.integers(0, 2 ** 16))
+def test_fills_capacity_from_empty(e, seed):
+    rng = np.random.default_rng(seed)
+    scores = rng.random(e)
+    n = e // 2
+    target, promos, _ = select_hi_set(scores, set(), PolicyConfig(n_hi=n))
+    assert len(target) == n
+    # hottest expert always selected
+    assert int(np.argmax(scores)) in target
+
+
+def test_hysteresis_prevents_churn_on_ties():
+    """Near-tie scores must not swap members (C3 stability)."""
+    scores = np.array([10.0, 10.1, 9.95, 1.0])
+    cfg = PolicyConfig(n_hi=2, margin=0.5)
+    current = {0, 2}          # scores 10.0 and 9.95; outsider 1 has 10.1
+    target, promos, demos = select_hi_set(scores, current, cfg)
+    assert target == current and not promos and not demos
+    # without margin the swap happens
+    t2, p2, d2 = select_hi_set(scores, current, PolicyConfig(n_hi=2, margin=0.0))
+    assert 1 in t2 and 2 not in t2
+
+
+def test_clear_winner_overcomes_hysteresis():
+    scores = np.array([10.0, 50.0, 9.0, 1.0])
+    target, promos, demos = select_hi_set(
+        scores, {0, 2}, PolicyConfig(n_hi=2, margin=5.0))
+    assert 1 in target and demos == [2]   # coldest demoted first
+
+
+def test_capacity_shrink_demotes_coldest():
+    scores = np.array([5.0, 4.0, 3.0, 2.0])
+    target, _, demos = select_hi_set(scores, {0, 1, 2}, PolicyConfig(n_hi=2))
+    assert target == {0, 1} and 2 in demos
+
+
+def test_transition_rate_limit():
+    scores = np.array([0.0, 0.0, 10.0, 11.0, 12.0, 13.0])
+    cfg = PolicyConfig(n_hi=2, max_transitions_per_layer=1)
+    target, promos, demos = select_hi_set(scores, {0, 1}, cfg)
+    assert len(promos) == 1 and promos[0] == 5   # hottest first
+    assert len(target) <= 2

@@ -1,0 +1,82 @@
+"""Quantization substrate: pack/unpack inverses, dequant error bounds."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.quant import (QuantizedTensor, bits_per_element, dequantize,
+                         pack_bits, quantize, quantized_nbytes, unpack_bits)
+from repro.quant.ptq import quantize_tree, dequantize_tree
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_pack_unpack_roundtrip(bits):
+    rng = np.random.default_rng(0)
+    k, n = 64, 16
+    u = rng.integers(0, 2 ** bits, size=(3, k, n)).astype(np.uint8)
+    packed = pack_bits(jnp.asarray(u), bits)
+    out = unpack_bits(packed, bits, k)
+    np.testing.assert_array_equal(np.asarray(out), u)
+
+
+@settings(max_examples=25, deadline=None)
+@given(bits=st.sampled_from([2, 4, 8]),
+       k=st.sampled_from([32, 64, 128]),
+       n=st.sampled_from([8, 24]),
+       seed=st.integers(0, 2 ** 16))
+def test_dequant_error_bound(bits, k, n, seed):
+    """Symmetric RTN error is bounded by half a quantization step per group."""
+    w = jax.random.normal(jax.random.PRNGKey(seed), (k, n), jnp.float32)
+    g = 32
+    qt = quantize(w, bits=bits, group_size=g)
+    wd = np.asarray(dequantize(qt, jnp.float32))
+    wn = np.asarray(w)
+    qmax = 2 ** (bits - 1) - 1
+    absmax = np.abs(wn.reshape(k // g, g, n)).max(1, keepdims=True)
+    step = absmax / qmax
+    err = np.abs(wn.reshape(k // g, g, n) - wd.reshape(k // g, g, n))
+    # bf16 scales add a relative rounding term.
+    assert (err <= step / 2 + absmax * 8e-3 + 1e-6).all()
+
+
+def test_quantized_nbytes_compression():
+    shape = (4, 256, 128)
+    full = int(np.prod(shape)) * 2
+    for bits, factor in [(8, 2.2), (4, 4.2), (2, 8.0)]:
+        q = quantized_nbytes(shape, bits, 64)
+        assert q < full / factor + full / 16  # packed + scales overhead
+
+
+def test_dequant_survives_leading_axis_slicing():
+    """lax.scan slices the layer axis off bank leaves — dequant must key off
+    array shapes, not stored metadata."""
+    w = jax.random.normal(jax.random.PRNGKey(0), (3, 2, 64, 16), jnp.float32)
+    qt = quantize(w, bits=4, group_size=32)
+    sliced = jax.tree_util.tree_map(lambda a: a[1], qt)
+    out = dequantize(sliced, jnp.float32)
+    want = dequantize(qt, jnp.float32)[1]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-6)
+
+
+def test_quantize_tree_scoping():
+    params = {
+        "blocks": {"w_big": jnp.ones((256, 256), jnp.bfloat16),
+                   "norm": {"scale": jnp.ones((256,), jnp.bfloat16)},
+                   "router": jnp.ones((256, 8), jnp.float32)},
+        "embed": jnp.ones((512, 64), jnp.bfloat16),
+    }
+    qt = quantize_tree(params, bits=4, group_size=64, min_size=1024)
+    assert isinstance(qt["blocks"]["w_big"], QuantizedTensor)
+    assert not isinstance(qt["blocks"]["norm"]["scale"], QuantizedTensor)
+    assert not isinstance(qt["blocks"]["router"], QuantizedTensor)
+    assert not isinstance(qt["embed"], QuantizedTensor)  # name-skipped
+    dq = dequantize_tree(qt)
+    assert dq["blocks"]["w_big"].shape == (256, 256)
+
+
+def test_bits_validation():
+    with pytest.raises(ValueError):
+        bits_per_element(3)
+    with pytest.raises(ValueError):
+        quantize(jnp.ones((64, 8)), bits=4, group_size=48)  # 48 % epb ok, 64 % 48 != 0

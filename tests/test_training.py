@@ -1,0 +1,69 @@
+"""Training substrate: learnability, optimizer math, checkpoint roundtrip."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.training import (SyntheticLMTask, TrainConfig, load_checkpoint,
+                            save_checkpoint, train_loop)
+from repro.training.adamw import AdamWConfig, adamw_init, adamw_update
+
+
+def test_loss_decreases_tiny_moe():
+    cfg = get_config("granite-moe-1b-a400m", reduced=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    task = SyntheticLMTask(cfg.vocab_size, seed=0)
+    tcfg = TrainConfig(optimizer=AdamWConfig(lr=2e-3, warmup_steps=5,
+                                             total_steps=80))
+    params, _, hist = train_loop(cfg, params, task.batches(16, 33, 80), tcfg,
+                                 log_every=79, log=lambda *_: None)
+    assert hist[-1]["loss"] < hist[0]["loss"] - 0.3
+
+
+def test_adamw_decoupled_decay_and_clip():
+    params = {"w": jnp.ones((4,), jnp.float32)}
+    grads = {"w": jnp.full((4,), 100.0)}
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, grad_clip=1.0,
+                      warmup_steps=1, total_steps=10)
+    st = adamw_init(params)
+    p2, st2, m = adamw_update(cfg, params, grads, st)
+    assert float(m["gnorm"]) > 1.0
+    assert np.all(np.isfinite(np.asarray(p2["w"])))
+    # decay-only behaviour: zero grad, nonzero decay shrinks weights
+    cfg2 = AdamWConfig(lr=0.1, weight_decay=0.5, warmup_steps=1)
+    p3, _, _ = adamw_update(cfg2, params, {"w": jnp.zeros((4,))}, adamw_init(params))
+    assert float(p3["w"][0]) < 1.0
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = get_config("granite-moe-1b-a400m", reduced=True)
+    params = init_params(jax.random.PRNGKey(3), cfg)
+    path = os.path.join(tmp_path, "ckpt")
+    save_checkpoint(path, params, step=7)
+    like = init_params(jax.random.PRNGKey(4), cfg)
+    restored, step = load_checkpoint(path, like)
+    assert step == 7
+    a = jax.tree_util.tree_leaves(params)
+    b = jax.tree_util.tree_leaves(restored)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x, np.float32),
+                                      np.asarray(y, np.float32))
+
+
+def test_synthetic_task_deterministic_and_learnable_structure():
+    t = SyntheticLMTask(128, seed=1)
+    a = t.sample(4, 32, seed=5)
+    b = t.sample(4, 32, seed=5)
+    np.testing.assert_array_equal(a, b)
+    # successors come from the table ≥ (1 - noise) of the time
+    toks = t.sample(64, 64, seed=9, noise=0.1)
+    hits = 0
+    total = 0
+    for row in toks:
+        for i in range(len(row) - 1):
+            total += 1
+            hits += row[i + 1] in t.table[row[i]]
+    assert hits / total > 0.8

@@ -1,0 +1,121 @@
+"""VER + transition pipeline: the paper's execution contract.
+
+Property tested: whatever the workload does, (i) the published handle table
+is always consistent (slot_map↔slot_owner bijective on resident experts),
+(ii) the byte budget is never exceeded, (iii) the forward pass always sees a
+fully-materialized version (hi slots referenced by slot_map hold exactly the
+host-side hi weights).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ControllerConfig, DynaExqController, build_bank,
+                        expert_hi_nbytes)
+from repro.core.ver import Residency
+
+
+def make_controller(L=2, E=8, K=64, N=32, n_hi=3, margin=0.0,
+                    rate_experts=0):
+    key = jax.random.PRNGKey(0)
+    w = {"w": jax.random.normal(key, (L, E, K, N), jnp.float32)
+         .astype(jnp.bfloat16)}
+    bank = build_bank(w, n_hi=n_hi, lo_bits=4)
+    host = {k: np.asarray(v) for k, v in w.items()}
+    hib = expert_hi_nbytes({k: v.shape for k, v in w.items()})
+    ctl = DynaExqController(
+        bank, host, n_hi_per_layer=n_hi, hi_bytes_per_expert=hib,
+        cfg=ControllerConfig(update_interval_s=0.0, alpha=0.5, margin=margin,
+                             migration_bytes_per_window=rate_experts * hib))
+    return ctl, host, hib
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), windows=st.integers(1, 8))
+def test_invariants_under_random_workload(seed, windows):
+    ctl, host, hib = make_controller()
+    rng = np.random.default_rng(seed)
+    for _ in range(windows):
+        counts = rng.integers(0, 50, size=(2, 8))
+        ctl.observe(counts)
+        ctl.update()
+        ctl.tm.check_invariants()
+    ctl.flush()
+    ctl.tm.check_invariants()
+    # published hi slots contain exactly the host hi bytes
+    sm = ctl.tm.slot_map_h
+    hi = np.asarray(ctl.bank.hi["w"])
+    for l in range(2):
+        for e in range(8):
+            if sm[l, e] >= 0:
+                np.testing.assert_array_equal(hi[l, sm[l, e]], host["w"][l, e])
+
+
+def test_hot_experts_become_resident():
+    ctl, _, _ = make_controller()
+    counts = np.zeros((2, 8), np.int64)
+    counts[:, [1, 4, 6]] = [100, 80, 60]
+    for _ in range(3):
+        ctl.observe(counts)
+        ctl.update()
+    ctl.flush()
+    for l in range(2):
+        assert ctl.tm.hi_set(l) == {1, 4, 6}
+
+
+def test_workload_shift_swaps_residency():
+    ctl, _, _ = make_controller(n_hi=2)
+    a = np.zeros((2, 8), np.int64); a[:, [0, 1]] = 100
+    b = np.zeros((2, 8), np.int64); b[:, [6, 7]] = 100
+    for _ in range(3):
+        ctl.observe(a); ctl.update()
+    ctl.flush()
+    assert ctl.tm.hi_set(0) == {0, 1}
+    for _ in range(8):   # EMA needs a few windows to cross over
+        ctl.observe(b); ctl.update()
+    ctl.flush()
+    assert ctl.tm.hi_set(0) == {6, 7}
+    assert ctl.tm.stats["demoted"] >= 4
+
+
+def test_migration_rate_limit_defers():
+    """Bounded interference: with a rate limit of one expert per window,
+    promotions trickle instead of bursting."""
+    ctl, _, hib = make_controller(n_hi=3, rate_experts=1)
+    counts = np.zeros((2, 8), np.int64)
+    counts[:, [1, 4, 6]] = [100, 80, 60]
+    ctl.observe(counts)
+    ctl.update()
+    promoted_after_one = ctl.tm.stats["promoted"]
+    assert promoted_after_one <= 2  # ≤ 1 admitted per layer window
+    for _ in range(10):
+        ctl.observe(counts); ctl.update()
+    ctl.flush()
+    assert ctl.tm.hi_set(0) == {1, 4, 6}   # eventually converges
+
+
+def test_budget_accounting_exact():
+    ctl, _, hib = make_controller(n_hi=2)
+    counts = np.zeros((2, 8), np.int64)
+    counts[:, [2, 3]] = 50
+    ctl.observe(counts); ctl.update(); ctl.flush()
+    resident = int((ctl.tm.slot_map_h >= 0).sum())
+    assert ctl.tracker.used == int(resident) * hib
+    assert ctl.tracker.used <= ctl.tracker.cap
+
+
+def test_demote_while_promoting_reclaims():
+    ctl, _, _ = make_controller(n_hi=1)
+    a = np.zeros((2, 8), np.int64); a[:, 0] = 100
+    ctl.observe(a)
+    ctl.tm.request_promotion(0, 0)
+    ctl.tm.drain()
+    # demote before publish
+    ctl.tm.state[0, 0] = Residency.DEMOTING.value
+    ctl.tm.evict_q.append((0, 0))
+    ctl.tm.drain()
+    ctl.tm.publish_ready(wait=True)
+    assert ctl.tm.slot_map_h[0, 0] == -1
+    assert ctl.tm.pools[0].n_free == 1
+    assert ctl.tracker.used == 0
