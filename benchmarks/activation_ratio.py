@@ -5,29 +5,32 @@ from __future__ import annotations
 
 import time
 
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import clone, trained_model
-from repro.serving import MoEServer, ServeConfig
+from repro.serving import (EngineConfig, InferenceEngine, Request,
+                           make_backend)
 
 
 def run(report):
     cfg, params, task = trained_model()
-    E = cfg.moe.num_experts
     rows = {}
     for stage in ("decode", "prefill"):
         for bs in (1, 2, 4, 8, 16, 32):
-            srv = MoEServer(cfg, clone(params),
-                            ServeConfig(mode="fp16", max_len=96), batch=bs)
-            toks = jnp.asarray(task.sample(bs, 32, seed=bs))
+            eng = InferenceEngine(cfg, clone(params), make_backend("fp16"),
+                                  EngineConfig(max_slots=bs, max_len=96))
+            toks = np.asarray(task.sample(bs, 32, seed=bs))
+            n_new = 2 if stage == "decode" else 1
             t0 = time.perf_counter()
-            srv.start({"tokens": toks})
-            if stage == "decode":
-                tok = jnp.zeros((bs,), jnp.int32)
-                srv.step(tok)
+            for b in range(bs):
+                eng.submit(Request(tokens=toks[b], max_new_tokens=n_new))
+            eng.drain()
             dt = time.perf_counter() - t0
-            counts = np.asarray(srv._counts_last["0"])  # (L, E)
+            if stage == "decode":
+                # Router counts of the last decode step (all bs slots live).
+                counts = np.asarray(eng.last_counts["0"])        # (L, E)
+            else:
+                counts = np.asarray(eng.backend.router_counts()["0"])
             ratio = float((counts > 0).mean())
             rows[(stage, bs)] = ratio
             report(f"activation_ratio/{stage}/bs{bs}", dt * 1e6,

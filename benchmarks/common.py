@@ -64,3 +64,21 @@ def eval_batches(task, cfg, n=6, batch=8, length=65, workload=None, seed=777):
 
 def clone(tree):
     return jax.tree_util.tree_map(lambda x: x, tree)
+
+
+def bench_backend(kind, controller=None):
+    """Shared baseline construction for the serving benchmarks: every figure
+    (serving_perf, prompt_scaling, ...) compares the SAME budget settings —
+    int4 lo tier, n_hi=2, a 2-expert offload cache at the measured PCIe —
+    so rows stay comparable across figures."""
+    from benchmarks.hw import PCIE_GBPS
+    from repro.serving import OffloadConfig, make_backend
+    if kind == "static":
+        return make_backend("static", lo_bits=4)
+    if kind == "dynaexq":
+        return make_backend("dynaexq", lo_bits=4, n_hi_per_layer=2,
+                            controller=controller)
+    if kind == "offload":
+        return make_backend("offload", ocfg=OffloadConfig(
+            cache_experts_per_layer=2, pcie_gbps=PCIE_GBPS))
+    return make_backend(kind)

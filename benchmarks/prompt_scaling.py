@@ -1,42 +1,33 @@
 """Paper Fig. 10 (and Fig. 1's motivation): TTFT vs prompt length. Longer
 prompts densify expert activation; offloading pays transfer stalls that grow
-with the activated set, DynaExq and static PTQ do not."""
+with the activated set, DynaExq and static PTQ do not. All baselines run as
+backends behind the same InferenceEngine."""
 from __future__ import annotations
 
-import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import clone, trained_model
-from benchmarks.hw import PCIE_GBPS
-from repro.serving import (MoEServer, OffloadConfig, OffloadServer,
-                           ServeConfig)
+from benchmarks.common import bench_backend, clone, trained_model
+from repro.serving import EngineConfig, InferenceEngine, Request
+
+
+def _measure_ttft(kind, cfg, params, bs, toks):
+    eng = InferenceEngine(cfg, clone(params), bench_backend(kind),
+                          EngineConfig(max_slots=bs, max_len=256))
+    handles = [eng.submit(Request(tokens=toks[b], max_new_tokens=1))
+               for b in range(bs)]
+    eng.drain()
+    return float(np.mean([h.ttft_s for h in handles]))
 
 
 def run(report):
     cfg, params, task = trained_model()
     bs = 4
     for plen in (16, 64, 192):
-        toks = jnp.asarray(task.sample(bs, plen, seed=plen))
+        toks = np.asarray(task.sample(bs, plen, seed=plen))
         row = {}
         for kind in ("static", "dynaexq", "offload"):
-            if kind == "offload":
-                srv = OffloadServer(cfg, clone(params),
-                                    OffloadConfig(cache_experts_per_layer=2,
-                                                  pcie_gbps=PCIE_GBPS),
-                                    batch=bs, max_len=256)
-                srv.start({"tokens": toks})     # warm-up compile
-                srv2 = OffloadServer(cfg, clone(params),
-                                     OffloadConfig(cache_experts_per_layer=2,
-                                                   pcie_gbps=PCIE_GBPS),
-                                     batch=bs, max_len=256)
-                _, ttft = srv2.start({"tokens": toks})
-            else:
-                scfg = ServeConfig(mode=kind if kind != "dynaexq" else "dynaexq",
-                                   lo_bits=4, n_hi_per_layer=2, max_len=256)
-                MoEServer(cfg, clone(params), scfg, batch=bs).start(
-                    {"tokens": toks})
-                srv = MoEServer(cfg, clone(params), scfg, batch=bs)
-                _, ttft = srv.start({"tokens": toks})
+            _measure_ttft(kind, cfg, params, bs, toks)   # warm-up compile
+            ttft = _measure_ttft(kind, cfg, params, bs, toks)
             row[kind] = ttft
             report(f"prompt_scaling/ttft/{kind}/len{plen}", ttft * 1e6,
                    round(ttft, 4))

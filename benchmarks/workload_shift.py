@@ -1,16 +1,18 @@
 """Paper Fig. 2: hot-set identity shifts across workloads (text/math/code).
 Measures top-k hot sets per workload on the trained model and reports their
-pairwise overlap (paper observes full disjointness of top-10)."""
+pairwise overlap (paper observes full disjointness of top-10). Counts come
+from the backend's uniform router-trace accumulator — the same observation
+channel the DynaExq controller consumes."""
 from __future__ import annotations
 
 import itertools
 import time
 
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import clone, trained_model
-from repro.serving import MoEServer, ServeConfig, make_prompts
+from repro.serving import (EngineConfig, InferenceEngine, Request,
+                           make_backend, make_prompts)
 from repro.serving.requests import WORKLOADS
 
 
@@ -26,20 +28,21 @@ def run(report):
     tops = {}
     t0 = time.perf_counter()
     for w in WORKLOADS:
-        srv = MoEServer(cfg, clone(params),
-                        ServeConfig(mode="fp16", max_len=96), batch=8)
-        agg = np.zeros((cfg.n_layers, E), np.int64)
+        eng = InferenceEngine(cfg, clone(params), make_backend("fp16"),
+                              EngineConfig(max_slots=8, max_len=96))
         for i in range(4):
-            toks = jnp.asarray(make_prompts(w, cfg.vocab_size, 8, 48,
-                                            seed=100 + i))
-            srv.start({"tokens": toks})
-            agg += np.asarray(srv._counts_last["0"])
-        tops[w] = [hot_set(agg[l], k) for l in range(cfg.n_layers)]
+            toks = make_prompts(w, cfg.vocab_size, 8, 48, seed=100 + i)
+            for b in range(8):
+                eng.submit(Request(tokens=toks[b], max_new_tokens=1,
+                                   workload=w))
+            eng.drain()
+        agg = np.asarray(eng.backend.router_counts()["0"])   # (L, E)
+        tops[w] = [hot_set(agg[layer], k) for layer in range(cfg.n_layers)]
     dt = time.perf_counter() - t0
     overlaps = []
     for a, b in itertools.combinations(WORKLOADS, 2):
-        per_layer = [len(tops[a][l] & tops[b][l]) / k
-                     for l in range(cfg.n_layers)]
+        per_layer = [len(tops[a][layer] & tops[b][layer]) / k
+                     for layer in range(cfg.n_layers)]
         ov = float(np.mean(per_layer))
         overlaps.append(ov)
         report(f"workload_shift/top{k}_overlap/{a}-{b}", 0.0, round(ov, 3))

@@ -1,15 +1,15 @@
 """Quickstart: build a reduced MoE, train it briefly, quantize it, and serve
-it with DynaExq online precision allocation.
+it with the request-level InferenceEngine + a DynaExq residency backend.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.core import ControllerConfig
 from repro.models import init_params
-from repro.serving import MoEServer, ServeConfig, make_prompts
+from repro.serving import (EngineConfig, InferenceEngine, Request,
+                           make_backend, make_prompts)
 from repro.training import SyntheticLMTask, TrainConfig, train_loop
 from repro.training.adamw import AdamWConfig
 
@@ -26,23 +26,30 @@ def main():
     params = init_params(jax.random.PRNGKey(0), cfg)
     task = SyntheticLMTask(cfg.vocab_size, seed=0)
     tcfg = TrainConfig(optimizer=AdamWConfig(lr=2e-3, total_steps=60))
-    params, _, hist = train_loop(cfg, params, task.batches(16, 65, 60), tcfg,
-                                 log_every=20)
+    params, _, _ = train_loop(cfg, params, task.batches(16, 65, 60), tcfg,
+                              log_every=20)
 
     # 3. Serve with DynaExq: int4 lo tier always resident, a budget-limited
-    #    bf16 hi pool, residency driven online by router traces.
-    srv = MoEServer(
-        cfg, params,
-        ServeConfig(mode="dynaexq", lo_bits=4, n_hi_per_layer=1, max_len=96,
-                    controller=ControllerConfig(update_interval_s=0.0)),
-        batch=4)
-    prompts = jnp.asarray(make_prompts("text", cfg.vocab_size, 4, 32))
-    out, ttft, times = srv.generate({"tokens": prompts}, 8)
-    srv.flush()
-    print(f"generated {out.shape}  TTFT={ttft*1e3:.1f}ms  "
-          f"TPOP={1e3*sum(times)/len(times):.1f}ms")
-    print("hi-precision residency per layer:", srv.hi_sets()["0"])
-    print("transition stats:", srv.controllers["0"].tm.stats)
+    #    bf16 hi pool, residency driven online by router traces. The backend
+    #    is pluggable — swap "dynaexq" for "fp16", "static" or "offload" and
+    #    the exact same engine loop runs that strategy instead.
+    backend = make_backend("dynaexq", lo_bits=4, n_hi_per_layer=1,
+                           controller=ControllerConfig(update_interval_s=0.0))
+    engine = InferenceEngine(cfg, params, backend,
+                             EngineConfig(max_slots=4, max_len=96))
+
+    # 4. Request-level serving: submit → step/drain → handles. Requests are
+    #    admitted into KV-cache slots as they free up (continuous batching).
+    prompts = make_prompts("text", cfg.vocab_size, 4, 32)
+    handles = [engine.submit(Request(tokens=prompts[i], max_new_tokens=8))
+               for i in range(4)]
+    engine.drain()
+    engine.flush()
+    st = engine.stats()
+    print(f"generated {[len(h.tokens) for h in handles]} tokens/request  "
+          f"TTFT={st['ttft_s']*1e3:.1f}ms  TPOT={st['tpot_s']*1e3:.1f}ms")
+    print("hi-precision residency per layer:", backend.hi_sets()["0"])
+    print("uniform serving stats:", {k: round(v, 4) for k, v in st.items()})
 
 
 if __name__ == "__main__":

@@ -2,34 +2,39 @@
 
   1. train a ~small MoE for a few hundred steps on the synthetic LM task,
   2. prepare DynaExq weight tiers (int2 lo / bf16 hi) under a device budget,
-  3. serve a SHIFTING workload mix (text → math → code),
+  3. serve a SHIFTING request stream (text → math → code) through the
+     continuous-batching InferenceEngine,
   4. watch the controller re-allocate the hi-precision budget online and
-     compare quality/latency against static PTQ at the same footprint.
+     compare footprint/stats against static PTQ at the same engine loop.
 
     PYTHONPATH=src python examples/serve_dynaexq.py [--steps 200]
 """
 import argparse
+import dataclasses
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config
 from repro.core import ControllerConfig
 from repro.models import init_params
-from repro.serving import MoEServer, ServeConfig
-from repro.serving.requests import WORKLOADS, make_prompts
+from repro.serving import (EngineConfig, InferenceEngine, RequestStream,
+                           make_backend)
+from repro.serving.requests import WORKLOADS
 from repro.training import SyntheticLMTask, TrainConfig, train_loop
 from repro.training.adamw import AdamWConfig
 
 
-def build_server(cfg, params, mode):
-    return MoEServer(
-        cfg, jax.tree_util.tree_map(lambda x: x, params),
-        ServeConfig(mode=mode, lo_bits=2, n_hi_per_layer=2, max_len=128,
-                    controller=ControllerConfig(update_interval_s=0.0,
-                                                alpha=0.6, margin=0.5)),
-        batch=4)
+def build_engine(cfg, params, kind):
+    if kind == "dynaexq":
+        backend = make_backend(
+            "dynaexq", lo_bits=2, n_hi_per_layer=2,
+            controller=ControllerConfig(update_interval_s=0.0,
+                                        alpha=0.6, margin=0.5))
+    else:
+        backend = make_backend("static", lo_bits=2)
+    return InferenceEngine(
+        cfg, jax.tree_util.tree_map(lambda x: x, params), backend,
+        EngineConfig(max_slots=4, max_len=128))
 
 
 def main():
@@ -38,7 +43,6 @@ def main():
     args = ap.parse_args()
 
     cfg = get_config("granite-moe-1b-a400m", reduced=True)
-    import dataclasses
     cfg = dataclasses.replace(
         cfg, n_layers=4,
         moe=dataclasses.replace(cfg.moe, num_experts=8, top_k=2))
@@ -49,22 +53,27 @@ def main():
     params, _, _ = train_loop(cfg, params, task.batches(16, 65, args.steps),
                               tcfg, log_every=50)
 
-    print("=== serving a shifting workload mix ===")
-    dyn = build_server(cfg, params, "dynaexq")
-    stat = build_server(cfg, params, "static")
+    print("=== serving a shifting request stream ===")
+    dyn = build_engine(cfg, params, "dynaexq")
+    stat = build_engine(cfg, params, "static")
     for phase, workload in enumerate(WORKLOADS):
-        for i in range(3):
-            toks = jnp.asarray(make_prompts(workload, cfg.vocab_size, 4, 48,
-                                            seed=phase * 10 + i))
-            dyn.generate({"tokens": toks}, 6)
-            stat.generate({"tokens": toks}, 6)
+        stream = RequestStream(cfg.vocab_size, phases=[(workload, 12)],
+                               prompt_len=48, prompt_len_jitter=8,
+                               max_new_tokens=6, seed=phase * 10)
+        for req in stream:
+            dyn.submit(req)
+            stat.submit(req)
+        dyn.drain()
+        stat.drain()
         dyn.flush()
         print(f"phase {phase} ({workload:5s}): hi-sets layer0..3 = "
-              f"{dyn.hi_sets()['0']}")
-    ctl = dyn.controllers["0"]
-    print("controller stats:", ctl.tm.stats)
-    print(f"expert bytes: dynaexq={dyn.expert_device_bytes():,}  "
-          f"static={stat.expert_device_bytes():,}")
+              f"{dyn.backend.hi_sets()['0']}")
+    print("dynaexq stats:", {k: round(v, 4)
+                             for k, v in dyn.stats().items()})
+    print("static  stats:", {k: round(v, 4)
+                             for k, v in stat.stats().items()})
+    print(f"expert bytes: dynaexq={dyn.device_bytes():,}  "
+          f"static={stat.device_bytes():,}")
     print("(hi sets follow the workload: promotions+demotions above zero,\n"
           " budget invariant held by construction — see tests/)")
 

@@ -33,7 +33,10 @@ class ControllerConfig:
 class DynaExqController:
     def __init__(self, bank: ExpertBankQ, host_hi: Dict[str, np.ndarray],
                  n_hi_per_layer: int, hi_bytes_per_expert: int,
-                 cfg: ControllerConfig = ControllerConfig()):
+                 cfg: Optional[ControllerConfig] = None):
+        # A dataclass default instance would be shared (and mutated) across
+        # every controller; each controller gets its own config.
+        cfg = cfg if cfg is not None else ControllerConfig()
         L, E = bank.slot_map.shape
         self.cfg = cfg
         self.hotness = HotnessEstimator(L, E, alpha=cfg.alpha)
@@ -69,8 +72,7 @@ class DynaExqController:
         scores = self.hotness.fold()
         L = scores.shape[0]
         for l in range(L):
-            current = self.tm.hi_set(l) | {
-                int(p.expert) for p in self.tm._pending if p.layer == l}
+            current = self.tm.hi_set(l) | self.tm.pending_experts(l)
             _, promos, demos = select_hi_set(scores[l], current, self.policy)
             for e in demos:
                 self.tm.request_demotion(l, int(e))

@@ -168,6 +168,11 @@ class TransitionManager:
     def hi_set(self, layer: int) -> set[int]:
         return {int(e) for e in np.nonzero(self.slot_map_h[layer] >= 0)[0]}
 
+    def pending_experts(self, layer: int) -> set[int]:
+        """Experts with an in-flight (issued, unpublished) promotion on
+        ``layer`` — the policy must treat these as already hi."""
+        return {int(p.expert) for p in self._pending if p.layer == layer}
+
     def check_invariants(self) -> None:
         """VER invariants (tested property-based): every published handle
         resolves to a slot owned by that expert; budget counts match."""

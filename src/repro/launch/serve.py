@@ -4,26 +4,43 @@ On this CPU container it runs the reduced configs end to end (the full
 configs are exercised by the dry-run); on a real TPU slice the same command
 serves the full config under the production mesh:
 
-    python -m repro.launch.serve --arch granite-moe-1b-a400m --mode dynaexq \
-        --batch 4 --prompt-len 32 --new-tokens 16 [--full]
+    python -m repro.launch.serve --arch granite-moe-1b-a400m \
+        --backend dynaexq --batch 4 --prompt-len 32 --new-tokens 16 [--full]
 """
 import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ARCH_IDS, get_config
 from repro.core import ControllerConfig
 from repro.models import init_params
-from repro.serving import MoEServer, ServeConfig, make_prompts
+from repro.serving import (BACKENDS, EngineConfig, InferenceEngine,
+                           OffloadConfig, Request, make_backend, make_prompts)
+
+
+def build_backend(args):
+    """CLI name → ResidencyBackend construction (builder code — the engine
+    itself is backend-agnostic)."""
+    if args.backend == "dynaexq":
+        return make_backend(
+            "dynaexq", lo_bits=args.lo_bits,
+            n_hi_per_layer=None if args.hbm_gb else args.n_hi,
+            hbm_gb=args.hbm_gb,
+            controller=ControllerConfig(update_interval_s=0.25))
+    if args.backend == "static":
+        return make_backend("static", lo_bits=args.lo_bits)
+    if args.backend == "offload":
+        return make_backend("offload", ocfg=OffloadConfig(
+            cache_experts_per_layer=args.n_hi * 2))
+    return make_backend(args.backend)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-moe-1b-a400m", choices=ARCH_IDS)
-    ap.add_argument("--mode", default="dynaexq",
-                    choices=["dynaexq", "static", "fp16"])
+    ap.add_argument("--backend", "--mode", dest="backend", default="dynaexq",
+                    choices=sorted(BACKENDS))
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
@@ -37,30 +54,29 @@ def main():
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=not args.full)
-    print(f"[serve] {cfg.name} mode={args.mode} devices={jax.device_count()}")
+    print(f"[serve] {cfg.name} backend={args.backend} "
+          f"devices={jax.device_count()}")
     params = init_params(jax.random.PRNGKey(0), cfg)
-    srv = MoEServer(
-        cfg, params,
-        ServeConfig(mode=args.mode, lo_bits=args.lo_bits,
-                    n_hi_per_layer=None if args.hbm_gb else args.n_hi,
-                    hbm_gb=args.hbm_gb,
-                    max_len=args.prompt_len + args.new_tokens + 8,
-                    controller=ControllerConfig(update_interval_s=0.25)),
-        batch=args.batch)
-    toks = jnp.asarray(make_prompts(args.workload, cfg.vocab_size,
-                                    args.batch, args.prompt_len))
+    engine = InferenceEngine(
+        cfg, params, build_backend(args),
+        EngineConfig(max_slots=args.batch,
+                     max_len=args.prompt_len + args.new_tokens + 8))
+    toks = make_prompts(args.workload, cfg.vocab_size,
+                        args.batch, args.prompt_len)
     t0 = time.perf_counter()
-    out, ttft, times = srv.generate({"tokens": toks}, args.new_tokens)
-    srv.flush()
+    handles = [engine.submit(Request(tokens=toks[b],
+                                     max_new_tokens=args.new_tokens))
+               for b in range(args.batch)]
+    engine.drain()
+    engine.flush()
     wall = time.perf_counter() - t0
-    tput = args.batch * args.new_tokens / wall
-    print(f"[serve] TTFT {ttft*1e3:.1f} ms  TPOP "
-          f"{1e3*sum(times)/max(len(times),1):.1f} ms  "
-          f"throughput {tput:.2f} tok/s")
-    if srv.controllers:
-        ctl = next(iter(srv.controllers.values()))
-        print(f"[serve] transitions: {ctl.tm.stats}")
-        print(f"[serve] resident expert bytes: {srv.expert_device_bytes():,}")
+    tput = sum(len(h.tokens) for h in handles) / wall
+    st = engine.stats()
+    print(f"[serve] TTFT {st['ttft_s']*1e3:.1f} ms  TPOT "
+          f"{st['tpot_s']*1e3:.1f} ms  throughput {tput:.2f} tok/s")
+    print(f"[serve] uniform stats: "
+          f"{ {k: round(float(v), 4) for k, v in st.items()} }")
+    print(f"[serve] resident expert bytes: {engine.device_bytes():,}")
 
 
 if __name__ == "__main__":

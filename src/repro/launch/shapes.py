@@ -169,7 +169,7 @@ def build_dryrun(arch: str, shape: str, mesh, *, lo_bits: int = 4,
                 lambda w: build_bank(w, n_hi=nh, lo_bits=lo_bits), ew)
         bank_abs = banks
         # Serving never carries the dense experts — drop them (VER owns
-        # residency), mirroring MoEServer._build_banks.
+        # residency), mirroring the quantized backends' materialize_banks.
         params_abs = jax.eval_shape(lambda p: _strip_experts(p, cfg), params_abs)
         params_sh = planner.tree_shardings(params_abs, "param")
     bank_sh = planner.tree_shardings(bank_abs, "param") if bank_abs else None

@@ -249,29 +249,34 @@ def attention_prefill(p: Param, cfg: AttnConfig, x: jax.Array,
 
 def attention_decode(p: Param, cfg: AttnConfig, x: jax.Array, pos: jax.Array,
                      cache: KVCache) -> tuple[jax.Array, KVCache]:
-    """One-token decode. ``x``: (B, 1, d); ``pos``: scalar int32 (position of
-    the new token). Works for both full and ring caches. All dots are
-    single-batch-dim bf16 matmuls on the head-major cache (see KVCache)."""
+    """One-token decode. ``x``: (B, 1, d); ``pos``: scalar int32 or (B,)
+    int32 vector of per-sequence positions (continuous batching: every slot
+    tracks its own request's position). Works for both full and ring caches.
+    All dots are single-batch-dim bf16 matmuls on the head-major cache (see
+    KVCache)."""
     B = x.shape[0]
     C = cache.capacity
-    positions = jnp.full((1, 1), pos, jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    pos_b = jnp.broadcast_to(pos, (B,)) if pos.ndim == 0 else pos  # (B,)
+    positions = pos_b[:, None]                                    # (B, 1)
     q, k, v = _project_qkv(p, cfg, x, positions)       # k/v: (B, 1, Hkv, hd)
-    slot = jnp.mod(pos, C)
+    slot = jnp.mod(pos_b, C)                                      # (B,)
     # Masked update instead of dynamic_update_slice: SPMD partitions a
     # dynamic-index DUS over the sharded seq axis through an f32 masked
     # fallback (measured ~4x the bytes); the explicit where-mask stays bf16
     # and costs exactly one cache read+write.
-    slot_mask = (jnp.arange(C) == slot)[None, None, :, None]
+    slot_mask = (jnp.arange(C)[None, :] == slot[:, None])[:, None, :, None]
     new_k = jnp.where(slot_mask, k.transpose(0, 2, 1, 3), cache.k)
     new_v = jnp.where(slot_mask, v.transpose(0, 2, 1, 3), cache.v)
-    # Absolute position held by each slot after the write.
-    idx = jnp.arange(C)
+    # Absolute position held by each slot after the write, per sequence.
+    idx = jnp.arange(C)[None, :]
     if cfg.sliding_window is None:
-        valid = idx <= pos
+        valid = idx <= pos_b[:, None]                             # (B, C)
     else:
         # slot i holds the largest position p' <= pos with p' % C == i.
-        slot_pos = pos - jnp.mod(pos - idx, C)
-        valid = (slot_pos >= 0) & (slot_pos > pos - cfg.sliding_window)
+        slot_pos = pos_b[:, None] - jnp.mod(pos_b[:, None] - idx, C)
+        valid = (slot_pos >= 0) & \
+            (slot_pos > pos_b[:, None] - cfg.sliding_window)
 
     H, hd = cfg.n_heads, cfg.head_dim
     Hkv = cfg.n_kv_heads
@@ -284,7 +289,9 @@ def attention_decode(p: Param, cfg: AttnConfig, x: jax.Array, pos: jax.Array,
     # makes the CPU lowering convert the ENTIRE cache to f32 every layer,
     # which would poison the roofline bytes and the real TPU layout alike).
     logits = jnp.einsum("brd,bkd->brk", qg, kf).astype(jnp.float32) * hd ** -0.5
-    logits = jnp.where(valid[None, None, :], logits, -1e30)
+    # valid (B, C) → rows of the (B·Hkv) flattened batch, b-major like kf.
+    logits = jnp.where(jnp.repeat(valid, Hkv, axis=0)[:, None, :],
+                       logits, -1e30)
     probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
     out = jnp.einsum("brk,bkd->brd", probs, vf)        # (B·Hkv, rep, hd)
     out = out.reshape(B, 1, H * hd)

@@ -329,7 +329,9 @@ def prefill(params: Dict, cfg: ArchConfig, batch: Dict, caches: DecodeCaches,
 def decode_step(params: Dict, cfg: ArchConfig, token: jax.Array,
                 pos_idx: jax.Array, caches: DecodeCaches, bank=None,
                 capacity_factor: float = 2.0):
-    """One-token decode. token: (B,) int32; pos_idx: scalar int32 position.
+    """One-token decode. token: (B,) int32; pos_idx: scalar int32 position,
+    or a (B,) int32 vector of per-sequence positions (continuous batching —
+    each KV-cache slot advances at its own request's offset).
     Returns (logits (B,V), caches, counts)."""
     sb = cfg.superblock_or_default()
     x = params["embed"][token][:, None, :]  # (B, 1, d)

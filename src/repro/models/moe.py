@@ -279,6 +279,11 @@ def _moe_apply_sharded(params, bank, x, cfg: MoEConfig, capacity, dist):
     except ImportError:  # pragma: no cover
         from jax.experimental.shard_map import shard_map
 
+    import inspect
+    # jax ≥ 0.6 renamed check_rep → check_vma; support both.
+    check_kw = "check_vma" if "check_vma" in \
+        inspect.signature(shard_map).parameters else "check_rep"
+
     mesh = dist.mesh
     mn = dist.model_size
     E = cfg.num_experts
@@ -379,7 +384,7 @@ def _moe_apply_sharded(params, bank, x, cfg: MoEConfig, capacity, dist):
         body, mesh=mesh,
         in_specs=(params_spec, bank_spec, x_spec),
         out_specs=(x_spec, repl, repl, repl),
-        check_vma=False,
+        **{check_kw: False},
     )(params, flat, x)
     return y, MoEAux(counts=counts, aux_loss=aux, dropped=dropped)
 

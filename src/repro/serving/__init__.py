@@ -1,6 +1,16 @@
-from repro.serving.engine import MoEServer, ServeConfig
-from repro.serving.requests import WORKLOADS, make_prompts
-from repro.serving.offload_baseline import OffloadServer, OffloadConfig
+from repro.serving.backends import (BACKENDS, DynaExqBackend, Fp16Backend,
+                                    LRUSet, OffloadBackend, OffloadConfig,
+                                    ResidencyBackend, STAT_KEYS,
+                                    StaticPTQBackend, make_backend)
+from repro.serving.engine import (EngineConfig, InferenceEngine,
+                                  RequestHandle, RequestState)
+from repro.serving.requests import (Request, RequestStream, WORKLOADS,
+                                    make_prompts, mixed_stream)
 
-__all__ = ["MoEServer", "ServeConfig", "WORKLOADS", "make_prompts",
-           "OffloadServer", "OffloadConfig"]
+__all__ = [
+    "BACKENDS", "DynaExqBackend", "EngineConfig", "Fp16Backend",
+    "InferenceEngine", "LRUSet", "OffloadBackend", "OffloadConfig",
+    "Request", "RequestHandle", "RequestState", "RequestStream",
+    "ResidencyBackend", "STAT_KEYS", "StaticPTQBackend", "WORKLOADS",
+    "make_backend", "make_prompts", "mixed_stream",
+]

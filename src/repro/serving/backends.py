@@ -1,0 +1,452 @@
+"""Pluggable expert-residency backends for the serving engine.
+
+The paper's DynaExq controller is one point in a family of budget-constrained
+residency strategies (static PTQ, offloading/prefetch, dense fp16). Each
+strategy is a ``ResidencyBackend``: the engine owns requests, caches and the
+jitted forward closures; the backend owns *where expert weights live* and
+what moving them costs. All four backends run through literally the same
+``InferenceEngine.step()`` loop, so the DynaExq-vs-offload comparison is
+structural, not an artifact of two different serving loops.
+
+Protocol (one backend instance per engine):
+
+* ``materialize_banks(cfg, params, kv_bytes)`` — build the device-resident
+  weight tiers; returns the per-MoE-position bank mapping the engine passes
+  into the jitted forward (``None`` ⇒ dense bf16 experts from ``params``).
+* ``observe(counts, compute_s, prefill)`` — per-forward router-trace hook;
+  returns modeled *stall seconds* to charge to the step's critical path
+  (non-zero only for demand-fetch strategies like offloading).
+* ``tick()`` — window boundary: run policies, publish completed transitions.
+* ``device_bytes()`` — resident expert bytes under this strategy's budget.
+* ``stats()`` — uniform serving stats: ``{ttft_s, tpot_s, stall_s,
+  bytes_moved, promotions, demotions}`` (zeros where N/A), plus
+  backend-specific extras.
+* ``flush()`` — barrier on in-flight transitions (shutdown / tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Dict, Iterable, Optional, Protocol, runtime_checkable
+
+import jax
+import numpy as np
+
+from repro.core import (ControllerConfig, DynaExqController, build_bank,
+                        expert_hi_nbytes, expert_lo_nbytes, plan_budget)
+from repro.models.config import ArchConfig
+
+GiB = 1 << 30
+
+#: Keys every backend's ``stats()`` must return (zeros where N/A).
+STAT_KEYS = ("ttft_s", "tpot_s", "stall_s", "bytes_moved",
+             "promotions", "demotions")
+
+
+def _param_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(tree)
+               if hasattr(x, "dtype"))
+
+
+@runtime_checkable
+class ResidencyBackend(Protocol):
+    """Structural interface the engine programs against (no isinstance /
+    mode-string branching anywhere in the serving loop)."""
+
+    name: str
+
+    def materialize_banks(self, cfg: ArchConfig, params: Dict,
+                          kv_bytes: int) -> Optional[Dict]: ...
+
+    def observe(self, counts: Dict, compute_s: float = 0.0,
+                prefill: bool = False) -> float: ...
+
+    def tick(self) -> None: ...
+
+    def device_bytes(self) -> int: ...
+
+    def stats(self) -> Dict[str, float]: ...
+
+    def flush(self) -> None: ...
+
+
+class LRUSet:
+    """O(1) LRU set over expert ids (OrderedDict: ``move_to_end`` on hit,
+    ``popitem(last=False)`` on eviction). Replaces the earlier O(n)
+    list-based LRU in the offload path."""
+
+    def __init__(self, size: int, init: Optional[Iterable[int]] = None):
+        self.size = size
+        self._od: OrderedDict[int, None] = OrderedDict()
+        if init is not None:
+            for e in init:
+                self.add(int(e))
+
+    def __contains__(self, e: int) -> bool:
+        return e in self._od
+
+    def __len__(self) -> int:
+        return len(self._od)
+
+    def hit(self, e: int) -> bool:
+        """Refresh ``e`` if cached; returns whether it was a hit."""
+        if e in self._od:
+            self._od.move_to_end(e)
+            return True
+        return False
+
+    def add(self, e: int) -> None:
+        """Insert ``e`` as most-recent, evicting the LRU entry on overflow."""
+        self._od[e] = None
+        self._od.move_to_end(e)
+        while len(self._od) > self.size:
+            self._od.popitem(last=False)
+
+    def touch(self, e: int) -> bool:
+        """Hit-or-insert; returns True on hit (classic LRU access)."""
+        if self.hit(e):
+            return True
+        self.add(e)
+        return False
+
+    def order(self) -> list[int]:
+        """Entries LRU-first (introspection/tests)."""
+        return list(self._od)
+
+
+class _BackendBase:
+    """Shared accounting: latency aggregation (TTFT/TPOT as observed by the
+    engine) and router-count accumulation (the uniform hotness signal)."""
+
+    name = "base"
+
+    def __init__(self):
+        self._ttft: list[float] = []
+        self._tpot: list[float] = []
+        self._counts_sum: Dict[str, np.ndarray] = {}
+        self.cfg: Optional[ArchConfig] = None
+        self.moe_positions: list[int] = []
+
+    # -- lifecycle -------------------------------------------------------
+    def materialize_banks(self, cfg: ArchConfig, params: Dict,
+                          kv_bytes: int) -> Optional[Dict]:
+        self.cfg = cfg
+        sb = cfg.superblock_or_default()
+        self.moe_positions = [p for p, _ in enumerate(sb)
+                              if cfg.ffn_kind(p) == "moe"] if cfg.is_moe \
+            else []
+        return self._materialize(cfg, params, kv_bytes)
+
+    def _materialize(self, cfg: ArchConfig, params: Dict,
+                     kv_bytes: int) -> Optional[Dict]:
+        return None
+
+    # -- per-forward hook ------------------------------------------------
+    def observe(self, counts: Dict, compute_s: float = 0.0,
+                prefill: bool = False) -> float:
+        for k, c in counts.items():
+            c = np.asarray(c)
+            acc = self._counts_sum.get(k)
+            self._counts_sum[k] = c.copy() if acc is None else acc + c
+        stall = self._observe_residency(counts, compute_s)
+        (self._ttft if prefill else self._tpot).append(compute_s + stall)
+        return stall
+
+    def _observe_residency(self, counts: Dict, compute_s: float) -> float:
+        return 0.0
+
+    def tick(self) -> None:
+        pass
+
+    def flush(self) -> None:
+        pass
+
+    # -- introspection ---------------------------------------------------
+    def router_counts(self) -> Dict[str, np.ndarray]:
+        """Accumulated router-selection counts per MoE position, (L, E)."""
+        return dict(self._counts_sum)
+
+    def device_bytes(self) -> int:
+        raise NotImplementedError
+
+    def stats(self) -> Dict[str, float]:
+        out = {k: 0.0 for k in STAT_KEYS}
+        if self._ttft:
+            out["ttft_s"] = float(np.mean(self._ttft))
+        if self._tpot:
+            out["tpot_s"] = float(np.mean(self._tpot))
+        out.update(self._residency_stats())
+        return out
+
+    def _residency_stats(self) -> Dict[str, float]:
+        return {}
+
+
+class Fp16Backend(_BackendBase):
+    """Dense bf16 experts, fully device-resident — the quality/latency
+    reference (and the compute substrate the offload model prices)."""
+
+    name = "fp16"
+
+    def __init__(self):
+        super().__init__()
+        self._dense_bytes = 0
+
+    def _materialize(self, cfg, params, kv_bytes):
+        self._dense_bytes = sum(
+            _param_bytes(params["blocks"][str(p)]["moe"]["experts"])
+            for p in self.moe_positions)
+        return None        # forward uses the dense experts in params
+
+    def device_bytes(self) -> int:
+        return self._dense_bytes
+
+
+class StaticPTQBackend(_BackendBase):
+    """Uniform static PTQ (the paper's static baseline): every expert serves
+    from the always-resident lo tier; no hi pool, no transfers, ever."""
+
+    name = "static"
+
+    def __init__(self, lo_bits: int = 4, group_size: int = 64):
+        super().__init__()
+        self.lo_bits = lo_bits
+        self.group_size = group_size
+        self.banks: Dict = {}
+        self._lo_bytes = 0
+
+    def _materialize(self, cfg, params, kv_bytes):
+        for pos in self.moe_positions:
+            experts = params["blocks"][str(pos)]["moe"]["experts"]
+            shapes = {k: tuple(v.shape) for k, v in experts.items()}
+            L, E = experts["w_gate"].shape[:2]
+            self._lo_bytes += expert_lo_nbytes(
+                shapes, self.lo_bits, self.group_size) * L * E
+            self.banks[str(pos)] = build_bank(
+                experts, n_hi=0, lo_bits=self.lo_bits,
+                group_size=self.group_size)
+            # Free the dense copies — the bank is the only residency now.
+            params["blocks"][str(pos)]["moe"]["experts"] = None
+        return self.banks
+
+    def device_bytes(self) -> int:
+        return self._lo_bytes
+
+
+class DynaExqBackend(_BackendBase):
+    """The paper's system: lo tier always resident + a budget-derived hi
+    pool whose occupancy the online controller re-allocates from router
+    traces. Promotions ride the migration stream (off the critical path) —
+    ``observe`` only feeds hotness; ``tick`` runs the policy window."""
+
+    name = "dynaexq"
+
+    def __init__(self, lo_bits: int = 4, hi_bits: int = 16,
+                 group_size: int = 64,
+                 n_hi_per_layer: Optional[int] = None,
+                 hbm_gb: Optional[float] = None,
+                 activation_slack_bytes: int = 64 << 20,
+                 controller: Optional[ControllerConfig] = None):
+        super().__init__()
+        self.lo_bits = lo_bits
+        self.hi_bits = hi_bits
+        self.group_size = group_size
+        self.n_hi_per_layer = n_hi_per_layer
+        self.hbm_gb = hbm_gb
+        self.activation_slack_bytes = activation_slack_bytes
+        self.controller_cfg = controller
+        self.controllers: Dict[str, DynaExqController] = {}
+        self.banks: Dict = {}
+
+    def _materialize(self, cfg, params, kv_bytes):
+        for pos in self.moe_positions:
+            experts = params["blocks"][str(pos)]["moe"]["experts"]
+            shapes = {k: tuple(v.shape) for k, v in experts.items()}
+            hi_b = expert_hi_nbytes(shapes, hi_bits=self.hi_bits,
+                                    group_size=self.group_size)
+            lo_b = expert_lo_nbytes(shapes, self.lo_bits, self.group_size)
+            L, E = experts["w_gate"].shape[:2]
+            if self.n_hi_per_layer is not None:
+                n_hi = self.n_hi_per_layer
+            elif self.hbm_gb is not None:
+                nonexp = _param_bytes({k: v for k, v in params.items()
+                                       if k != "blocks"})
+                plan = plan_budget(
+                    m_total=int(self.hbm_gb * GiB),
+                    m_fixed=nonexp + kv_bytes + self.activation_slack_bytes,
+                    lo_bytes_total=lo_b * L * E,
+                    hi_bytes_per_expert_layer=hi_b,
+                    n_layers=L, num_experts=E)
+                n_hi = plan.n_hi_per_layer
+            else:
+                n_hi = max(1, E // 8)
+            host_hi = {k: np.asarray(v) for k, v in experts.items()}
+            bank = build_bank(experts, n_hi=n_hi, lo_bits=self.lo_bits,
+                              group_size=self.group_size,
+                              hi_bits=self.hi_bits)
+            self.banks[str(pos)] = bank
+            if n_hi > 0:
+                self.controllers[str(pos)] = DynaExqController(
+                    bank, host_hi, n_hi_per_layer=n_hi,
+                    hi_bytes_per_expert=hi_b, cfg=self.controller_cfg)
+            params["blocks"][str(pos)]["moe"]["experts"] = None
+        return self.banks
+
+    def _observe_residency(self, counts, compute_s):
+        for k, ctl in self.controllers.items():
+            c = counts.get(k)
+            if c is not None:
+                ctl.observe(np.asarray(c))
+        return 0.0
+
+    def tick(self) -> None:
+        for ctl in self.controllers.values():
+            ctl.maybe_update()
+
+    def force_update(self) -> None:
+        for ctl in self.controllers.values():
+            ctl.update()
+
+    def flush(self) -> None:
+        for ctl in self.controllers.values():
+            ctl.flush()
+
+    def hi_sets(self) -> Dict[str, list]:
+        out = {}
+        for k, ctl in self.controllers.items():
+            L = ctl.tm.slot_map_h.shape[0]
+            out[k] = [sorted(ctl.tm.hi_set(l)) for l in range(L)]
+        return out
+
+    def device_bytes(self) -> int:
+        total = 0
+        for bank in self.banks.values():
+            shapes = {n: tuple(q.shape) for n, q in bank.lo.items()}
+            L, E = bank.slot_map.shape
+            per_lo = expert_lo_nbytes(shapes, self.lo_bits, self.group_size)
+            per_hi = expert_hi_nbytes(shapes, hi_bits=self.hi_bits,
+                                      group_size=self.group_size)
+            n_resident = int((np.asarray(bank.slot_owner) >= 0).sum())
+            total += per_lo * L * E + n_resident * per_hi
+        return total
+
+    def _residency_stats(self):
+        agg = {"stall_s": 0.0, "bytes_moved": 0.0,
+               "promotions": 0.0, "demotions": 0.0, "deferred": 0.0}
+        for ctl in self.controllers.values():
+            agg["bytes_moved"] += ctl.tm.stats["bytes_moved"]
+            agg["promotions"] += ctl.tm.stats["promoted"]
+            agg["demotions"] += ctl.tm.stats["demoted"]
+            agg["deferred"] += ctl.tm.stats["deferred"]
+        return agg
+
+
+@dataclasses.dataclass
+class OffloadConfig:
+    cache_experts_per_layer: int = 16
+    pcie_gbps: float = 16.0          # PCIe gen4 x16 — the paper's A6000
+    prefetch: bool = True
+
+
+class OffloadBackend(_BackendBase):
+    """ExpertFlow-like offloading/prefetch baseline (paper §5.3 comparator).
+
+    Experts live in host memory; the device keeps an LRU cache of
+    ``cache_experts_per_layer`` experts per layer in bf16. Each forward the
+    router's activated set is compared against the cache: misses must be
+    fetched over PCIe *on the critical path* (minus whatever an optimistic
+    prefetcher overlapped) — exactly the structural cost the paper's Fig. 1
+    measures. The transfer cost is a deterministic model
+    (bytes / pcie_gbps) layered on the measured compute time, so the
+    DynaExq-vs-offload comparison reflects transfer volume, not CPU noise.
+
+    Prefetch model: before each step the predictor prefetches the previous
+    step's activated set (a strong next-step predictor for decode — routing
+    is temporally correlated); prefetched bytes overlap with compute up to
+    ``compute_s × pcie`` bytes per step, the rest spills into the stall.
+    """
+
+    name = "offload"
+
+    def __init__(self, ocfg: Optional[OffloadConfig] = None):
+        super().__init__()
+        self.ocfg = ocfg if ocfg is not None else OffloadConfig()
+        self.expert_bytes = 0
+        self.n_moe_layers = 0
+        self.lru: Dict[int, LRUSet] = {}
+        self.prev_active: Dict[int, set] = {}
+        self._acct = {"hits": 0, "misses": 0, "stall_s": 0.0,
+                      "bytes_fetched": 0}
+
+    def _materialize(self, cfg, params, kv_bytes):
+        # Per-expert bf16 bytes (w_gate + w_up + w_down).
+        self.expert_bytes = 3 * cfg.d_model * cfg.moe.d_ff_expert * 2
+        self.n_moe_layers = len(self.moe_positions) * cfg.n_superblocks()
+        self.lru = {l: LRUSet(self.ocfg.cache_experts_per_layer)
+                    for l in range(self.n_moe_layers)}
+        self.prev_active = {l: set() for l in range(self.n_moe_layers)}
+        return None        # computes dense; residency is modeled
+
+    def _observe_residency(self, counts, compute_s):
+        activated: Dict[int, np.ndarray] = {}
+        li = 0
+        for pos in self.moe_positions:
+            c = np.asarray(counts[str(pos)])       # (nsb, E)
+            for sbi in range(c.shape[0]):
+                activated[li] = np.nonzero(c[sbi] > 0)[0]
+                li += 1
+        miss_bytes = 0
+        prefetched_bytes = 0
+        for l, acts in activated.items():
+            lru = self.lru[l]
+            if self.ocfg.prefetch:
+                for e in self.prev_active[l]:
+                    if e not in lru:
+                        prefetched_bytes += self.expert_bytes
+                    lru.touch(int(e))
+            for e in acts:
+                if lru.touch(int(e)):
+                    self._acct["hits"] += 1
+                else:
+                    self._acct["misses"] += 1
+                    miss_bytes += self.expert_bytes
+            self.prev_active[l] = set(int(x) for x in acts)
+        pcie = self.ocfg.pcie_gbps * 1e9
+        # Prefetches overlap with compute; anything beyond the overlap
+        # window spills into the critical path with the demand misses.
+        overlap_budget = compute_s * pcie
+        spill = max(0.0, prefetched_bytes - overlap_budget)
+        stall = (miss_bytes + spill) / pcie
+        self._acct["stall_s"] += stall
+        self._acct["bytes_fetched"] += miss_bytes + prefetched_bytes
+        return stall
+
+    def device_bytes(self) -> int:
+        """Device-resident cache footprint under the offload budget."""
+        return (self.n_moe_layers * self.ocfg.cache_experts_per_layer *
+                self.expert_bytes)
+
+    def _residency_stats(self):
+        return {"stall_s": self._acct["stall_s"],
+                "bytes_moved": float(self._acct["bytes_fetched"]),
+                "hits": float(self._acct["hits"]),
+                "misses": float(self._acct["misses"])}
+
+
+BACKENDS = {
+    "fp16": Fp16Backend,
+    "static": StaticPTQBackend,
+    "dynaexq": DynaExqBackend,
+    "offload": OffloadBackend,
+}
+
+
+def make_backend(name: str, **kwargs) -> ResidencyBackend:
+    """Registry factory: ``make_backend("dynaexq", n_hi_per_layer=2)``."""
+    try:
+        cls = BACKENDS[name]
+    except KeyError:
+        raise KeyError(f"unknown backend {name!r}; "
+                       f"one of {sorted(BACKENDS)}") from None
+    return cls(**kwargs)

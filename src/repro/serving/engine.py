@@ -1,231 +1,383 @@
-"""MoE serving engine with DynaExq mixed-precision residency.
+"""Request-level MoE serving engine with pluggable expert residency.
 
-Modes:
-* ``fp16``    — dense bf16 experts (quality/latency reference)
-* ``static``  — uniform static PTQ (paper's static baseline): lo tier only
-* ``dynaexq`` — lo tier + budget-derived hi pool driven by the online
-                controller (the paper's system)
+The unit of work is a **request**, not a batch: ``submit(request)`` returns a
+handle, ``step()`` advances every in-flight request by one token, ``drain()``
+runs until the queue empties. The engine implements continuous batching over
+a fixed pool of ``max_slots`` KV-cache slots:
 
-The engine owns the jitted prefill/decode closures, the per-MoE-position
-expert banks + controllers, and the serving loop instrumentation (TTFT,
-TPOP, router-trace observation, window updates).
+* **admission** — a queued request claims a free slot; its prompt is
+  prefilled as a single-row forward and the resulting KV/SSM rows are
+  scattered into the slot's row of the batched caches;
+* **decode** — one jitted step advances *all* occupied slots together, with
+  a per-slot position vector (each request decodes at its own offset);
+* **eviction/refill** — a finished request frees its slot at the end of the
+  step; the next ``step()`` admits queued work into it mid-stream.
+
+Where expert weights live — dense fp16, static PTQ, DynaExq mixed precision,
+or host-offloaded with an LRU device cache — is entirely the
+``ResidencyBackend``'s business (see ``repro.serving.backends``). The engine
+calls exactly the backend protocol: ``materialize_banks`` at build time,
+``observe(counts, compute_s, prefill)`` after every forward (the returned
+stall seconds are charged to the step), and ``tick()`` at step boundaries.
+There is no mode switch and no per-backend branch anywhere in this loop.
+
+``generate(batch, n_tokens)`` survives as a thin compat shim over
+submit + drain for the whole-batch callers (benchmarks, launchers).
+
+Known limitations (tracked in ROADMAP): vacant slots still flow through the
+batched decode, so their router activity slightly contaminates
+``backend.observe`` (mitigated by replaying the slot's last real token —
+masking them out needs per-row router counts from the model); and each
+distinct prompt length traces a fresh single-row prefill, so wide length
+distributions pay per-length compiles until prefill supports padded length
+buckets.
 """
 from __future__ import annotations
 
 import dataclasses
+import enum
+import functools
+import itertools
 import time
-from typing import Dict, Optional
+from collections import deque
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (ControllerConfig, DynaExqController, build_bank,
-                        expert_hi_nbytes, expert_lo_nbytes, plan_budget)
-from repro.models import (decode_step, init_caches, prefill)
+from repro.models import decode_step, init_caches, prefill
 from repro.models.config import ArchConfig
+from repro.models.model import DecodeCaches
+from repro.serving.backends import ResidencyBackend
+from repro.serving.requests import Request
 
-GiB = 1 << 30
+
+# Module-level jitted entry points with the (frozen, hashable) ArchConfig as
+# a static argument: the XLA compile cache is keyed on the function identity,
+# so every engine built for the same config shares compilations — a warm-up
+# engine genuinely warms the measured one (benchmarks rely on this).
+
+@functools.partial(jax.jit, static_argnames=("cfg", "capacity_factor"))
+def _prefill_jit(params, batch, caches, banks, *, cfg, capacity_factor):
+    return prefill(params, cfg, batch, caches, bank=banks,
+                   capacity_factor=capacity_factor)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "capacity_factor"))
+def _decode_jit(params, token, pos, caches, banks, *, cfg, capacity_factor):
+    return decode_step(params, cfg, token, pos, caches, bank=banks,
+                       capacity_factor=capacity_factor)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _scatter_row(pool, row, slot):
+    """Write a prefilled single-row cache into batch row ``slot``. The pool
+    is donated so XLA updates the (large) cache buffers in place."""
+    return jax.tree_util.tree_map(
+        lambda m, o: jax.lax.dynamic_update_slice(
+            m, o, (0, slot) + (0,) * (m.ndim - 2)),
+        pool, row)
 
 
 @dataclasses.dataclass
-class ServeConfig:
-    mode: str = "dynaexq"            # dynaexq | static | fp16
-    lo_bits: int = 4
-    hi_bits: int = 16
-    group_size: int = 64
-    hbm_gb: Optional[float] = None   # derive n_hi from a device envelope
-    n_hi_per_layer: Optional[int] = None  # or set it directly
-    max_len: int = 512
+class EngineConfig:
+    max_slots: int = 4               # concurrent requests (batch rows)
+    max_len: int = 512               # per-slot sequence budget
     capacity_factor: float = 2.0
-    controller: ControllerConfig = dataclasses.field(
-        default_factory=ControllerConfig)
-    activation_slack_bytes: int = 64 << 20
+    pad_token_id: int = 0            # fed to never-yet-occupied decode rows
 
 
-def _param_bytes(tree) -> int:
-    return sum(x.size * x.dtype.itemsize
-               for x in jax.tree_util.tree_leaves(tree)
-               if hasattr(x, "dtype"))
+class RequestState(enum.Enum):
+    QUEUED = "queued"
+    RUNNING = "running"
+    FINISHED = "finished"
 
 
-class MoEServer:
-    def __init__(self, cfg: ArchConfig, params: Dict, scfg: ServeConfig,
-                 batch: int):
+class RequestHandle:
+    """Mutable per-request view returned by ``submit``."""
+
+    def __init__(self, rid: int, request: Request):
+        self.id = rid
+        self.request = request
+        self.state = RequestState.QUEUED
+        self.slot: Optional[int] = None
+        self.tokens: List[int] = []      # generated tokens (greedy)
+        self.submit_s: float = 0.0       # perf_counter at submit
+        self.stall_at_submit: float = 0.0  # engine stall-clock at submit
+        self.ttft_s: float = 0.0         # submit → first token (incl. queue)
+        self.step_times: List[float] = []
+
+    @property
+    def workload(self) -> str:
+        return self.request.workload
+
+    def token_array(self) -> np.ndarray:
+        return np.asarray(self.tokens, np.int32)
+
+    def __repr__(self):
+        return (f"RequestHandle(id={self.id}, state={self.state.value}, "
+                f"slot={self.slot}, n_generated={len(self.tokens)})")
+
+
+class InferenceEngine:
+    """Continuous-batching serving loop over a ``ResidencyBackend``."""
+
+    def __init__(self, cfg: ArchConfig, params: Dict,
+                 backend: ResidencyBackend,
+                 ecfg: Optional[EngineConfig] = None):
+        if cfg.is_encoder_decoder:
+            raise NotImplementedError(
+                "InferenceEngine serves decoder-only stacks; encoder-decoder "
+                "architectures go through the batch prefill/decode entry "
+                "points in repro.models directly.")
         self.cfg = cfg
-        self.scfg = scfg
-        self.batch = batch
-        sb = cfg.superblock_or_default()
-        self.moe_positions = [p for p, _ in enumerate(sb)
-                              if cfg.ffn_kind(p) == "moe"] if cfg.is_moe else []
-        self.controllers: Dict[str, DynaExqController] = {}
-        self.banks = None
         self.params = params
-        self.stats = {"steps": 0, "prefills": 0}
+        self.backend = backend
+        self.ecfg = ecfg if ecfg is not None else EngineConfig()
 
-        if scfg.mode != "fp16" and self.moe_positions:
-            self._build_banks()
+        self.banks = backend.materialize_banks(cfg, params, self._kv_bytes())
+        self._jit_prefill = functools.partial(
+            _prefill_jit, cfg=cfg,
+            capacity_factor=self.ecfg.capacity_factor)
+        self._jit_decode = functools.partial(
+            _decode_jit, cfg=cfg,
+            capacity_factor=self.ecfg.capacity_factor)
+        self._jit_scatter = _scatter_row
 
-        self._jit_prefill = jax.jit(
-            lambda p, b, c, banks: prefill(
-                p, cfg, b, c, bank=banks,
-                capacity_factor=scfg.capacity_factor))
-        self._jit_decode = jax.jit(
-            lambda p, t, i, c, banks: decode_step(
-                p, cfg, t, i, c, bank=banks,
-                capacity_factor=scfg.capacity_factor))
-        self.caches = None
-        self.pos = 0
-        self._counts_last: Dict = {}
+        n = self.ecfg.max_slots
+        self.caches = init_caches(cfg, n, self.ecfg.max_len)
+        self.slots: List[Optional[RequestHandle]] = [None] * n
+        self.pos = np.zeros(n, np.int32)        # next write position per slot
+        self.tokens = np.full(n, self.ecfg.pad_token_id, np.int32)
+        self.queue: deque[RequestHandle] = deque()
+        self.last_counts: Dict = {}             # router counts, last forward
+        self.decode_times: List[float] = []     # per-step latency incl. stall
+        self.ttfts: List[float] = []            # per-request submit→first-tok
+        # Cumulative modeled stall seconds (backend-returned, never slept):
+        # a virtual clock running alongside perf_counter, so queue-inclusive
+        # latencies charge the stalls of work that ran ahead of a request.
+        self._stall_clock = 0.0
+        self._ids = itertools.count()
+        self.counters = {"steps": 0, "prefills": 0, "admitted": 0,
+                         "finished": 0}
 
     # ------------------------------------------------------------------
-    def _build_banks(self):
-        cfg, scfg = self.cfg, self.scfg
-        banks = {}
-        for pos in self.moe_positions:
-            experts = self.params["blocks"][str(pos)]["moe"]["experts"]
-            shapes = {k: tuple(v.shape) for k, v in experts.items()}
-            hi_b = expert_hi_nbytes(shapes, hi_bits=scfg.hi_bits,
-                                    group_size=scfg.group_size)
-            lo_b = expert_lo_nbytes(shapes, scfg.lo_bits, scfg.group_size)
-            L = experts["w_gate"].shape[0]
-            E = experts["w_gate"].shape[1]
-            n_hi = 0
-            if scfg.mode == "dynaexq":
-                if scfg.n_hi_per_layer is not None:
-                    n_hi = scfg.n_hi_per_layer
-                elif scfg.hbm_gb is not None:
-                    nonexp = _param_bytes({k: v for k, v in self.params.items()
-                                           if k != "blocks"})
-                    kv_b = self._kv_bytes()
-                    plan = plan_budget(
-                        m_total=int(scfg.hbm_gb * GiB),
-                        m_fixed=nonexp + kv_b + scfg.activation_slack_bytes,
-                        lo_bytes_total=lo_b * L * E,
-                        hi_bytes_per_expert_layer=hi_b,
-                        n_layers=L, num_experts=E)
-                    n_hi = plan.n_hi_per_layer
-                else:
-                    n_hi = max(1, E // 8)
-            host_hi = {k: np.asarray(v) for k, v in experts.items()}
-            bank = build_bank(experts, n_hi=n_hi, lo_bits=scfg.lo_bits,
-                              group_size=scfg.group_size,
-                              hi_bits=scfg.hi_bits)
-            banks[str(pos)] = bank
-            if scfg.mode == "dynaexq" and n_hi > 0:
-                self.controllers[str(pos)] = DynaExqController(
-                    bank, host_hi, n_hi_per_layer=n_hi,
-                    hi_bytes_per_expert=hi_b, cfg=scfg.controller)
-            # Free the dense copies — the bank is now the only residency.
-            self.params["blocks"][str(pos)]["moe"]["experts"] = None
-        self.banks = banks
-
     def _kv_bytes(self) -> int:
         cfg = self.cfg
         if cfg.attn is None:
             return 0
         sb = cfg.superblock_or_default()
         n_attn = sum(1 for k in sb if k == "attn") * cfg.n_superblocks()
-        cap = self.scfg.max_len if cfg.attn.sliding_window is None else \
-            min(self.scfg.max_len, cfg.attn.sliding_window)
-        return (2 * self.batch * cap * cfg.attn.n_kv_heads *
+        cap = self.ecfg.max_len if cfg.attn.sliding_window is None else \
+            min(self.ecfg.max_len, cfg.attn.sliding_window)
+        return (2 * self.ecfg.max_slots * cap * cfg.attn.n_kv_heads *
                 cfg.attn.head_dim * 2 * n_attn)
 
-    def _current_banks(self):
-        if self.banks is None:
-            return None
-        out = {}
-        for pos in self.moe_positions:
-            k = str(pos)
-            out[k] = self.controllers[k].bank if k in self.controllers \
-                else self.banks[k]
-        return out
+    # ------------------------------------------------------------------
+    def submit(self, request: Request) -> RequestHandle:
+        """Queue a request; it is admitted on a later ``step()`` as soon as
+        a cache slot frees up. Returns immediately with a handle.
+
+        The prompt must fit the slot (``len(tokens) <= max_len``). A
+        generation budget that overruns the slot is fine — common for
+        eos-bounded requests — the request is truncated at the sequence
+        capacity (finishes with fewer than ``max_new_tokens`` tokens)."""
+        plen = int(np.asarray(request.tokens).shape[-1])
+        if plen > self.ecfg.max_len:
+            raise ValueError(
+                f"prompt of {plen} tokens exceeds the slot capacity "
+                f"max_len={self.ecfg.max_len}")
+        handle = RequestHandle(next(self._ids), request)
+        handle.submit_s = time.perf_counter()
+        handle.stall_at_submit = self._stall_clock
+        self.queue.append(handle)
+        return handle
+
+    def _admit(self, finished: List[RequestHandle]) -> None:
+        """Fill free slots from the queue: single-row prefill, scatter the
+        row into the batched caches, emit the first token."""
+        while self.queue:
+            slot = next((i for i, h in enumerate(self.slots) if h is None),
+                        None)
+            if slot is None:
+                return
+            handle = self.queue.popleft()
+            prompt = np.asarray(handle.request.tokens, np.int32).reshape(-1)
+            row_caches = init_caches(self.cfg, 1, self.ecfg.max_len)
+            t0 = time.perf_counter()
+            logits, row_caches, counts = self._jit_prefill(
+                self.params, {"tokens": jnp.asarray(prompt[None, :])},
+                row_caches, self.banks)
+            logits.block_until_ready()
+            dt = time.perf_counter() - t0
+            self.last_counts = counts
+            stall = self.backend.observe(counts, dt, prefill=True)
+            # Scatter the single prefilled row into this slot's batch row.
+            self.caches = DecodeCaches(
+                blocks=self._jit_scatter(self.caches.blocks,
+                                         row_caches.blocks, jnp.int32(slot)),
+                cross=None)
+            self._stall_clock += stall
+            tok = int(np.asarray(jnp.argmax(logits, -1))[0])
+            handle.tokens.append(tok)
+            # Serving TTFT: submit → first token. Wall clock covers queue
+            # wait and the prefills admitted ahead of it; the stall-clock
+            # delta charges every MODELED stall since submit (predecessors'
+            # demand misses and this forward's own) that wall time never
+            # slept. The backend's own ttft_s tracks per-prefill latency.
+            handle.ttft_s = (time.perf_counter() - handle.submit_s +
+                             self._stall_clock - handle.stall_at_submit)
+            self.ttfts.append(handle.ttft_s)
+            handle.state = RequestState.RUNNING
+            handle.slot = slot
+            self.slots[slot] = handle
+            self.pos[slot] = len(prompt)
+            self.tokens[slot] = tok
+            self.counters["prefills"] += 1
+            self.counters["admitted"] += 1
+            if self._done(handle):
+                self._finish(handle, finished)
+
+    def _done(self, handle: RequestHandle) -> bool:
+        req = handle.request
+        if len(handle.tokens) >= req.max_new_tokens:
+            return True
+        if req.eos_token_id is not None and \
+                handle.tokens[-1] == req.eos_token_id:
+            return True
+        # Out of sequence budget: the slot's cache row is full.
+        return int(self.pos[handle.slot]) >= self.ecfg.max_len
+
+    def _finish(self, handle: RequestHandle,
+                finished: List[RequestHandle]) -> None:
+        handle.state = RequestState.FINISHED
+        self.slots[handle.slot] = None
+        # The vacated row keeps its last real token (not the pad token):
+        # vacant rows still flow through the batched decode, and replaying
+        # recent real traffic distorts the router-count observation far less
+        # than pad-token routing would. (The structural fix — per-row router
+        # counts so vacant rows can be masked out of observe() — is a
+        # ROADMAP item.)
+        self.counters["finished"] += 1
+        finished.append(handle)
 
     # ------------------------------------------------------------------
-    def start(self, batch: Dict) -> tuple[jax.Array, float]:
-        """Prefill. Returns (last-token logits, wall seconds)."""
-        extra = batch["tokens"].shape[1] + self.cfg.num_image_tokens
-        self.caches = init_caches(self.cfg, self.batch,
-                                  max(self.scfg.max_len, extra))
+    def step(self) -> List[RequestHandle]:
+        """One engine step: admit queued requests into free slots, then
+        advance every running request by one token. Returns the handles
+        that finished during this step."""
+        finished: List[RequestHandle] = []
+        self._admit(finished)
+        active = [(i, h) for i, h in enumerate(self.slots) if h is not None]
+        if active:
+            t0 = time.perf_counter()
+            logits, self.caches, counts = self._jit_decode(
+                self.params, jnp.asarray(self.tokens),
+                jnp.asarray(self.pos), self.caches, self.banks)
+            logits.block_until_ready()
+            dt = time.perf_counter() - t0
+            self.last_counts = counts
+            stall = self.backend.observe(counts, dt, prefill=False)
+            self._stall_clock += stall
+            latency = dt + stall
+            self.decode_times.append(latency)
+            next_tokens = np.asarray(jnp.argmax(logits, -1), np.int32)
+            for i, handle in active:
+                tok = int(next_tokens[i])
+                handle.tokens.append(tok)
+                handle.step_times.append(latency)
+                self.tokens[i] = tok
+                self.pos[i] += 1
+                if self._done(handle):
+                    self._finish(handle, finished)
+            self.counters["steps"] += 1
+        self.backend.tick()
+        return finished
+
+    def drain(self) -> List[RequestHandle]:
+        """Run ``step()`` until no request is queued or running; returns the
+        handles finished during the drain, in completion order."""
+        done: List[RequestHandle] = []
+        while self.queue or any(h is not None for h in self.slots):
+            done.extend(self.step())
+        return done
+
+    def replay(self, stream) -> List[RequestHandle]:
+        """Serve an arrival-timed request stream (e.g. ``RequestStream``):
+        each request is submitted once the wall clock — measured from replay
+        start — passes its ``arrival_s`` offset, so queueing delay and TTFT
+        reflect the offered load. When the engine goes idle before the next
+        arrival it skips ahead instead of spinning. Returns handles in
+        arrival order; all are FINISHED on return."""
+        requests = list(stream)
+        handles: List[RequestHandle] = []
         t0 = time.perf_counter()
-        logits, self.caches, counts = self._jit_prefill(
-            self.params, batch, self.caches, self._current_banks())
-        logits.block_until_ready()
-        dt = time.perf_counter() - t0
-        self.pos = extra
-        self._observe(counts)
-        self.stats["prefills"] += 1
-        return logits, dt
-
-    def step(self, tokens: jax.Array) -> tuple[jax.Array, float]:
-        """One decode step for the whole batch."""
-        t0 = time.perf_counter()
-        logits, self.caches, counts = self._jit_decode(
-            self.params, tokens, jnp.int32(self.pos), self.caches,
-            self._current_banks())
-        logits.block_until_ready()
-        dt = time.perf_counter() - t0
-        self.pos += 1
-        self._observe(counts)
-        self.stats["steps"] += 1
-        return logits, dt
-
-    def generate(self, batch: Dict, n_tokens: int):
-        """Greedy generation; returns (tokens, ttft_s, per_token_s list)."""
-        logits, ttft = self.start(batch)
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        out, times = [tok], []
-        for _ in range(n_tokens - 1):
-            logits, dt = self.step(tok)
-            tok = jnp.argmax(logits, -1).astype(jnp.int32)
-            out.append(tok)
-            times.append(dt)
-        return jnp.stack(out, 1), ttft, times
-
-    # ------------------------------------------------------------------
-    def _observe(self, counts: Dict) -> None:
-        self._counts_last = counts
-        if not self.controllers:
-            return
-        for k, ctl in self.controllers.items():
-            c = counts.get(k)
-            if c is not None:
-                ctl.observe(np.asarray(c))
-            ctl.maybe_update()
-
-    def force_update(self) -> None:
-        for ctl in self.controllers.values():
-            ctl.update()
+        i = 0
+        while i < len(requests) or self.queue or \
+                any(h is not None for h in self.slots):
+            now = time.perf_counter() - t0
+            while i < len(requests) and requests[i].arrival_s <= now:
+                handles.append(self.submit(requests[i]))
+                i += 1
+            if i < len(requests) and not self.queue and \
+                    all(h is None for h in self.slots):
+                # Idle gap until the next arrival — fast-forward.
+                handles.append(self.submit(requests[i]))
+                i += 1
+            self.step()
+        return handles
 
     def flush(self) -> None:
-        for ctl in self.controllers.values():
-            ctl.flush()
+        """Barrier on the backend's in-flight residency transitions."""
+        self.backend.flush()
 
-    # Introspection for benchmarks/tests -------------------------------
-    def hi_sets(self) -> Dict[str, list]:
-        out = {}
-        for k, ctl in self.controllers.items():
-            L = ctl.tm.slot_map_h.shape[0]
-            out[k] = [sorted(ctl.tm.hi_set(l)) for l in range(L)]
+    # ------------------------------------------------------------------
+    def generate(self, batch: Dict, n_tokens: int):
+        """Whole-batch compat shim over submit + drain.
+
+        ``batch``: ``{"tokens": (B, S)}`` with B ≤ ``max_slots``. Greedy
+        generation; returns ``(tokens (B, n_tokens), ttft_s, per_step_s)``
+        token-for-token identical to driving submit/step/drain directly.
+        Token-only: multimodal batches (``image_embeds``/``audio_embeds``)
+        are not supported by the request path and are rejected loudly.
+        """
+        extra = set(batch) - {"tokens"}
+        if extra:
+            raise NotImplementedError(
+                f"InferenceEngine serves token-only requests; unsupported "
+                f"batch keys: {sorted(extra)}. Use repro.models.prefill/"
+                f"decode_step directly for multimodal batches.")
+        toks = np.asarray(batch["tokens"])
+        B = toks.shape[0]
+        if B > self.ecfg.max_slots:
+            raise ValueError(f"batch {B} > max_slots={self.ecfg.max_slots}")
+        if toks.shape[1] + n_tokens - 1 > self.ecfg.max_len:
+            # The shim stacks a dense (B, n_tokens) grid — truncation would
+            # break it, so the whole batch must fit the slot budget.
+            raise ValueError(
+                f"{toks.shape[1]}-token prompts + {n_tokens} new tokens "
+                f"exceed max_len={self.ecfg.max_len}")
+        handles = [self.submit(Request(tokens=toks[i],
+                                       max_new_tokens=n_tokens))
+                   for i in range(B)]
+        n_before = len(self.decode_times)
+        self.drain()
+        out = jnp.asarray(np.stack([h.token_array() for h in handles], 0))
+        ttft = float(np.mean([h.ttft_s for h in handles]))
+        return out, ttft, self.decode_times[n_before:]
+
+    # ------------------------------------------------------------------
+    def stats(self) -> Dict[str, float]:
+        """Backend's uniform serving stats merged with engine counters.
+        ``ttft_s`` is the request-level submit→first-token mean (queue wait
+        included); the backend's per-prefill latency stays available via
+        ``backend.stats()``."""
+        out = dict(self.backend.stats())
+        if self.ttfts:
+            out["ttft_s"] = float(np.mean(self.ttfts))
+        out.update({k: float(v) for k, v in self.counters.items()})
         return out
 
-    def expert_device_bytes(self) -> int:
-        """Resident expert bytes under the budget model (lo + hi tiers)."""
-        if self.banks is None:
-            total = 0
-            for pos in self.moe_positions:
-                total += _param_bytes(
-                    self.params["blocks"][str(pos)]["moe"]["experts"])
-            return total
-        total = 0
-        for k, bank in self.banks.items():
-            # bank.lo[n].shape is the logical dense shape (L, E, K, N).
-            shapes = {n: tuple(q.shape) for n, q in bank.lo.items()}
-            L, E = bank.slot_map.shape
-            per_lo = expert_lo_nbytes(shapes, self.scfg.lo_bits,
-                                      self.scfg.group_size)   # one expert-layer
-            per_hi = expert_hi_nbytes(shapes, hi_bits=self.scfg.hi_bits,
-                                      group_size=self.scfg.group_size)
-            n_resident = int((np.asarray(bank.slot_owner) >= 0).sum())
-            total += per_lo * L * E + n_resident * per_hi
-        return total
+    def device_bytes(self) -> int:
+        return self.backend.device_bytes()

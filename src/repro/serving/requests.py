@@ -6,12 +6,79 @@ workload draws tokens Zipf-distributed over a workload-specific slice of the
 vocabulary. Different input statistics → different embedding clusters →
 different router hot sets (measured, not assumed — see
 benchmarks/workload_shift.py).
+
+Two granularities:
+
+* ``make_prompts`` / ``mixed_stream`` — fixed-shape token batches (training
+  eval, hotness measurement);
+* ``Request`` / ``RequestStream`` — the serving-engine unit of work:
+  variable-length prompts with arrival times and per-request workload tags,
+  feeding ``InferenceEngine.submit`` (the same shifting mix as
+  ``mixed_stream``, request- rather than batch-shaped).
 """
 from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional, Sequence, Tuple
 
 import numpy as np
 
 WORKLOADS = ("text", "math", "code")
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving request: a prompt plus generation and accounting tags."""
+    tokens: np.ndarray                   # (prompt_len,) int32
+    max_new_tokens: int = 16
+    workload: str = "text"               # which traffic phase produced it
+    arrival_s: float = 0.0               # offset from stream start
+    eos_token_id: Optional[int] = None
+
+
+class RequestStream:
+    """Request-level arrival process over shifting workload phases.
+
+    ``phases``: sequence of ``(workload, n_requests)`` — the same shifting
+    serving mix ``mixed_stream`` yields batch-wise, one ``Request`` at a
+    time. Arrivals are Poisson at ``arrival_rate_rps`` (or back-to-back when
+    ``None``); prompt lengths jitter uniformly within
+    ``prompt_len ± prompt_len_jitter`` so continuous batching sees genuinely
+    variable-length work.
+    """
+
+    def __init__(self, vocab_size: int,
+                 phases: Sequence[Tuple[str, int]],
+                 prompt_len: int = 32,
+                 prompt_len_jitter: int = 0,
+                 max_new_tokens: int = 8,
+                 arrival_rate_rps: Optional[float] = None,
+                 seed: int = 0):
+        self.vocab_size = vocab_size
+        self.phases = list(phases)
+        self.prompt_len = prompt_len
+        self.prompt_len_jitter = prompt_len_jitter
+        self.max_new_tokens = max_new_tokens
+        self.arrival_rate_rps = arrival_rate_rps
+        self.seed = seed
+
+    def __len__(self) -> int:
+        return sum(n for _, n in self.phases)
+
+    def __iter__(self) -> Iterator[Request]:
+        rng = np.random.default_rng(self.seed ^ 0x5EED)
+        now = 0.0
+        for pi, (workload, n_requests) in enumerate(self.phases):
+            for j in range(n_requests):
+                lo = max(1, self.prompt_len - self.prompt_len_jitter)
+                hi = self.prompt_len + self.prompt_len_jitter
+                length = int(rng.integers(lo, hi + 1))
+                toks = make_prompts(workload, self.vocab_size, 1, length,
+                                    seed=self.seed + 1009 * pi + j)[0]
+                if self.arrival_rate_rps:
+                    now += float(rng.exponential(1.0 / self.arrival_rate_rps))
+                yield Request(tokens=toks, max_new_tokens=self.max_new_tokens,
+                              workload=workload, arrival_s=now)
 
 
 def _zipf_probs(n: int, s: float = 1.2) -> np.ndarray:

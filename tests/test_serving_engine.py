@@ -1,115 +1,84 @@
-"""Serving engine: three modes, budget accounting, online adaptation, and
-the offload baseline's transfer model."""
-import jax
-import jax.numpy as jnp
+"""Serving engine: four residency backends behind one request-level loop —
+budget accounting, online adaptation, and the offload transfer model.
+Engines come from the shared ``engine_factory`` fixture (tests/conftest.py),
+so every suite exercises the same canonical backend settings."""
 import numpy as np
 import pytest
 
-from repro.configs import get_config
-from repro.core import ControllerConfig
-from repro.models import init_params
-from repro.serving import (MoEServer, OffloadConfig, OffloadServer,
-                           ServeConfig, make_prompts)
+from repro.serving import OffloadConfig, make_prompts
 from repro.serving.requests import WORKLOADS
 
 
-@pytest.fixture(scope="module")
-def setup():
-    cfg = get_config("granite-moe-1b-a400m", reduced=True)
-    params = init_params(jax.random.PRNGKey(0), cfg)
-    toks = jnp.asarray(make_prompts("text", cfg.vocab_size, 4, 24))
-    return cfg, params, toks
+@pytest.fixture()
+def prompts(serving_setup):
+    cfg, _ = serving_setup
+    return np.asarray(make_prompts("text", cfg.vocab_size, 4, 24))
 
 
-def _clone(params):
-    return jax.tree_util.tree_map(lambda x: x, params)
-
-
-@pytest.mark.parametrize("mode", ["fp16", "static", "dynaexq"])
-def test_modes_generate(setup, mode):
-    cfg, params, toks = setup
-    srv = MoEServer(cfg, _clone(params),
-                    ServeConfig(mode=mode, lo_bits=4, n_hi_per_layer=2,
-                                max_len=64,
-                                controller=ControllerConfig(
-                                    update_interval_s=0.0)), batch=4)
-    out, ttft, times = srv.generate({"tokens": toks}, 5)
-    srv.flush()
+@pytest.mark.parametrize("name", ["fp16", "static", "dynaexq"])
+def test_backends_generate(engine_factory, prompts, name):
+    eng = engine_factory(name)
+    out, ttft, times = eng.generate({"tokens": prompts}, 5)
+    eng.flush()
     assert out.shape == (4, 5)
     assert ttft > 0 and len(times) == 4
     assert not np.isnan(np.asarray(out, np.float32)).any()
 
 
-def test_footprint_ordering(setup):
+def test_footprint_ordering(engine_factory, prompts):
     """static < dynaexq < fp16 expert bytes — the budget story of Table 4."""
-    cfg, params, toks = setup
     sizes = {}
-    for mode in ["fp16", "static", "dynaexq"]:
-        srv = MoEServer(cfg, _clone(params),
-                        ServeConfig(mode=mode, lo_bits=4, n_hi_per_layer=2,
-                                    max_len=64,
-                                    controller=ControllerConfig(
-                                        update_interval_s=0.0)), batch=4)
-        if mode == "dynaexq":
-            srv.generate({"tokens": toks}, 4)
-            srv.flush()
-        sizes[mode] = srv.expert_device_bytes()
+    for name in ["fp16", "static", "dynaexq"]:
+        eng = engine_factory(name)
+        if name == "dynaexq":
+            eng.generate({"tokens": prompts}, 4)
+            eng.flush()
+        sizes[name] = eng.device_bytes()
     assert sizes["static"] < sizes["dynaexq"] < sizes["fp16"]
 
 
-def test_dynaexq_promotes_under_skew(setup):
-    cfg, params, toks = setup
-    srv = MoEServer(cfg, _clone(params),
-                    ServeConfig(mode="dynaexq", lo_bits=4, n_hi_per_layer=2,
-                                max_len=64,
-                                controller=ControllerConfig(
-                                    update_interval_s=0.0)), batch=4)
-    srv.generate({"tokens": toks}, 6)
-    srv.flush()
-    hi = srv.hi_sets()["0"]
+def test_dynaexq_promotes_under_skew(engine_factory, prompts):
+    eng = engine_factory("dynaexq")
+    eng.generate({"tokens": prompts}, 6)
+    eng.flush()
+    hi = eng.backend.hi_sets()["0"]
     assert all(len(s) == 2 for s in hi)    # budget-full residency
-    ctl = srv.controllers["0"]
+    ctl = eng.backend.controllers["0"]
     ctl.tm.check_invariants()
     assert ctl.tm.stats["promoted"] >= 2 * len(hi)  # n_hi × layers at least
 
 
-def test_budget_derived_n_hi(setup):
-    """hbm_gb envelope → plan_budget path derives n_hi (paper's budget init)."""
-    cfg, params, toks = setup
-    srv = MoEServer(cfg, _clone(params),
-                    ServeConfig(mode="dynaexq", lo_bits=4, hbm_gb=0.05,
-                                max_len=64, activation_slack_bytes=1 << 20,
-                                controller=ControllerConfig(
-                                    update_interval_s=0.0)), batch=4)
-    ctl = srv.controllers.get("0")
+def test_budget_derived_n_hi(serving_setup, engine_factory):
+    """hbm_gb envelope → plan_budget path derives n_hi (paper's budget
+    init)."""
+    cfg, _ = serving_setup
+    eng = engine_factory("dynaexq", n_hi_per_layer=None, hbm_gb=0.05,
+                         activation_slack_bytes=1 << 20)
+    ctl = eng.backend.controllers.get("0")
     if ctl is not None:
         assert 0 < ctl.policy.n_hi <= cfg.moe.num_experts
 
 
-def test_offload_baseline_accounts_transfers(setup):
-    cfg, params, toks = setup
-    srv = OffloadServer(cfg, _clone(params),
-                        OffloadConfig(cache_experts_per_layer=2,
-                                      pcie_gbps=16.0),
-                        batch=4, max_len=64)
-    out, ttft, times = srv.generate({"tokens": toks}, 5)
-    st = srv.stats
-    assert st["misses"] > 0 and st["bytes_fetched"] > 0
+def test_offload_backend_accounts_transfers(engine_factory, prompts):
+    eng = engine_factory("offload",
+                         ocfg=OffloadConfig(cache_experts_per_layer=2,
+                                            pcie_gbps=16.0))
+    out, ttft, times = eng.generate({"tokens": prompts}, 5)
+    st = eng.backend.stats()
+    assert st["misses"] > 0 and st["bytes_moved"] > 0
     assert st["stall_s"] > 0
     # stall must equal modeled bytes/bw within the prefetch-overlap slack
-    assert st["stall_s"] <= st["bytes_fetched"] / (16e9) + 1e-6
+    assert st["stall_s"] <= st["bytes_moved"] / 16e9 + 1e-6
 
 
-def test_offload_cache_larger_means_fewer_misses(setup):
-    cfg, params, toks = setup
+def test_offload_cache_larger_means_fewer_misses(engine_factory, prompts):
     misses = {}
     for c in (1, 4):
-        srv = OffloadServer(cfg, _clone(params),
-                            OffloadConfig(cache_experts_per_layer=c,
-                                          prefetch=False),
-                            batch=4, max_len=64)
-        srv.generate({"tokens": toks}, 5)
-        misses[c] = srv.stats["misses"]
+        eng = engine_factory("offload",
+                             ocfg=OffloadConfig(cache_experts_per_layer=c,
+                                                prefetch=False))
+        eng.generate({"tokens": prompts}, 5)
+        misses[c] = eng.backend.stats()["misses"]
     assert misses[4] <= misses[1]
 
 
