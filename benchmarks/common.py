@@ -19,6 +19,10 @@ from repro.training.adamw import AdamWConfig
 CKPT = os.path.join(os.path.dirname(__file__), "..", "experiments",
                     "bench_model")
 
+#: CI smoke mode: shrink training and sweep sizes so the benchmark path can
+#: be exercised end-to-end in seconds (set ``BENCH_SMOKE=1``).
+BENCH_SMOKE = os.environ.get("BENCH_SMOKE", "") not in ("", "0")
+
 
 def bench_config():
     """A granite-family MoE sized for CPU benchmarking: 4 layers, 8 experts
@@ -32,6 +36,8 @@ def bench_config():
 
 
 def trained_model(steps: int = 120, force: bool = False):
+    if BENCH_SMOKE:
+        steps = min(steps, 12)
     cfg = bench_config()
     task = SyntheticLMTask(cfg.vocab_size, seed=0)
     params0 = init_params(jax.random.PRNGKey(0), cfg)

@@ -7,7 +7,8 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import bench_backend, clone, trained_model
-from repro.serving import EngineConfig, InferenceEngine, Request
+from repro.serving import (EngineConfig, InferenceEngine, Request,
+                           make_prompts)
 
 
 def _measure_ttft(kind, cfg, params, bs, toks):
@@ -17,6 +18,19 @@ def _measure_ttft(kind, cfg, params, bs, toks):
                for b in range(bs)]
     eng.drain()
     return float(np.mean([h.ttft_s for h in handles]))
+
+
+def _measure_mixed(kind, cfg, params, lens):
+    """Mixed-length batch (one request per length): bucketed admission pays
+    O(#buckets) prefill compiles where the per-length path paid one each."""
+    eng = InferenceEngine(cfg, clone(params), bench_backend(kind),
+                          EngineConfig(max_slots=4, max_len=256))
+    handles = [eng.submit(Request(
+        tokens=make_prompts("text", cfg.vocab_size, 1, ln, seed=ln)[0],
+        max_new_tokens=1)) for ln in lens]
+    eng.drain()
+    return (float(np.mean([h.ttft_s for h in handles])),
+            len(eng.prefill_shapes), len(eng.buckets))
 
 
 def run(report):
@@ -33,3 +47,15 @@ def run(report):
                    round(ttft, 4))
         report(f"prompt_scaling/offload_overhead_x/len{plen}", 0.0,
                round(row["offload"] / row["static"], 2))
+
+    # Mixed-length workload: 8 distinct lengths through ONE engine. (The
+    # compile-count regression guard lives in serving_perf / the tier-1
+    # tests; here the shape count is reported for the figure only.)
+    lens = (9, 14, 22, 37, 55, 90, 130, 200)
+    for kind in ("static", "dynaexq"):
+        _measure_mixed(kind, cfg, params, lens)          # warm-up compile
+        ttft, n_shapes, _n_buckets = _measure_mixed(kind, cfg, params, lens)
+        report(f"prompt_scaling/ttft/{kind}/mixed", ttft * 1e6,
+               round(ttft, 4))
+        report(f"prompt_scaling/prefill_compiles/{kind}/mixed", 0.0,
+               n_shapes)

@@ -3,7 +3,7 @@ precision allocation for MoE serving (hotness → top-n policy → VER +
 non-blocking transitions under a hard HBM budget)."""
 from repro.core.budget import BudgetTracker, BudgetPlan, plan_budget, BudgetExceeded
 from repro.core.controller import ControllerConfig, DynaExqController
-from repro.core.hotness import HotnessEstimator
+from repro.core.hotness import HotnessEstimator, mask_row_counts
 from repro.core.policy import PolicyConfig, select_hi_set
 from repro.core.pools import SlotPool
 from repro.core.transitions import TransitionManager
@@ -15,6 +15,7 @@ from repro.core.ver import (
 __all__ = [
     "BudgetTracker", "BudgetPlan", "plan_budget", "BudgetExceeded",
     "ControllerConfig", "DynaExqController", "HotnessEstimator",
+    "mask_row_counts",
     "PolicyConfig", "select_hi_set", "SlotPool", "TransitionManager",
     "ExpertBankQ", "Residency", "build_bank", "expert_hi_nbytes",
     "expert_lo_nbytes", "publish", "unpublish", "write_hi_slot",

@@ -41,11 +41,20 @@ def _compile(arch, shape, mesh, planner_kw, nsb=None, microbatches=1):
     return spec, compiled
 
 
-def _raw_costs(compiled):
-    from repro.launch.roofline import collective_bytes, convert_bytes
+def cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` normalized across jax versions: 0.4.x
+    returns a one-element list of dicts, newer jax returns the dict
+    directly. Every consumer of the dry-run machinery should come through
+    here instead of calling ``.cost_analysis()`` raw."""
     ca = compiled.cost_analysis()
     if isinstance(ca, list):
         ca = ca[0]
+    return ca
+
+
+def _raw_costs(compiled):
+    from repro.launch.roofline import collective_bytes, convert_bytes
+    ca = cost_analysis(compiled)
     txt = compiled.as_text()
     coll = collective_bytes(txt)
     detail = {k: v for k, v in coll.items() if k != "_counts"}

@@ -212,11 +212,21 @@ PREFILL_CHUNK = 256
 
 
 def attention_prefill(p: Param, cfg: AttnConfig, x: jax.Array,
-                      cache: KVCache) -> tuple[jax.Array, KVCache]:
+                      cache: KVCache, lengths: Optional[jax.Array] = None
+                      ) -> tuple[jax.Array, KVCache]:
     """Causal prefill writing the cache. Sequence starts at position 0.
 
     For a sliding-window ring cache (capacity < S) only the last ``capacity``
     keys land in the cache, which is exactly the window semantics.
+
+    ``lengths`` ((B,) int32) marks each row's true prompt length for padded
+    (length-bucketed) prefill. Causal masking already keeps end-of-row
+    padding out of every valid position's attention; what needs care is the
+    cache write: ring slot i must hold each ROW's largest real position
+    p < length with p % C == i (not the batch tail, which for a short row
+    in a long bucket is pure padding), and slots no real position maps to
+    keep their previous contents. Attention outputs at padded positions are
+    garbage and must not be read.
     """
     B, S, _ = x.shape
     positions = jnp.arange(S)[None, :]
@@ -236,7 +246,20 @@ def attention_prefill(p: Param, cfg: AttnConfig, x: jax.Array,
     C = cache.capacity
     kc = k.transpose(0, 2, 1, 3)       # (B, Hkv, S, hd) — cache layout
     vc = v.transpose(0, 2, 1, 3)
-    if C >= S:
+    if lengths is not None:
+        # Per-row masked write (full and ring caches alike): slot i takes
+        # the row's largest real position p < length with p % C == i; slots
+        # with no real owner keep their previous contents.
+        last = lengths[:, None] - 1 - \
+            jnp.mod(lengths[:, None] - 1 - jnp.arange(C)[None, :], C)  # (B,C)
+        has_owner = (last >= 0) & (lengths[:, None] > 0)
+        src = jnp.clip(last, 0, S - 1)[:, None, :, None]
+        gk = jnp.take_along_axis(kc, src, axis=2)        # (B, Hkv, C, hd)
+        gv = jnp.take_along_axis(vc, src, axis=2)
+        keep = has_owner[:, None, :, None]
+        new_k = jnp.where(keep, gk, cache.k)
+        new_v = jnp.where(keep, gv, cache.v)
+    elif C >= S:
         new_k = jax.lax.dynamic_update_slice(cache.k, kc, (0, 0, 0, 0))
         new_v = jax.lax.dynamic_update_slice(cache.v, vc, (0, 0, 0, 0))
     else:  # ring buffer: keep last C positions, slot = pos % C

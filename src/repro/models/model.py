@@ -8,8 +8,18 @@ compile 40 (arch × shape) × 2 meshes on this container.
 
 Three entry points:
 * ``forward_train``  — full-sequence causal forward (training / quality eval)
-* ``prefill``        — full forward writing KV/SSM caches, last-token logits
-* ``decode_step``    — ONE token against the caches (the serving hot path)
+* ``prefill``        — full forward writing KV/SSM caches, last-token logits;
+  ``lengths=`` turns it into a padded, masked prefill (per-row true lengths,
+  logits gathered at ``lengths - 1``) so the serving engine can batch
+  variable-length prompts into a handful of length buckets
+* ``decode_step``    — ONE token against the caches (the serving hot path);
+  ``row_valid=`` masks vacant continuous-batching rows out of MoE dispatch
+  and router counts
+
+Both serving entry points accept ``per_row_counts=True`` to return router
+counts per ROW ((nsb, B, E)) instead of aggregated — the per-request routing
+telemetry the engine attributes to request handles and the residency
+backends use to keep phantom traffic out of hotness.
 
 MoE layers accept an optional DynaExq ``ExpertBankQ`` override (serving in
 mixed precision); without it they use the dense bf16 experts in ``params``.
@@ -152,16 +162,17 @@ def init_caches(cfg: ArchConfig, batch: int, max_len: int,
 # --------------------------------------------------------------------------
 
 def _apply_ffn(bp: Dict, cfg: ArchConfig, pos: int, x2d: jax.Array,
-               capacity: int, bank):
-    """x2d: (T, d) → (y, counts|None, aux_loss)."""
+               capacity: int, bank, token_valid=None, n_rows=None):
+    """x2d: (T, d) → (y, MoEAux | None)."""
     ffn = cfg.ffn_kind(pos)
     if ffn == "moe":
         b = bank[str(pos)] if bank is not None else bp["moe"]["experts"]
-        y, aux = X.moe_apply(bp["moe"], b, x2d, cfg.moe, capacity)
-        return y, aux.counts, aux.aux_loss
+        y, aux = X.moe_apply(bp["moe"], b, x2d, cfg.moe, capacity,
+                             token_valid=token_valid, n_rows=n_rows)
+        return y, aux
     if "mlp" in bp:
-        return M.swiglu(bp["mlp"], x2d), None, jnp.float32(0)
-    return jnp.zeros_like(x2d), None, jnp.float32(0)
+        return M.swiglu(bp["mlp"], x2d), None
+    return jnp.zeros_like(x2d), None
 
 
 def _block_train(bp: Dict, cfg: ArchConfig, pos: int, kind: str, x: jax.Array,
@@ -179,19 +190,28 @@ def _block_train(bp: Dict, cfg: ArchConfig, pos: int, kind: str, x: jax.Array,
         attn_out, _ = S.ssd_forward(bp["mamba"], cfg.ssm, cfg.d_model, h)
     x = x + attn_out
     h = L.rmsnorm(bp["norm2"], x, cfg.norm_eps)
-    y, counts, aux = _apply_ffn(bp, cfg, pos, h.reshape(B * Sq, d), capacity, bank)
-    return x + y.reshape(B, Sq, d), counts, aux
+    y, aux = _apply_ffn(bp, cfg, pos, h.reshape(B * Sq, d), capacity, bank)
+    counts = aux.counts if aux is not None else None
+    aux_loss = aux.aux_loss if aux is not None else jnp.float32(0)
+    return x + y.reshape(B, Sq, d), counts, aux_loss
 
 
 def _block_step(bp: Dict, cfg: ArchConfig, pos: int, kind: str, x: jax.Array,
                 cache, pos_idx, capacity: int, bank,
-                cross_kv, prefill: bool):
-    """Shared prefill/decode body. x: (B, S, d) (S=1 for decode)."""
+                cross_kv, prefill: bool, lengths=None, token_valid=None,
+                n_rows=None):
+    """Shared prefill/decode body. x: (B, S, d) (S=1 for decode).
+
+    ``lengths``/``token_valid``/``n_rows`` carry the per-row validity
+    signal: masked cache writes for padded prefill, masked MoE dispatch,
+    and optional per-row router counts (see ``prefill``/``decode_step``).
+    Returns (x, cache, counts) where counts is (E,) or (n_rows, E)."""
     B, Sq, d = x.shape
     h = L.rmsnorm(bp["norm1"], x, cfg.norm_eps)
     if kind == "attn":
         if prefill:
-            attn_out, cache = L.attention_prefill(bp["attn"], cfg.attn, h, cache)
+            attn_out, cache = L.attention_prefill(bp["attn"], cfg.attn, h,
+                                                  cache, lengths=lengths)
         else:
             attn_out, cache = L.attention_decode(bp["attn"], cfg.attn, h,
                                                  pos_idx, cache)
@@ -202,13 +222,24 @@ def _block_step(bp: Dict, cfg: ArchConfig, pos: int, kind: str, x: jax.Array,
                                          cross_kv["k"], cross_kv["v"])
     else:
         if prefill:
-            attn_out, cache = S.ssd_forward(bp["mamba"], cfg.ssm, cfg.d_model, h)
+            attn_out, cache = S.ssd_forward(bp["mamba"], cfg.ssm,
+                                            cfg.d_model, h, lengths=lengths)
         else:
             attn_out, cache = S.ssd_decode_step(bp["mamba"], cfg.ssm,
                                                 cfg.d_model, h, cache)
     x = x + attn_out
     h = L.rmsnorm(bp["norm2"], x, cfg.norm_eps)
-    y, counts, _ = _apply_ffn(bp, cfg, pos, h.reshape(B * Sq, d), capacity, bank)
+    y, aux = _apply_ffn(bp, cfg, pos, h.reshape(B * Sq, d), capacity, bank,
+                        token_valid=token_valid, n_rows=n_rows)
+    if aux is None:
+        counts = None
+    elif n_rows is not None and aux.row_counts is not None:
+        counts = aux.row_counts
+    else:
+        # Per-row counts unavailable (shard_map expert parallelism) — fall
+        # back to the aggregated (E,) counts rather than dropping the
+        # hotness signal entirely. Consumers must branch on ndim.
+        counts = aux.counts
     return x + y.reshape(B, Sq, d), cache, counts
 
 
@@ -279,13 +310,33 @@ def forward_train(params: Dict, cfg: ArchConfig, batch: Dict,
 
 
 def prefill(params: Dict, cfg: ArchConfig, batch: Dict, caches: DecodeCaches,
-            bank=None, capacity_factor: Optional[float] = None):
+            bank=None, capacity_factor: Optional[float] = None,
+            lengths: Optional[jax.Array] = None,
+            per_row_counts: bool = False):
     """Full forward writing caches. Returns (last-token logits (B,V),
-    caches, counts)."""
+    caches, counts).
+
+    ``lengths`` ((B,) int32) enables padded, masked prefill: each row's true
+    length within the (right-padded) batch. Logits are gathered at
+    ``lengths - 1`` per row, padded positions are excluded from MoE dispatch
+    and every router count, attention/SSM cache writes stop at each row's
+    last real token, and a ``lengths == 0`` row is fully inert (a batch-pad
+    row). Padding must be on the right; causal masking then keeps it out of
+    every valid position's attention for free.
+
+    ``per_row_counts=True`` returns counts values of shape (nsb, B, E)
+    (per-row routing telemetry) instead of the aggregated (nsb, E).
+    """
     sb = cfg.superblock_or_default()
     x = _embed_inputs(params, cfg, batch)
     B, Stot, d = x.shape
     cap = X.moe_capacity(B * Stot, cfg.moe, capacity_factor) if cfg.is_moe else 0
+    token_valid = None
+    if lengths is not None:
+        lengths = jnp.asarray(lengths, jnp.int32)
+        token_valid = (jnp.arange(Stot)[None, :] <
+                       lengths[:, None]).reshape(-1)
+    n_rows = B if per_row_counts else None
 
     cross = caches.cross
     if cfg.is_encoder_decoder:
@@ -312,7 +363,9 @@ def prefill(params: Dict, cfg: ArchConfig, batch: Dict, caches: DecodeCaches,
             x, c, counts = _block_step(bp_sliced[str(pos)], cfg, pos, kind, x,
                                        cache_sliced[str(pos)], None, cap,
                                        bank_sliced, cross_sliced,
-                                       prefill=True)
+                                       prefill=True, lengths=lengths,
+                                       token_valid=token_valid,
+                                       n_rows=n_rows)
             new_caches[str(pos)] = c
             if counts is not None:
                 counts_out[str(pos)] = counts
@@ -322,21 +375,38 @@ def prefill(params: Dict, cfg: ArchConfig, batch: Dict, caches: DecodeCaches,
     if bank is not None:
         xs = xs + (bank,)
     x, (new_blocks, counts) = _scan(sb_body, x, xs)
-    logits = _lm_logits(params, cfg, x[:, -1:, :])[:, 0]
+    if lengths is None:
+        x_last = x[:, -1:, :]
+    else:
+        last = jnp.clip(lengths - 1, 0, Stot - 1)
+        x_last = x[jnp.arange(B), last][:, None, :]
+    logits = _lm_logits(params, cfg, x_last)[:, 0]
     return logits, DecodeCaches(blocks=new_blocks, cross=cross), counts
 
 
 def decode_step(params: Dict, cfg: ArchConfig, token: jax.Array,
                 pos_idx: jax.Array, caches: DecodeCaches, bank=None,
-                capacity_factor: float = 2.0):
+                capacity_factor: float = 2.0,
+                row_valid: Optional[jax.Array] = None,
+                per_row_counts: bool = False):
     """One-token decode. token: (B,) int32; pos_idx: scalar int32 position,
     or a (B,) int32 vector of per-sequence positions (continuous batching —
     each KV-cache slot advances at its own request's offset).
-    Returns (logits (B,V), caches, counts)."""
+    Returns (logits (B,V), caches, counts).
+
+    ``row_valid`` ((B,) bool) marks which rows carry real requests: invalid
+    (vacant continuous-batching) rows are dropped from MoE dispatch,
+    capacity and all router counts, so their replayed tokens cannot
+    contaminate hotness or offload accounting. Their logits are garbage and
+    must not be read. ``per_row_counts=True`` returns counts values shaped
+    (nsb, B, E) instead of the aggregated (nsb, E)."""
     sb = cfg.superblock_or_default()
     x = params["embed"][token][:, None, :]  # (B, 1, d)
     B = x.shape[0]
     cap = X.moe_capacity(B, cfg.moe, capacity_factor) if cfg.is_moe else 0
+    token_valid = None if row_valid is None \
+        else jnp.asarray(row_valid, bool).reshape(-1)
+    n_rows = B if per_row_counts else None
 
     def sb_body(x, xs):
         if bank is not None:
@@ -349,7 +419,9 @@ def decode_step(params: Dict, cfg: ArchConfig, token: jax.Array,
             x, c, counts = _block_step(bp_sliced[str(pos)], cfg, pos, kind, x,
                                        cache_sliced[str(pos)], pos_idx, cap,
                                        bank_sliced, cross_sliced,
-                                       prefill=False)
+                                       prefill=False,
+                                       token_valid=token_valid,
+                                       n_rows=n_rows)
             new_caches[str(pos)] = c
             if counts is not None:
                 counts_out[str(pos)] = counts

@@ -35,6 +35,12 @@ class MoEAux(NamedTuple):
     counts: jax.Array     # (E,) int32 — router selections this call
     aux_loss: jax.Array   # scalar f32 — load-balance loss
     dropped: jax.Array    # scalar f32 — fraction of assignments dropped
+    # (R, E) int32 — selections segment-summed per row (request/slot), only
+    # when ``moe_apply(..., n_rows=R)`` asks for it. Rows whose tokens are
+    # all masked by ``token_valid`` contribute zeros, which is what lets the
+    # serving engine keep vacant continuous-batching slots and prompt
+    # padding out of the hotness signal.
+    row_counts: Optional[jax.Array] = None
 
 
 def init_moe(key, d_model: int, cfg: MoEConfig) -> Dict:
@@ -203,9 +209,7 @@ def _quant_expert_ffn(bank: ExpertBankQ, xg: jax.Array, e_offset=0,
     owner = bank.slot_owner
     if n_slot_local is not None:
         owner = jax.lax.dynamic_slice_in_dim(owner, slot_lo, n_slot_local)
-        hi = bank.hi
-    else:
-        hi = bank.hi
+    hi = bank.hi
     n_slots = owner.shape[0]
     if n_slots == 0:
         return y
@@ -225,11 +229,23 @@ def _quant_expert_ffn(bank: ExpertBankQ, xg: jax.Array, e_offset=0,
 
 def _moe_local(params: Dict, bank, x: jax.Array, cfg: MoEConfig,
                capacity: int, e_offset, e_local: int,
-               slot_lo=0, n_slot_local: Optional[int] = None, ff_axis=None):
-    """Route + dispatch for one shard (e_offset may be traced)."""
+               slot_lo=0, n_slot_local: Optional[int] = None, ff_axis=None,
+               token_valid: Optional[jax.Array] = None,
+               n_rows: Optional[int] = None):
+    """Route + dispatch for one shard (e_offset may be traced).
+
+    ``token_valid`` ((T,) bool) drops masked tokens from dispatch entirely:
+    they route to the sentinel expert (zero output, no capacity consumed)
+    and vanish from every count — the per-row validity signal prefill
+    padding and vacant decode slots ride in on. ``n_rows`` additionally
+    returns (n_rows, E) counts segment-summed over T/n_rows-token rows.
+    """
     E, k = cfg.num_experts, cfg.top_k
+    T = x.shape[0]
     gates, idx, probs = route(params["router"], x, cfg)
     sel = (idx >= e_offset) & (idx < e_offset + e_local)
+    if token_valid is not None:
+        sel = sel & token_valid[:, None]
     idx_l = jnp.where(sel, idx - e_offset, e_local)          # sentinel
     gates_l = jnp.where(sel, gates, 0.0)
     y, counts_l, dropped = dispatch_compute(
@@ -237,26 +253,58 @@ def _moe_local(params: Dict, bank, x: jax.Array, cfg: MoEConfig,
         e_offset=e_offset, slot_lo=slot_lo, n_slot_local=n_slot_local,
         ff_axis=ff_axis)
 
-    # Load-balance aux on the full (replicated) router distribution.
-    full_counts = jnp.zeros((E + 1,), jnp.int32).at[
-        jnp.clip(idx.reshape(-1), 0, E)].add(1)[:E]
-    frac_routed = full_counts.astype(jnp.float32) / jnp.maximum(x.shape[0] * k, 1)
-    mean_prob = jnp.mean(probs, axis=0)
+    # Load-balance aux on the full (replicated) router distribution,
+    # restricted to valid tokens so padding cannot skew the balance target.
+    if token_valid is None:
+        full_idx = jnp.clip(idx.reshape(-1), 0, E)
+        n_assign = x.shape[0] * k
+        mean_prob = jnp.mean(probs, axis=0)
+    else:
+        full_idx = jnp.where(token_valid[:, None], jnp.clip(idx, 0, E),
+                             E).reshape(-1)
+        n_assign = jnp.maximum(jnp.sum(token_valid), 1) * k
+        tv = token_valid[:, None].astype(jnp.float32)
+        mean_prob = jnp.sum(probs * tv, axis=0) / \
+            jnp.maximum(jnp.sum(tv), 1.0)
+    full_counts = jnp.zeros((E + 1,), jnp.int32).at[full_idx].add(1)[:E]
+    frac_routed = full_counts.astype(jnp.float32) / jnp.maximum(n_assign, 1)
     aux_loss = cfg.router_aux_coef * E * jnp.sum(frac_routed * mean_prob)
-    return y, counts_l, full_counts.astype(jnp.int32), aux_loss, dropped
+
+    row_counts = None
+    if n_rows is not None:
+        # Segment-sum the valid assignments per row: row r covers tokens
+        # [r·T/R, (r+1)·T/R). Uses GLOBAL expert ids (telemetry is shard-
+        # agnostic); masked/out-of-shard assignments fall into the E bucket.
+        tpr = T // n_rows
+        rid = jnp.arange(T, dtype=jnp.int32) // tpr
+        eid = jnp.where(sel, idx, E)
+        row_counts = jnp.zeros((n_rows, E + 1), jnp.int32).at[
+            jnp.broadcast_to(rid[:, None], (T, k)), eid].add(1)[:, :E]
+    return y, counts_l, full_counts.astype(jnp.int32), aux_loss, dropped, \
+        row_counts
 
 
 def moe_apply(params: Dict, bank: Union[Dict, ExpertBankQ], x: jax.Array,
-              cfg: MoEConfig, capacity: int) -> tuple[jax.Array, MoEAux]:
-    """Single-device path. params: {'router', ['shared']}; x: (T, d)."""
+              cfg: MoEConfig, capacity: int,
+              token_valid: Optional[jax.Array] = None,
+              n_rows: Optional[int] = None) -> tuple[jax.Array, MoEAux]:
+    """Single-device path. params: {'router', ['shared']}; x: (T, d).
+
+    ``token_valid``/``n_rows``: see ``_moe_local`` — masked tokens are
+    excluded from dispatch, capacity and every count; ``n_rows`` requests
+    per-row (R, E) counts in ``MoEAux.row_counts``.
+    """
     dist = _get_dist()
     if dist is not None:
-        return _moe_apply_sharded(params, bank, x, cfg, capacity, dist)
-    y, counts, _full, aux_loss, dropped = _moe_local(
-        params, bank, x, cfg, capacity, 0, cfg.num_experts)
+        return _moe_apply_sharded(params, bank, x, cfg, capacity, dist,
+                                  token_valid=token_valid)
+    y, counts, _full, aux_loss, dropped, row_counts = _moe_local(
+        params, bank, x, cfg, capacity, 0, cfg.num_experts,
+        token_valid=token_valid, n_rows=n_rows)
     if "shared" in params:
         y = y + swiglu(params["shared"], x)
-    return y, MoEAux(counts=counts, aux_loss=aux_loss, dropped=dropped)
+    return y, MoEAux(counts=counts, aux_loss=aux_loss, dropped=dropped,
+                     row_counts=row_counts)
 
 
 def _get_dist():
@@ -267,8 +315,14 @@ def _get_dist():
         return None
 
 
-def _moe_apply_sharded(params, bank, x, cfg: MoEConfig, capacity, dist):
+def _moe_apply_sharded(params, bank, x, cfg: MoEConfig, capacity, dist,
+                       token_valid=None):
     """shard_map expert parallelism (see module docstring).
+
+    ``token_valid`` shards alongside ``x`` and masks dispatch exactly like
+    the single-device path. Per-row counts are not produced here (rows are
+    dp-sharded; the serving engine is single-device) — ``row_counts`` stays
+    ``None``.
 
     The bank is decomposed into plain dicts around the shard_map boundary
     (PartitionSpec trees must structurally match the args; custom pytree
@@ -289,8 +343,8 @@ def _moe_apply_sharded(params, bank, x, cfg: MoEConfig, capacity, dist):
     E = cfg.num_experts
     if E % mn:
         # Cannot expert-shard — run replicated (noted by the planner).
-        y, counts, _f, aux, dropped = _moe_local(params, bank, x, cfg,
-                                                 capacity, 0, E)
+        y, counts, _f, aux, dropped, _rc = _moe_local(
+            params, bank, x, cfg, capacity, 0, E, token_valid=token_valid)
         if "shared" in params:
             y = y + swiglu(params["shared"], x)
         return y, MoEAux(counts, aux, dropped)
@@ -355,14 +409,16 @@ def _moe_apply_sharded(params, bank, x, cfg: MoEConfig, capacity, dist):
 
     params_spec = jax.tree_util.tree_map(lambda _: repl, params)
     x_spec = P(dist.dp_axes) if dist.tokens_dp_sharded else repl
+    tv_spec = None if token_valid is None else x_spec
 
-    def body(params_l, flat_l, x_l):
+    def body(params_l, flat_l, x_l, tv_l):
         j = jax.lax.axis_index(dist.model_axis)
         e_off = j * e_local
         slot_lo = (j * nh_local) if hi_shard else 0
-        y, counts_l, _full, aux, dropped = _moe_local(
+        y, counts_l, _full, aux, dropped, _rc = _moe_local(
             params_l, rebuild(flat_l), x_l, cfg, cap_local, e_off, e_local,
-            slot_lo=slot_lo, n_slot_local=nh_local, ff_axis=ff_axis)
+            slot_lo=slot_lo, n_slot_local=nh_local, ff_axis=ff_axis,
+            token_valid=tv_l)
         y = jax.lax.psum(y, dist.model_axis)
         if ff_axis is not None:   # y is D-sliced over data: gather (tiny)
             y = jax.lax.all_gather(y, ff_axis, axis=1, tiled=True)
@@ -382,10 +438,10 @@ def _moe_apply_sharded(params, bank, x, cfg: MoEConfig, capacity, dist):
 
     y, counts, aux, dropped = shard_map(
         body, mesh=mesh,
-        in_specs=(params_spec, bank_spec, x_spec),
+        in_specs=(params_spec, bank_spec, x_spec, tv_spec),
         out_specs=(x_spec, repl, repl, repl),
         **{check_kw: False},
-    )(params, flat, x)
+    )(params, flat, x, token_valid)
     return y, MoEAux(counts=counts, aux_loss=aux, dropped=dropped)
 
 

@@ -80,9 +80,18 @@ def _segsum(a: jax.Array) -> jax.Array:
 
 
 def ssd_forward(params: Dict, cfg: SSMConfig, d_model: int, x: jax.Array,
-                init_state: jax.Array | None = None):
+                init_state: jax.Array | None = None,
+                lengths: jax.Array | None = None):
     """Full-sequence SSD. x: (B, S, d_model) → (y: (B, S, d_model),
-    final MambaCache)."""
+    final MambaCache).
+
+    ``lengths`` ((B,) int32) marks each row's true length for padded
+    (length-bucketed) prefill: positions >= length get ``dt = 0`` so they
+    neither advance nor decay the SSM state (the returned state is exactly
+    the state after the last REAL token), and the conv cache window is
+    gathered per row around its own last real input instead of the batch
+    tail. Outputs at padded positions are garbage and must not be read.
+    """
     B, S, _ = x.shape
     di = cfg.d_inner(d_model)
     nh = cfg.n_heads(d_model)
@@ -98,8 +107,19 @@ def ssd_forward(params: Dict, cfg: SSMConfig, d_model: int, x: jax.Array,
     K = params["conv_w"].shape[0]
     pad = jnp.zeros((B, K - 1, xBC.shape[-1]), xBC.dtype)
     xBC_pad = jnp.concatenate([pad, xBC], axis=1)
-    # Conv cache = last K raw inputs (decode shifts one off before appending).
-    conv_tail = xBC_pad[:, S - 1: S + K - 1]
+    # Conv cache = last K raw inputs (decode shifts one off before
+    # appending); with per-row lengths, "last" means the window ending at
+    # each row's final real token: padded index (length-1) + k holds raw
+    # position length-K+k (the leading K-1 zeros cover short rows).
+    if lengths is None:
+        conv_tail = xBC_pad[:, S - 1: S + K - 1]
+    else:
+        tidx = jnp.clip(lengths[:, None] - 1, 0, S - 1) + \
+            jnp.arange(K, dtype=jnp.int32)[None, :]          # (B, K)
+        conv_tail = jnp.take_along_axis(xBC_pad, tidx[..., None], axis=1)
+        # A lengths==0 (batch-pad) row is fully inert: keep its conv window
+        # at the zero init, not the pad token's projected input.
+        conv_tail = conv_tail * (lengths > 0)[:, None, None]
     windows = jnp.stack([xBC_pad[:, i:i + S] for i in range(K)], axis=2)
     xBC = jnp.einsum("bskc,kc->bsc", windows, params["conv_w"].astype(xBC.dtype))
     xBC = jax.nn.silu(xBC.astype(jnp.float32)).astype(x.dtype)
@@ -112,6 +132,11 @@ def ssd_forward(params: Dict, cfg: SSMConfig, d_model: int, x: jax.Array,
     Cm = jnp.repeat(Cm, hpg, axis=2)
 
     dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    if lengths is not None:
+        # dt=0 at padded positions ⇒ zero input contribution AND unit decay
+        # (dA = dt·A = 0, exp(0) = 1): the state passes through unchanged.
+        pos_valid = jnp.arange(S)[None, :] < lengths[:, None]             # (B,S)
+        dt = jnp.where(pos_valid[..., None], dt, 0.0)
     A = -jnp.exp(params["A_log"])                                          # (H,)
     dA = dt * A                                                            # (B,S,H)
 

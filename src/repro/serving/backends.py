@@ -13,9 +13,13 @@ Protocol (one backend instance per engine):
 * ``materialize_banks(cfg, params, kv_bytes)`` — build the device-resident
   weight tiers; returns the per-MoE-position bank mapping the engine passes
   into the jitted forward (``None`` ⇒ dense bf16 experts from ``params``).
-* ``observe(counts, compute_s, prefill)`` — per-forward router-trace hook;
-  returns modeled *stall seconds* to charge to the step's critical path
-  (non-zero only for demand-fetch strategies like offloading).
+* ``observe(counts, compute_s, prefill, row_valid)`` — per-forward
+  router-trace hook; returns modeled *stall seconds* to charge to the
+  step's critical path (non-zero only for demand-fetch strategies like
+  offloading). ``counts`` values are either pre-masked (L, E) aggregates or
+  row-resolved (L, R, E) arrays, in which case ``row_valid`` ((R,) bool)
+  masks vacant/padding rows before they reach hotness or residency
+  accounting — no backend ever sees phantom traffic.
 * ``tick()`` — window boundary: run policies, publish completed transitions.
 * ``device_bytes()`` — resident expert bytes under this strategy's budget.
 * ``stats()`` — uniform serving stats: ``{ttft_s, tpot_s, stall_s,
@@ -34,6 +38,7 @@ import numpy as np
 
 from repro.core import (ControllerConfig, DynaExqController, build_bank,
                         expert_hi_nbytes, expert_lo_nbytes, plan_budget)
+from repro.core.hotness import mask_row_counts
 from repro.models.config import ArchConfig
 
 GiB = 1 << 30
@@ -60,7 +65,8 @@ class ResidencyBackend(Protocol):
                           kv_bytes: int) -> Optional[Dict]: ...
 
     def observe(self, counts: Dict, compute_s: float = 0.0,
-                prefill: bool = False) -> float: ...
+                prefill: bool = False,
+                row_valid: Optional[np.ndarray] = None) -> float: ...
 
     def tick(self) -> None: ...
 
@@ -144,12 +150,20 @@ class _BackendBase:
 
     # -- per-forward hook ------------------------------------------------
     def observe(self, counts: Dict, compute_s: float = 0.0,
-                prefill: bool = False) -> float:
+                prefill: bool = False,
+                row_valid: Optional[np.ndarray] = None) -> float:
+        """Accumulate one forward's router counts and run residency
+        accounting. Values may be (L, E) aggregates (accumulated as-is) or
+        row-resolved (L, R, E), in which case ``row_valid`` masks vacant/
+        padding rows before the sum (``core.hotness.mask_row_counts`` — the
+        one scrub rule every residency strategy shares)."""
+        cleaned: Dict[str, np.ndarray] = {}
         for k, c in counts.items():
-            c = np.asarray(c)
+            c = mask_row_counts(c, row_valid)
+            cleaned[k] = c
             acc = self._counts_sum.get(k)
             self._counts_sum[k] = c.copy() if acc is None else acc + c
-        stall = self._observe_residency(counts, compute_s)
+        stall = self._observe_residency(cleaned, compute_s)
         (self._ttft if prefill else self._tpot).append(compute_s + stall)
         return stall
 

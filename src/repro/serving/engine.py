@@ -5,11 +5,19 @@ handle, ``step()`` advances every in-flight request by one token, ``drain()``
 runs until the queue empties. The engine implements continuous batching over
 a fixed pool of ``max_slots`` KV-cache slots:
 
-* **admission** — a queued request claims a free slot; its prompt is
-  prefilled as a single-row forward and the resulting KV/SSM rows are
-  scattered into the slot's row of the batched caches;
+* **admission** — queued requests are batched into a padded, masked prefill:
+  prompt lengths round up a small geometric bucket ladder
+  (``bucket_base``·2^i, capped at ``max_len``), up to ``prefill_rows``
+  same-bucket requests prefill in ONE forward (per-row true lengths mask
+  padding out of attention-cache writes, MoE dispatch and router counts),
+  and each row's KV/SSM state is scattered into its slot of the batched
+  caches. XLA therefore compiles at most one prefill executable per bucket
+  — O(#buckets), not O(#distinct prompt lengths) — and admission cost
+  amortizes over the batch at high arrival rates;
 * **decode** — one jitted step advances *all* occupied slots together, with
-  a per-slot position vector (each request decodes at its own offset);
+  a per-slot position vector (each request decodes at its own offset) and a
+  per-slot validity mask: vacant slots still ride along for shape stability
+  but are masked out of MoE dispatch and every router count;
 * **eviction/refill** — a finished request frees its slot at the end of the
   step; the next ``step()`` admits queued work into it mid-stream.
 
@@ -17,20 +25,19 @@ Where expert weights live — dense fp16, static PTQ, DynaExq mixed precision,
 or host-offloaded with an LRU device cache — is entirely the
 ``ResidencyBackend``'s business (see ``repro.serving.backends``). The engine
 calls exactly the backend protocol: ``materialize_banks`` at build time,
-``observe(counts, compute_s, prefill)`` after every forward (the returned
-stall seconds are charged to the step), and ``tick()`` at step boundaries.
-There is no mode switch and no per-backend branch anywhere in this loop.
+``observe(counts, compute_s, prefill, row_valid)`` after every forward with
+per-row (slot-resolved) router counts plus the row-validity mask — so no
+backend ever accounts phantom traffic from padding or vacant slots — and
+``tick()`` at step boundaries. There is no mode switch and no per-backend
+branch anywhere in this loop.
+
+Per-request routing telemetry falls out of the same signal: every
+``RequestHandle`` accumulates its own row's expert counts
+(``handle.expert_counts``: MoE position → (nsb, E)), attributing router
+traffic to the request that caused it.
 
 ``generate(batch, n_tokens)`` survives as a thin compat shim over
 submit + drain for the whole-batch callers (benchmarks, launchers).
-
-Known limitations (tracked in ROADMAP): vacant slots still flow through the
-batched decode, so their router activity slightly contaminates
-``backend.observe`` (mitigated by replaying the slot's last real token —
-masking them out needs per-row router counts from the model); and each
-distinct prompt length traces a fresh single-row prefill, so wide length
-distributions pay per-length compiles until prefill supports padded length
-buckets.
 """
 from __future__ import annotations
 
@@ -59,25 +66,29 @@ from repro.serving.requests import Request
 # engine genuinely warms the measured one (benchmarks rely on this).
 
 @functools.partial(jax.jit, static_argnames=("cfg", "capacity_factor"))
-def _prefill_jit(params, batch, caches, banks, *, cfg, capacity_factor):
+def _prefill_jit(params, batch, caches, banks, lengths, *, cfg,
+                 capacity_factor):
     return prefill(params, cfg, batch, caches, bank=banks,
-                   capacity_factor=capacity_factor)
+                   capacity_factor=capacity_factor, lengths=lengths,
+                   per_row_counts=True)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "capacity_factor"))
-def _decode_jit(params, token, pos, caches, banks, *, cfg, capacity_factor):
+def _decode_jit(params, token, pos, caches, banks, row_valid, *, cfg,
+                capacity_factor):
     return decode_step(params, cfg, token, pos, caches, bank=banks,
-                       capacity_factor=capacity_factor)
+                       capacity_factor=capacity_factor, row_valid=row_valid,
+                       per_row_counts=True)
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
-def _scatter_row(pool, row, slot):
-    """Write a prefilled single-row cache into batch row ``slot``. The pool
-    is donated so XLA updates the (large) cache buffers in place."""
+def _scatter_rows(pool, rows, slots):
+    """Write the first ``len(slots)`` prefilled rows of a bucket cache into
+    the batch rows named by ``slots``. The pool is donated so XLA updates
+    the (large) cache buffers in place."""
+    n = slots.shape[0]
     return jax.tree_util.tree_map(
-        lambda m, o: jax.lax.dynamic_update_slice(
-            m, o, (0, slot) + (0,) * (m.ndim - 2)),
-        pool, row)
+        lambda m, o: m.at[:, slots].set(o[:, :n]), pool, rows)
 
 
 @dataclasses.dataclass
@@ -86,6 +97,10 @@ class EngineConfig:
     max_len: int = 512               # per-slot sequence budget
     capacity_factor: float = 2.0
     pad_token_id: int = 0            # fed to never-yet-occupied decode rows
+    bucket_base: int = 32            # smallest prefill length bucket
+    # Rows per batched prefill (compile-time constant so the prefill compile
+    # count stays O(#buckets)); None → min(4, max_slots).
+    prefill_rows: Optional[int] = None
 
 
 class RequestState(enum.Enum):
@@ -107,6 +122,10 @@ class RequestHandle:
         self.stall_at_submit: float = 0.0  # engine stall-clock at submit
         self.ttft_s: float = 0.0         # submit → first token (incl. queue)
         self.step_times: List[float] = []
+        # Per-request routing telemetry: MoE position → (nsb, E) int64
+        # router selections attributed to THIS request's row (prompt tokens
+        # at prefill + one per decode step). Populated at admission.
+        self.expert_counts: Optional[Dict[str, np.ndarray]] = None
 
     @property
     def workload(self) -> str:
@@ -143,7 +162,7 @@ class InferenceEngine:
         self._jit_decode = functools.partial(
             _decode_jit, cfg=cfg,
             capacity_factor=self.ecfg.capacity_factor)
-        self._jit_scatter = _scatter_row
+        self._jit_scatter = _scatter_rows
 
         n = self.ecfg.max_slots
         self.caches = init_caches(cfg, n, self.ecfg.max_len)
@@ -151,7 +170,8 @@ class InferenceEngine:
         self.pos = np.zeros(n, np.int32)        # next write position per slot
         self.tokens = np.full(n, self.ecfg.pad_token_id, np.int32)
         self.queue: deque[RequestHandle] = deque()
-        self.last_counts: Dict = {}             # router counts, last forward
+        self.last_counts: Dict = {}             # (nsb, E) counts, last forward
+        self.last_row_counts: Dict = {}         # (nsb, R, E), last forward
         self.decode_times: List[float] = []     # per-step latency incl. stall
         self.ttfts: List[float] = []            # per-request submit→first-tok
         # Cumulative modeled stall seconds (backend-returned, never slept):
@@ -161,6 +181,29 @@ class InferenceEngine:
         self._ids = itertools.count()
         self.counters = {"steps": 0, "prefills": 0, "admitted": 0,
                          "finished": 0}
+        # ---- length-bucket ladder -----------------------------------
+        # SSD prefill requires sequence length divisible by the chunk size,
+        # so for stacks with mamba layers every bucket is a chunk multiple.
+        sb = cfg.superblock_or_default()
+        self._seq_mult = cfg.ssm.chunk if "mamba" in sb else 1
+        m = self._seq_mult
+        cap = (self.ecfg.max_len // m) * m
+        if cap <= 0:
+            raise ValueError(
+                f"max_len={self.ecfg.max_len} below the SSD chunk multiple "
+                f"{m}; no prefill bucket fits")
+        base = max(1, -(-self.ecfg.bucket_base // m) * m)
+        ladder: List[int] = []
+        v = base
+        while v < cap:
+            ladder.append(v)
+            v *= 2
+        ladder.append(cap)
+        self.buckets = tuple(ladder)            # ascending, last == cap
+        self._max_prompt = cap
+        self._prefill_rows = self.ecfg.prefill_rows \
+            if self.ecfg.prefill_rows is not None else min(4, n)
+        self.prefill_shapes: set = set()        # (rows, bucket) traced
 
     # ------------------------------------------------------------------
     def _kv_bytes(self) -> int:
@@ -179,65 +222,120 @@ class InferenceEngine:
         """Queue a request; it is admitted on a later ``step()`` as soon as
         a cache slot frees up. Returns immediately with a handle.
 
-        The prompt must fit the slot (``len(tokens) <= max_len``). A
-        generation budget that overruns the slot is fine — common for
-        eos-bounded requests — the request is truncated at the sequence
-        capacity (finishes with fewer than ``max_new_tokens`` tokens)."""
+        The prompt must fit the largest prefill bucket (``max_len`` rounded
+        down to the engine's sequence multiple). A generation budget that
+        overruns the slot is fine — common for eos-bounded requests — the
+        request is truncated at the sequence capacity (finishes with fewer
+        than ``max_new_tokens`` tokens)."""
         plen = int(np.asarray(request.tokens).shape[-1])
-        if plen > self.ecfg.max_len:
+        if plen > self._max_prompt:
             raise ValueError(
-                f"prompt of {plen} tokens exceeds the slot capacity "
-                f"max_len={self.ecfg.max_len}")
+                f"prompt of {plen} tokens exceeds the largest prefill "
+                f"bucket {self._max_prompt} (max_len={self.ecfg.max_len})")
         handle = RequestHandle(next(self._ids), request)
         handle.submit_s = time.perf_counter()
         handle.stall_at_submit = self._stall_clock
         self.queue.append(handle)
         return handle
 
+    def _bucket_len(self, plen: int) -> int:
+        """Smallest ladder bucket that fits ``plen`` tokens."""
+        for b in self.buckets:
+            if b >= plen:
+                return b
+        raise ValueError(f"prompt of {plen} tokens exceeds the largest "
+                         f"bucket {self.buckets[-1]}")
+
+    @staticmethod
+    def _prompt_len(handle: RequestHandle) -> int:
+        return int(np.asarray(handle.request.tokens).reshape(-1).shape[0])
+
     def _admit(self, finished: List[RequestHandle]) -> None:
-        """Fill free slots from the queue: single-row prefill, scatter the
-        row into the batched caches, emit the first token."""
+        """Fill free slots from the queue with batched, length-bucketed
+        masked prefills: the queue head picks the bucket, same-bucket
+        requests behind it join (up to ``prefill_rows`` and the free-slot
+        count), the batch right-pads to (prefill_rows, bucket), and each
+        prefilled row scatters into its slot of the batched caches. Batch
+        rows beyond the group are ``lengths == 0`` pads, so every prefill
+        compiles at one of O(#buckets) shapes."""
         while self.queue:
-            slot = next((i for i, h in enumerate(self.slots) if h is None),
-                        None)
-            if slot is None:
+            free = [i for i, h in enumerate(self.slots) if h is None]
+            if not free:
                 return
-            handle = self.queue.popleft()
-            prompt = np.asarray(handle.request.tokens, np.int32).reshape(-1)
-            row_caches = init_caches(self.cfg, 1, self.ecfg.max_len)
+            R = self._prefill_rows
+            limit = min(len(free), R)
+            head = self.queue.popleft()
+            bucket = self._bucket_len(self._prompt_len(head))
+            group = [head]
+            skipped: List[RequestHandle] = []
+            while self.queue and len(group) < limit:
+                h = self.queue.popleft()
+                if self._bucket_len(self._prompt_len(h)) == bucket:
+                    group.append(h)
+                else:
+                    skipped.append(h)
+            self.queue.extendleft(reversed(skipped))
+
+            G = len(group)
+            lengths = np.zeros(R, np.int32)
+            batch_toks = np.full((R, bucket), self.ecfg.pad_token_id,
+                                 np.int32)
+            for r, h in enumerate(group):
+                p = np.asarray(h.request.tokens, np.int32).reshape(-1)
+                lengths[r] = p.shape[0]
+                batch_toks[r, :p.shape[0]] = p
+            row_caches = init_caches(self.cfg, R, self.ecfg.max_len)
             t0 = time.perf_counter()
             logits, row_caches, counts = self._jit_prefill(
-                self.params, {"tokens": jnp.asarray(prompt[None, :])},
-                row_caches, self.banks)
+                self.params, {"tokens": jnp.asarray(batch_toks)},
+                row_caches, self.banks, jnp.asarray(lengths))
             logits.block_until_ready()
             dt = time.perf_counter() - t0
-            self.last_counts = counts
-            stall = self.backend.observe(counts, dt, prefill=True)
-            # Scatter the single prefilled row into this slot's batch row.
+            self.prefill_shapes.add((R, bucket))
+            counts_np = {k: np.asarray(v) for k, v in counts.items()}
+            self.last_row_counts = counts_np
+            self.last_counts = {k: v.sum(axis=1) if v.ndim == 3 else v
+                                for k, v in counts_np.items()}
+            row_valid = np.zeros(R, bool)
+            row_valid[:G] = True
+            stall = self.backend.observe(counts_np, dt, prefill=True,
+                                         row_valid=row_valid)
+            # Scatter the prefilled rows into their slots' batch rows.
+            slots_arr = np.asarray(free[:G], np.int32)
             self.caches = DecodeCaches(
                 blocks=self._jit_scatter(self.caches.blocks,
-                                         row_caches.blocks, jnp.int32(slot)),
+                                         row_caches.blocks,
+                                         jnp.asarray(slots_arr)),
                 cross=None)
             self._stall_clock += stall
-            tok = int(np.asarray(jnp.argmax(logits, -1))[0])
-            handle.tokens.append(tok)
-            # Serving TTFT: submit → first token. Wall clock covers queue
-            # wait and the prefills admitted ahead of it; the stall-clock
-            # delta charges every MODELED stall since submit (predecessors'
-            # demand misses and this forward's own) that wall time never
-            # slept. The backend's own ttft_s tracks per-prefill latency.
-            handle.ttft_s = (time.perf_counter() - handle.submit_s +
-                             self._stall_clock - handle.stall_at_submit)
-            self.ttfts.append(handle.ttft_s)
-            handle.state = RequestState.RUNNING
-            handle.slot = slot
-            self.slots[slot] = handle
-            self.pos[slot] = len(prompt)
-            self.tokens[slot] = tok
+            first = np.asarray(jnp.argmax(logits, -1), np.int32)
+            for r, handle in enumerate(group):
+                slot = int(slots_arr[r])
+                tok = int(first[r])
+                handle.tokens.append(tok)
+                # Serving TTFT: submit → first token. Wall clock covers
+                # queue wait and the prefills admitted ahead of it; the
+                # stall-clock delta charges every MODELED stall since submit
+                # (predecessors' demand misses and this forward's own) that
+                # wall time never slept. The backend's own ttft_s tracks
+                # per-prefill latency.
+                handle.ttft_s = (time.perf_counter() - handle.submit_s +
+                                 self._stall_clock - handle.stall_at_submit)
+                self.ttfts.append(handle.ttft_s)
+                handle.state = RequestState.RUNNING
+                handle.slot = slot
+                # Per-request attribution needs row-resolved counts; under
+                # shard_map expert parallelism only aggregates exist.
+                handle.expert_counts = {
+                    k: v[:, r].astype(np.int64)
+                    for k, v in counts_np.items() if v.ndim == 3}
+                self.slots[slot] = handle
+                self.pos[slot] = int(lengths[r])
+                self.tokens[slot] = tok
+                self.counters["admitted"] += 1
+                if self._done(handle):
+                    self._finish(handle, finished)
             self.counters["prefills"] += 1
-            self.counters["admitted"] += 1
-            if self._done(handle):
-                self._finish(handle, finished)
 
     def _done(self, handle: RequestHandle) -> bool:
         req = handle.request
@@ -253,12 +351,10 @@ class InferenceEngine:
                 finished: List[RequestHandle]) -> None:
         handle.state = RequestState.FINISHED
         self.slots[handle.slot] = None
-        # The vacated row keeps its last real token (not the pad token):
-        # vacant rows still flow through the batched decode, and replaying
-        # recent real traffic distorts the router-count observation far less
-        # than pad-token routing would. (The structural fix — per-row router
-        # counts so vacant rows can be masked out of observe() — is a
-        # ROADMAP item.)
+        # The vacated row keeps replaying its last token through the batched
+        # decode (shape stability), but row_valid masks it out of MoE
+        # dispatch and every router count — vacancy is invisible to hotness
+        # and residency accounting.
         self.counters["finished"] += 1
         finished.append(handle)
 
@@ -271,14 +367,20 @@ class InferenceEngine:
         self._admit(finished)
         active = [(i, h) for i, h in enumerate(self.slots) if h is not None]
         if active:
+            row_valid = np.asarray([h is not None for h in self.slots], bool)
             t0 = time.perf_counter()
             logits, self.caches, counts = self._jit_decode(
                 self.params, jnp.asarray(self.tokens),
-                jnp.asarray(self.pos), self.caches, self.banks)
+                jnp.asarray(self.pos), self.caches, self.banks,
+                jnp.asarray(row_valid))
             logits.block_until_ready()
             dt = time.perf_counter() - t0
-            self.last_counts = counts
-            stall = self.backend.observe(counts, dt, prefill=False)
+            counts_np = {k: np.asarray(v) for k, v in counts.items()}
+            self.last_row_counts = counts_np
+            self.last_counts = {k: v.sum(axis=1) if v.ndim == 3 else v
+                                for k, v in counts_np.items()}
+            stall = self.backend.observe(counts_np, dt, prefill=False,
+                                         row_valid=row_valid)
             self._stall_clock += stall
             latency = dt + stall
             self.decode_times.append(latency)
@@ -287,6 +389,9 @@ class InferenceEngine:
                 tok = int(next_tokens[i])
                 handle.tokens.append(tok)
                 handle.step_times.append(latency)
+                for k, v in counts_np.items():
+                    if v.ndim == 3 and k in handle.expert_counts:
+                        handle.expert_counts[k] += v[:, i]
                 self.tokens[i] = tok
                 self.pos[i] += 1
                 if self._done(handle):
@@ -377,6 +482,7 @@ class InferenceEngine:
         if self.ttfts:
             out["ttft_s"] = float(np.mean(self.ttfts))
         out.update({k: float(v) for k, v in self.counters.items()})
+        out["prefill_compiles"] = float(len(self.prefill_shapes))
         return out
 
     def device_bytes(self) -> int:

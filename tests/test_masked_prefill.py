@@ -1,0 +1,307 @@
+"""Length-bucketed masked prefill + per-row routing telemetry.
+
+Covers the ISSUE-2 acceptance criteria end to end:
+
+* padded-bucket prefill is BIT-IDENTICAL to exact-length single-row prefill
+  (logits and KV/SSM cache rows), for attention, sliding-window ring caches
+  and mamba (SSD) stacks;
+* per-row router counts exclude prompt padding and vacant decode slots, so
+  a hotness EMA fed from a fully-occupied engine matches one fed from the
+  same traffic interleaved with vacant slots bit-for-bit;
+* a mixed-length request stream (≥8 distinct prompt lengths) compiles at
+  most ``#buckets`` prefill executables.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.hotness import HotnessEstimator
+from repro.models import decode_step, init_caches, init_params, prefill
+from repro.models.config import AttnConfig
+from repro.serving import (EngineConfig, Fp16Backend, InferenceEngine,
+                           Request, make_backend, make_prompts)
+from repro.serving.engine import _prefill_jit
+
+
+def _pad_to(toks_rows, bucket, pad=0):
+    out = np.full((len(toks_rows), bucket), pad, np.int32)
+    for r, t in enumerate(toks_rows):
+        out[r, : len(t)] = t
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Model-level parity
+# ---------------------------------------------------------------------------
+
+def test_padded_prefill_matches_exact(serving_setup):
+    """Padded-bucket prefill == exact-length single-row prefill, bit for
+    bit: per-row logits, per-row KV cache prefixes, per-row counts."""
+    cfg, params = serving_setup
+    lens = [5, 11, 17]
+    rows = [make_prompts("text", cfg.vocab_size, 1, ln, seed=ln)[0]
+            for ln in lens]
+    padded = _pad_to(rows, 32)
+    lengths = jnp.asarray(np.array(lens, np.int32))
+    lg_pad, caches_pad, counts = prefill(
+        params, cfg, {"tokens": jnp.asarray(padded)},
+        init_caches(cfg, len(lens), 64), capacity_factor=8.0,
+        lengths=lengths, per_row_counts=True)
+
+    for r, (ln, row) in enumerate(zip(lens, rows)):
+        lg, c1, _ = prefill(params, cfg, {"tokens": jnp.asarray(row[None])},
+                            init_caches(cfg, 1, 64), capacity_factor=8.0)
+        np.testing.assert_array_equal(np.asarray(lg[0]),
+                                      np.asarray(lg_pad[r]))
+        for p, cc in c1.blocks.items():
+            np.testing.assert_array_equal(
+                np.asarray(cc.k)[:, 0, :, :ln],
+                np.asarray(caches_pad.blocks[p].k)[:, r, :, :ln])
+            np.testing.assert_array_equal(
+                np.asarray(cc.v)[:, 0, :, :ln],
+                np.asarray(caches_pad.blocks[p].v)[:, r, :, :ln])
+
+    # per-row counts: exactly top_k selections per REAL token, none for pad
+    rc = np.asarray(counts["0"])                       # (nsb, B, E)
+    np.testing.assert_array_equal(
+        rc.sum(axis=(0, 2)),
+        cfg.moe.top_k * np.array(lens) * cfg.n_superblocks())
+
+
+def test_padded_prefill_zero_length_row_inert(serving_setup):
+    """A lengths==0 batch-pad row contributes no counts and the other rows
+    are unaffected by its presence."""
+    cfg, params = serving_setup
+    row = make_prompts("code", cfg.vocab_size, 1, 9, seed=1)[0]
+    padded = _pad_to([row, row], 32)
+    lg, _, counts = prefill(params, cfg, {"tokens": jnp.asarray(padded)},
+                            init_caches(cfg, 2, 64), capacity_factor=8.0,
+                            lengths=jnp.asarray([9, 0]), per_row_counts=True)
+    rc = np.asarray(counts["0"])
+    assert rc[:, 1].sum() == 0
+    lg1, _, _ = prefill(params, cfg, {"tokens": jnp.asarray(row[None])},
+                        init_caches(cfg, 1, 64), capacity_factor=8.0)
+    np.testing.assert_array_equal(np.asarray(lg1[0]), np.asarray(lg[0]))
+
+
+def test_padded_prefill_ssm_state_parity():
+    """Masked SSD prefill: padded rows leave the recurrent state and conv
+    window exactly as the last REAL token left them (dt=0 pass-through +
+    per-row conv-tail gather), so decode continues bit-identically."""
+    cfg = get_config("mamba2-130m", reduced=True)
+    params = init_params(jax.random.PRNGKey(1), cfg)
+    Q = cfg.ssm.chunk
+    L, S = 2 * Q, 4 * Q
+    toks = make_prompts("math", cfg.vocab_size, 1, S, seed=2)
+    lg_pad, caches_pad, _ = prefill(
+        params, cfg, {"tokens": jnp.asarray(toks)}, init_caches(cfg, 1, S),
+        capacity_factor=8.0, lengths=jnp.asarray([L]))
+    lg_ref, caches_ref, _ = prefill(
+        params, cfg, {"tokens": jnp.asarray(toks[:, :L])},
+        init_caches(cfg, 1, S), capacity_factor=8.0)
+    np.testing.assert_array_equal(np.asarray(lg_ref), np.asarray(lg_pad))
+    np.testing.assert_array_equal(
+        np.asarray(caches_ref.blocks["0"].state),
+        np.asarray(caches_pad.blocks["0"].state))
+    np.testing.assert_array_equal(
+        np.asarray(caches_ref.blocks["0"].conv),
+        np.asarray(caches_pad.blocks["0"].conv))
+    tok = jnp.asarray(np.array([7], np.int32))
+    lg_d_pad, _, _ = decode_step(params, cfg, tok, jnp.int32(L), caches_pad,
+                                 capacity_factor=8.0)
+    lg_d_ref, _, _ = decode_step(params, cfg, tok, jnp.int32(L), caches_ref,
+                                 capacity_factor=8.0)
+    np.testing.assert_array_equal(np.asarray(lg_d_ref), np.asarray(lg_d_pad))
+
+
+def test_sliding_window_ring_masked_write():
+    """Short row in a long bucket with a ring (sliding-window) cache: the
+    per-row masked write keeps each row's true window, not the batch tail
+    (which would be pure padding for the short row)."""
+    from repro.models import layers as L
+
+    acfg = AttnConfig(n_heads=4, n_kv_heads=2, head_dim=8, sliding_window=8)
+    p = L.init_attention(jax.random.PRNGKey(0), 16, acfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 32, 16),
+                          jnp.bfloat16)
+    ln = 13
+    # exact: prefill only the real tokens
+    _, cache_ref = L.attention_prefill(p, acfg, x[:, :ln],
+                                       L.init_kv_cache(1, 8, acfg))
+    # padded: full 32-wide bucket with a per-row length
+    _, cache_pad = L.attention_prefill(p, acfg, x,
+                                       L.init_kv_cache(1, 8, acfg),
+                                       lengths=jnp.asarray([ln]))
+    np.testing.assert_array_equal(np.asarray(cache_ref.k),
+                                  np.asarray(cache_pad.k))
+    np.testing.assert_array_equal(np.asarray(cache_ref.v),
+                                  np.asarray(cache_pad.v))
+    # and decode from both caches agrees bit-for-bit
+    xd = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 16), jnp.bfloat16)
+    out_ref, _ = L.attention_decode(p, acfg, xd, jnp.int32(ln), cache_ref)
+    out_pad, _ = L.attention_decode(p, acfg, xd, jnp.int32(ln), cache_pad)
+    np.testing.assert_array_equal(np.asarray(out_ref), np.asarray(out_pad))
+
+
+def test_decode_row_valid_masks_counts(serving_setup):
+    """decode_step(row_valid=...) zeroes vacant rows' router counts without
+    touching valid rows' logits."""
+    cfg, params = serving_setup
+    caches = init_caches(cfg, 3, 64)
+    toks = make_prompts("text", cfg.vocab_size, 3, 8)
+    _, caches, _ = prefill(params, cfg, {"tokens": jnp.asarray(toks)},
+                           caches, capacity_factor=8.0)
+    tok = jnp.asarray(np.array([1, 2, 3], np.int32))
+    valid = jnp.asarray([True, False, True])
+    lg_m, _, counts = decode_step(params, cfg, tok, jnp.int32(8), caches,
+                                  capacity_factor=8.0, row_valid=valid,
+                                  per_row_counts=True)
+    lg, _, _ = decode_step(params, cfg, tok, jnp.int32(8), caches,
+                           capacity_factor=8.0)
+    rc = np.asarray(counts["0"])                       # (nsb, 3, E)
+    assert rc[:, 1].sum() == 0
+    assert rc[:, 0].sum() == cfg.moe.top_k * cfg.n_superblocks()
+    np.testing.assert_array_equal(np.asarray(lg[0]), np.asarray(lg_m[0]))
+    np.testing.assert_array_equal(np.asarray(lg[2]), np.asarray(lg_m[2]))
+
+
+# ---------------------------------------------------------------------------
+# Engine-level: hotness parity + compile count
+# ---------------------------------------------------------------------------
+
+class _RecordingBackend(Fp16Backend):
+    """Fp16 backend that snapshots every CLEANED per-forward count dict
+    (after observe()'s row masking) for step-by-step EMA replay."""
+
+    def __init__(self):
+        super().__init__()
+        self.trace = []
+
+    def _observe_residency(self, counts, compute_s):
+        self.trace.append({k: v.copy() for k, v in counts.items()})
+        return 0.0
+
+
+def _bucketed_engine(cfg, params, backend, max_slots, max_len=64,
+                     prefill_rows=2):
+    clone = jax.tree_util.tree_map(lambda x: x, params)
+    return InferenceEngine(cfg, clone, backend,
+                           EngineConfig(max_slots=max_slots, max_len=max_len,
+                                        prefill_rows=prefill_rows))
+
+
+def test_vacant_slot_masking_hotness_identical(serving_setup):
+    """The acceptance bit: a fully-occupied engine and an engine with twice
+    the slots (so half stay vacant through every decode) produce BIT-
+    IDENTICAL hotness EMAs from the same traffic."""
+    cfg, params = serving_setup
+    reqs = [Request(tokens=make_prompts("text", cfg.vocab_size, 1, ln,
+                                        seed=ln)[0], max_new_tokens=5)
+            for ln in (7, 12)]
+
+    scores = []
+    for max_slots in (2, 4):                  # 4 ⇒ two vacant decode rows
+        backend = _RecordingBackend()
+        eng = _bucketed_engine(cfg, params, backend, max_slots)
+        for r in reqs:
+            eng.submit(Request(tokens=r.tokens,
+                               max_new_tokens=r.max_new_tokens))
+        eng.drain()
+        nsb = cfg.n_superblocks()
+        est = HotnessEstimator(nsb, cfg.moe.num_experts, alpha=0.8)
+        for step_counts in backend.trace:
+            est.observe(step_counts["0"])
+            est.fold()
+        scores.append(est.scores.copy())
+    assert len(scores[0]) and (scores[0] == scores[1]).all()
+    # and the raw accumulated router counts agree exactly too
+    np.testing.assert_array_equal(scores[0], scores[1])
+
+
+def test_mixed_length_stream_compiles_per_bucket(serving_setup):
+    """≥8 distinct prompt lengths admit through at most #buckets prefill
+    executables (the O(#buckets) compile bound)."""
+    cfg, params = serving_setup
+    eng = _bucketed_engine(cfg, params, make_backend("fp16"), max_slots=4,
+                           max_len=64, prefill_rows=4)
+    lens = (4, 7, 9, 13, 18, 23, 29, 33, 41, 55)
+    assert len(set(lens)) >= 8
+    before = _prefill_jit._cache_size()
+    handles = [eng.submit(Request(
+        tokens=make_prompts("text", cfg.vocab_size, 1, ln, seed=ln)[0],
+        max_new_tokens=2)) for ln in lens]
+    eng.drain()
+    n_buckets = len(eng.buckets)
+    assert len(eng.prefill_shapes) <= n_buckets, eng.prefill_shapes
+    assert _prefill_jit._cache_size() - before <= n_buckets
+    assert all(len(h.tokens) == 2 for h in handles)
+    assert eng.counters["prefills"] < len(lens)   # batched admission
+
+
+def test_bucket_ladder_geometry(serving_setup):
+    cfg, params = serving_setup
+    eng = _bucketed_engine(cfg, params, make_backend("fp16"), max_slots=2,
+                           max_len=96)
+    assert eng.buckets == (32, 64, 96)
+    assert eng._bucket_len(1) == 32
+    assert eng._bucket_len(33) == 64
+    assert eng._bucket_len(96) == 96
+    with pytest.raises(ValueError):
+        eng.submit(Request(tokens=np.zeros(97, np.int32)))
+
+
+def test_bucket_ladder_ssm_chunk_multiple():
+    """Stacks with mamba layers get chunk-multiple buckets (SSD requires
+    S % chunk == 0) and serve mixed-length prompts through them."""
+    cfg = get_config("mamba2-130m", reduced=True)
+    cfg = dataclasses.replace(cfg, n_layers=2)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = InferenceEngine(cfg, params, make_backend("fp16"),
+                          EngineConfig(max_slots=2, max_len=64,
+                                       prefill_rows=2))
+    Q = cfg.ssm.chunk
+    assert all(b % Q == 0 for b in eng.buckets), (eng.buckets, Q)
+    handles = [eng.submit(Request(
+        tokens=make_prompts("text", cfg.vocab_size, 1, ln, seed=ln)[0],
+        max_new_tokens=2)) for ln in (5, 19, 40)]   # none chunk-aligned
+    eng.drain()
+    assert all(len(h.tokens) == 2 for h in handles)
+
+
+def test_engine_expert_counts_telemetry(serving_setup):
+    """Per-request routing telemetry: each handle's expert_counts sums to
+    top_k × (prompt + decoded tokens) × nsb selections, and the sum over
+    handles equals the backend's accumulated (already cleaned) counts."""
+    cfg, params = serving_setup
+    eng = _bucketed_engine(cfg, params, make_backend("fp16"), max_slots=3)
+    lens, new = (6, 15, 9), 3
+    handles = [eng.submit(Request(
+        tokens=make_prompts("math", cfg.vocab_size, 1, ln, seed=ln)[0],
+        max_new_tokens=new)) for ln in lens]
+    eng.drain()
+    nsb, k = cfg.n_superblocks(), cfg.moe.top_k
+    total = np.zeros_like(handles[0].expert_counts["0"])
+    for h, ln in zip(handles, lens):
+        # prompt tokens + all decode steps except the last generated token
+        # (its forward never runs — the request finishes on emission)
+        assert h.expert_counts["0"].sum() == k * nsb * (ln + new - 1)
+        total = total + h.expert_counts["0"]
+    np.testing.assert_array_equal(total, eng.backend.router_counts()["0"])
+
+
+def test_hotness_row_resolved_observe():
+    est = HotnessEstimator(2, 4)
+    rc = np.zeros((2, 3, 4), np.int64)
+    rc[:, 0, 1] = 5
+    rc[:, 1, 2] = 7       # vacant row — must be dropped
+    rc[:, 2, 3] = 1
+    est.observe(rc, row_valid=np.array([True, False, True]))
+    expect = np.zeros((2, 4), np.int64)
+    expect[:, 1], expect[:, 3] = 5, 1
+    np.testing.assert_array_equal(est.counts, expect)
+    with pytest.raises(ValueError):
+        est.observe(np.zeros((3, 4)))
