@@ -29,7 +29,7 @@ def main() -> None:
         print(f"{name},{us_per_call:.1f},{derived}")
 
     from benchmarks import (activation_ratio, demotion_curve, kernels_bench,
-                            prompt_scaling, quality, serving_perf,
+                            kv_reuse, prompt_scaling, quality, serving_perf,
                             serving_sim, workload_shift)
     suites = [
         ("activation_ratio", activation_ratio.run),
@@ -38,6 +38,7 @@ def main() -> None:
         ("quality", quality.run),
         ("serving_sim", serving_sim.run),
         ("serving_perf", serving_perf.run),
+        ("kv_reuse", kv_reuse.run),
         ("prompt_scaling", prompt_scaling.run),
         ("kernels", kernels_bench.run),
         ("kernels_flash", kernels_bench.run_flash),

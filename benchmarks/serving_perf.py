@@ -131,14 +131,16 @@ def run(report):
         results["by_batch"][str(bs)] = rows
 
     # ---- mixed-length workload: bucketed-admission win ------------------
-    from repro.serving.engine import _prefill_jit
+    # The engine serves KV from the paged block pool by default, so the
+    # compile-count guard watches the PAGED prefill entry point.
+    from repro.serving.engine import _prefill_paged_jit
     for kind in ("static", "dynaexq"):
         # Real compile-count guard: the warm-up run's ACTUAL jit traces
         # (prefill_shapes bookkeeping alone would track a regression rather
         # than catch it). Measured per kind — each bank pytree traces anew.
-        cache_before = _prefill_jit._cache_size()
+        cache_before = _prefill_paged_jit._cache_size()
         _run_mixed(kind, cfg, params)                  # warm-up compile
-        new_traces = _prefill_jit._cache_size() - cache_before
+        new_traces = _prefill_paged_jit._cache_size() - cache_before
         st = _run_mixed(kind, cfg, params)
         st["prefill_traces"] = float(new_traces)
         results["mixed_length"][kind] = st

@@ -1,7 +1,8 @@
 """DynaExq core — the paper's contribution: online, budget-constrained
 precision allocation for MoE serving (hotness → top-n policy → VER +
 non-blocking transitions under a hard HBM budget)."""
-from repro.core.budget import BudgetTracker, BudgetPlan, plan_budget, BudgetExceeded
+from repro.core.budget import (BudgetTracker, BudgetView, BudgetPlan,
+                               UNBOUNDED, plan_budget, BudgetExceeded)
 from repro.core.controller import ControllerConfig, DynaExqController
 from repro.core.hotness import HotnessEstimator, mask_row_counts
 from repro.core.policy import PolicyConfig, select_hi_set
@@ -13,7 +14,8 @@ from repro.core.ver import (
 )
 
 __all__ = [
-    "BudgetTracker", "BudgetPlan", "plan_budget", "BudgetExceeded",
+    "BudgetTracker", "BudgetView", "BudgetPlan", "UNBOUNDED",
+    "plan_budget", "BudgetExceeded",
     "ControllerConfig", "DynaExqController", "HotnessEstimator",
     "mask_row_counts",
     "PolicyConfig", "select_hi_set", "SlotPool", "TransitionManager",

@@ -33,7 +33,11 @@ class ControllerConfig:
 class DynaExqController:
     def __init__(self, bank: ExpertBankQ, host_hi: Dict[str, np.ndarray],
                  n_hi_per_layer: int, hi_bytes_per_expert: int,
-                 cfg: Optional[ControllerConfig] = None):
+                 cfg: Optional[ControllerConfig] = None, tracker=None):
+        """``tracker``: optional byte-reservation ledger (e.g. an
+        account-scoped ``BudgetView`` of a serving engine's shared HBM
+        envelope, so promotions contend with KV-cache admission); defaults
+        to a private tracker capped at the hi pool's own size."""
         # A dataclass default instance would be shared (and mutated) across
         # every controller; each controller gets its own config.
         cfg = cfg if cfg is not None else ControllerConfig()
@@ -43,7 +47,8 @@ class DynaExqController:
         self.policy = PolicyConfig(
             n_hi=n_hi_per_layer, margin=cfg.margin,
             max_transitions_per_layer=cfg.max_transitions_per_layer)
-        self.tracker = BudgetTracker(n_hi_per_layer * L * hi_bytes_per_expert)
+        self.tracker = tracker if tracker is not None else \
+            BudgetTracker(n_hi_per_layer * L * hi_bytes_per_expert)
         self.tm = TransitionManager(
             bank, host_hi, self.tracker, hi_bytes_per_expert,
             migration_bytes_per_window=cfg.migration_bytes_per_window)

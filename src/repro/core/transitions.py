@@ -39,6 +39,11 @@ class PendingPromotion:
     expert: int
     slot: int
     nbytes: int
+    # THIS copy's result arrays (one per bank leaf). Readiness must be
+    # probed on these — ``bank.hi`` is overwritten by every later
+    # ``_issue_copy``, so peeking the bank would let an older promotion
+    # publish on a newer copy's completion (and vice versa).
+    arrays: tuple = ()
 
 
 class TransitionManager:
@@ -114,7 +119,9 @@ class TransitionManager:
             new_hi[name] = write_hi_slot(leaf, jnp.int32(layer),
                                          jnp.int32(slot), w)
         self.bank.hi = new_hi  # dispatched, not yet waited on
-        self._pending.append(PendingPromotion(layer, expert, slot, self.hi_bytes))
+        self._pending.append(PendingPromotion(
+            layer, expert, slot, self.hi_bytes,
+            arrays=tuple(new_hi.values())))
         self.stats["bytes_moved"] += self.hi_bytes
 
     def _demote(self, layer: int, expert: int) -> None:
@@ -130,17 +137,20 @@ class TransitionManager:
 
     def publish_ready(self, wait: bool = False) -> int:
         """Publish completed copies (window boundary). ``wait=True`` blocks on
-        all in-flight copies (used at shutdown / in tests)."""
+        all in-flight copies (used at shutdown / in tests). Each pending
+        promotion is probed on ITS OWN result arrays (``p.arrays``), never
+        on the bank's current leaves — the bank only reflects the most
+        recently issued copy."""
         if not self._pending:
             self._flush_maps()
             return 0
         still = []
         published = 0
         for p in self._pending:
-            leaf = self.bank.hi[next(iter(self.bank.hi))]
-            ready = wait or _is_ready(leaf)
+            ready = wait or all(_is_ready(a) for a in p.arrays)
             if ready and wait:
-                jax.block_until_ready(leaf)
+                for a in p.arrays:
+                    jax.block_until_ready(a)
             if not ready:
                 still.append(p)
                 continue

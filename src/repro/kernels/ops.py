@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.quant_matmul import quant_matmul, grouped_quant_matmul
-from repro.kernels.flash_decode import flash_decode
+from repro.kernels.flash_decode import flash_decode, flash_decode_paged
 from repro.quant.qtensor import QuantizedTensor
 
 
@@ -46,3 +46,14 @@ def flash_decode_op(q: jax.Array, k: jax.Array, v: jax.Array,
                     interpret: bool | None = None) -> jax.Array:
     interpret = _interpret_default() if interpret is None else interpret
     return flash_decode(q, k, v, valid, bs=bs, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def flash_decode_paged_op(q: jax.Array, k: jax.Array, v: jax.Array,
+                          table: jax.Array, valid: jax.Array,
+                          interpret: bool | None = None) -> jax.Array:
+    """Block-table flash decode over the paged KV pool (see
+    ``flash_decode_paged``); k/v are (N, Hkv, bt, hd) physical blocks —
+    the ``PagedKVCache`` layout, one superblock slice."""
+    interpret = _interpret_default() if interpret is None else interpret
+    return flash_decode_paged(q, k, v, table, valid, interpret=interpret)

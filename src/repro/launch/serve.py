@@ -51,6 +51,16 @@ def main():
     ap.add_argument("--full", action="store_true",
                     help="full (assigned) config — needs a real accelerator")
     ap.add_argument("--workload", default="text")
+    ap.add_argument("--dense-kv", action="store_true",
+                    help="dense per-slot KV rows instead of the paged pool")
+    ap.add_argument("--block-tokens", type=int, default=16,
+                    help="KV positions per paged block")
+    ap.add_argument("--no-prefix-sharing", action="store_true",
+                    help="disable trie-based cross-request prefix reuse")
+    ap.add_argument("--hbm-budget-gb", type=float, default=None,
+                    help="unified envelope shared by KV blocks and the "
+                         "expert hi tier (promotion backpressure under KV "
+                         "pressure)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=not args.full)
@@ -60,7 +70,12 @@ def main():
     engine = InferenceEngine(
         cfg, params, build_backend(args),
         EngineConfig(max_slots=args.batch,
-                     max_len=args.prompt_len + args.new_tokens + 8))
+                     max_len=args.prompt_len + args.new_tokens + 8,
+                     paged=not args.dense_kv,
+                     block_tokens=args.block_tokens,
+                     prefix_sharing=not args.no_prefix_sharing,
+                     hbm_budget_bytes=None if args.hbm_budget_gb is None
+                     else int(args.hbm_budget_gb * (1 << 30))))
     toks = make_prompts(args.workload, cfg.vocab_size,
                         args.batch, args.prompt_len)
     t0 = time.perf_counter()

@@ -1,11 +1,13 @@
 from repro.models.config import ArchConfig, AttnConfig, MoEConfig, SSMConfig
 from repro.models.model import (
-    init_params, init_caches, forward_train, prefill, decode_step,
+    init_params, init_caches, init_paged_caches, attn_logical_capacity,
+    forward_train, prefill, prefill_paged, decode_step, decode_step_paged,
     DecodeCaches,
 )
 
 __all__ = [
     "ArchConfig", "AttnConfig", "MoEConfig", "SSMConfig",
-    "init_params", "init_caches", "forward_train", "prefill", "decode_step",
-    "DecodeCaches",
+    "init_params", "init_caches", "init_paged_caches",
+    "attn_logical_capacity", "forward_train", "prefill", "prefill_paged",
+    "decode_step", "decode_step_paged", "DecodeCaches",
 ]

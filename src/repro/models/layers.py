@@ -79,6 +79,48 @@ def init_kv_cache(batch: int, capacity: int, cfg: AttnConfig,
     return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
 
 
+class PagedKVCache(NamedTuple):
+    """Physical KV block pool, laid out (N, Hkv, bt, hd): ``N`` fixed-size
+    blocks of ``bt`` cache positions each, shared by every request. A
+    request's logical cache is named by a *block table* row ((nb,) int32 of
+    physical block ids, -1 = unallocated): gathering the table recovers the
+    exact (Hkv, nb·bt, hd) head-major view the dense ``KVCache`` stores per
+    batch row, so both layouts run the same attention math. Block 0 is the
+    pool's trash block (vacant-row writes land there; see
+    ``repro.serving.kvpool``)."""
+    k: jax.Array  # (N, Hkv, bt, hd)
+    v: jax.Array  # (N, Hkv, bt, hd)
+
+    @property
+    def n_blocks(self) -> int:
+        return self.k.shape[0]
+
+    @property
+    def block_tokens(self) -> int:
+        return self.k.shape[2]
+
+
+def init_paged_kv_cache(n_blocks: int, block_tokens: int, cfg: AttnConfig,
+                        dtype=jnp.bfloat16) -> PagedKVCache:
+    shape = (n_blocks, cfg.n_kv_heads, block_tokens, cfg.head_dim)
+    return PagedKVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def paged_view(cache: PagedKVCache, table: jax.Array
+               ) -> tuple[jax.Array, jax.Array]:
+    """Gather-by-block-table: (B, nb) table → (B, Hkv, nb·bt, hd) logical
+    K/V views (slot order = logical cache order). Unallocated (-1) entries
+    read the trash block; callers mask those slots out of attention."""
+    B, nb = table.shape
+    idx = jnp.clip(table, 0)
+    k = cache.k[idx]                           # (B, nb, Hkv, bt, hd)
+    v = cache.v[idx]
+    Hkv, bt, hd = k.shape[2], k.shape[3], k.shape[4]
+    k = jnp.moveaxis(k, 2, 1).reshape(B, Hkv, nb * bt, hd)
+    v = jnp.moveaxis(v, 2, 1).reshape(B, Hkv, nb * bt, hd)
+    return k, v
+
+
 def init_attention(key, d_model: int, cfg: AttnConfig) -> Param:
     ks = jax.random.split(key, 4)
     p = {
@@ -270,6 +312,42 @@ def attention_prefill(p: Param, cfg: AttnConfig, x: jax.Array,
     return out @ p["wo"], KVCache(new_k, new_v)
 
 
+def _attend_cache(q: jax.Array, k_all: jax.Array, v_all: jax.Array,
+                  pos_b: jax.Array, cfg: AttnConfig) -> jax.Array:
+    """Single-token attention over a written cache view. ``q``: (B,1,H,hd);
+    ``k_all``/``v_all``: (B, Hkv, C, hd) head-major views (dense rows or
+    block-table gathers — same math either way); ``pos_b``: (B,) positions
+    just written. Slot i of a row's view holds the largest position
+    p <= pos with p % C == i (full cache ⇒ slot == position)."""
+    B, C = q.shape[0], k_all.shape[2]
+    idx = jnp.arange(C)[None, :]
+    if cfg.sliding_window is None:
+        valid = idx <= pos_b[:, None]                             # (B, C)
+    else:
+        # slot i holds the largest position p' <= pos with p' % C == i.
+        slot_pos = pos_b[:, None] - jnp.mod(pos_b[:, None] - idx, C)
+        valid = (slot_pos >= 0) & \
+            (slot_pos > pos_b[:, None] - cfg.sliding_window)
+
+    H, hd = cfg.n_heads, cfg.head_dim
+    Hkv = cfg.n_kv_heads
+    rep = H // Hkv
+    # q head order H = g·rep + r matches the (B,1,H,hd) projection reshape.
+    qg = q.reshape(B, Hkv, rep, hd).reshape(B * Hkv, rep, hd)
+    kf = k_all.reshape(B * Hkv, C, hd)
+    vf = v_all.reshape(B * Hkv, C, hd)
+    # bf16 dot (TPU MXU accumulates f32 natively; requesting f32 out here
+    # makes the CPU lowering convert the ENTIRE cache to f32 every layer,
+    # which would poison the roofline bytes and the real TPU layout alike).
+    logits = jnp.einsum("brd,bkd->brk", qg, kf).astype(jnp.float32) * hd ** -0.5
+    # valid (B, C) → rows of the (B·Hkv) flattened batch, b-major like kf.
+    logits = jnp.where(jnp.repeat(valid, Hkv, axis=0)[:, None, :],
+                       logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("brk,bkd->brd", probs, vf)        # (B·Hkv, rep, hd)
+    return out.reshape(B, 1, H * hd)
+
+
 def attention_decode(p: Param, cfg: AttnConfig, x: jax.Array, pos: jax.Array,
                      cache: KVCache) -> tuple[jax.Array, KVCache]:
     """One-token decode. ``x``: (B, 1, d); ``pos``: scalar int32 or (B,)
@@ -291,34 +369,106 @@ def attention_decode(p: Param, cfg: AttnConfig, x: jax.Array, pos: jax.Array,
     slot_mask = (jnp.arange(C)[None, :] == slot[:, None])[:, None, :, None]
     new_k = jnp.where(slot_mask, k.transpose(0, 2, 1, 3), cache.k)
     new_v = jnp.where(slot_mask, v.transpose(0, 2, 1, 3), cache.v)
-    # Absolute position held by each slot after the write, per sequence.
-    idx = jnp.arange(C)[None, :]
-    if cfg.sliding_window is None:
-        valid = idx <= pos_b[:, None]                             # (B, C)
-    else:
-        # slot i holds the largest position p' <= pos with p' % C == i.
-        slot_pos = pos_b[:, None] - jnp.mod(pos_b[:, None] - idx, C)
-        valid = (slot_pos >= 0) & \
-            (slot_pos > pos_b[:, None] - cfg.sliding_window)
-
-    H, hd = cfg.n_heads, cfg.head_dim
-    Hkv = cfg.n_kv_heads
-    rep = H // Hkv
-    # q head order H = g·rep + r matches the (B,1,H,hd) projection reshape.
-    qg = q.reshape(B, Hkv, rep, hd).reshape(B * Hkv, rep, hd)
-    kf = new_k.reshape(B * Hkv, C, hd)
-    vf = new_v.reshape(B * Hkv, C, hd)
-    # bf16 dot (TPU MXU accumulates f32 natively; requesting f32 out here
-    # makes the CPU lowering convert the ENTIRE cache to f32 every layer,
-    # which would poison the roofline bytes and the real TPU layout alike).
-    logits = jnp.einsum("brd,bkd->brk", qg, kf).astype(jnp.float32) * hd ** -0.5
-    # valid (B, C) → rows of the (B·Hkv) flattened batch, b-major like kf.
-    logits = jnp.where(jnp.repeat(valid, Hkv, axis=0)[:, None, :],
-                       logits, -1e30)
-    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
-    out = jnp.einsum("brk,bkd->brd", probs, vf)        # (B·Hkv, rep, hd)
-    out = out.reshape(B, 1, H * hd)
+    out = _attend_cache(q, new_k, new_v, pos_b, cfg)
     return out @ p["wo"], KVCache(new_k, new_v)
+
+
+def attention_decode_paged(p: Param, cfg: AttnConfig, x: jax.Array,
+                           pos: jax.Array, cache: PagedKVCache,
+                           table: jax.Array, write_blk: jax.Array,
+                           write_off: jax.Array
+                           ) -> tuple[jax.Array, PagedKVCache]:
+    """One-token decode against the paged pool. ``table``: (B, nb) block
+    tables; ``write_blk``/``write_off``: (B,) physical block + in-block
+    offset for each row's write (COW already resolved host-side — the
+    engine routes vacant rows to the trash block). After the scatter the
+    gathered logical view equals the dense cache row bit for bit, so decode
+    shares ``_attend_cache`` with the contiguous path."""
+    B = x.shape[0]
+    pos = jnp.asarray(pos, jnp.int32)
+    pos_b = jnp.broadcast_to(pos, (B,)) if pos.ndim == 0 else pos
+    q, k, v = _project_qkv(p, cfg, x, pos_b[:, None])
+    new_k = cache.k.at[write_blk, :, write_off].set(k[:, 0])
+    new_v = cache.v.at[write_blk, :, write_off].set(v[:, 0])
+    cache = PagedKVCache(new_k, new_v)
+    k_all, v_all = paged_view(cache, table)
+    out = _attend_cache(q, k_all, v_all, pos_b, cfg)
+    return out @ p["wo"], cache
+
+
+def attention_prefill_paged(p: Param, cfg: AttnConfig, x: jax.Array,
+                            cache: PagedKVCache, table: jax.Array,
+                            start: jax.Array, lengths: jax.Array,
+                            has_prefix: bool = False
+                            ) -> tuple[jax.Array, PagedKVCache]:
+    """Masked prefill of a prompt SUFFIX into pool blocks.
+
+    ``x``: (B, S, d) embeds of tokens ``start[b] .. lengths[b]-1`` (right-
+    padded to the bucket S); ``start``: (B,) int32 prefix-hit offsets (0 =
+    whole prompt); ``lengths``: (B,) TOTAL prompt lengths. ``table``:
+    (B, nb) block tables covering logical slots 0..nb·bt — for a prefix hit
+    the leading entries alias trie-shared blocks whose contents were written
+    by an earlier request (any block this call writes was COWed or freshly
+    allocated by the engine first).
+
+    Writes use the same per-slot last-owner rule as the dense masked
+    prefill (ring wrap included), restricted to positions >= start so
+    shared prefix slots are never touched. With ``has_prefix`` the suffix
+    queries additionally attend over the gathered prefix K/V (read before
+    the write), giving exact continuation semantics without recomputing a
+    single prefix token. Outputs at padded positions are garbage and must
+    not be read."""
+    B, S, _ = x.shape
+    bt = cache.block_tokens
+    C = table.shape[1] * bt
+    start = jnp.asarray(start, jnp.int32)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    positions = start[:, None] + jnp.arange(S)[None, :]           # (B, S)
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    if has_prefix:
+        # Prefix view BEFORE the suffix write (the data dependency keeps
+        # the gather ordered ahead of the scatter inside one jit).
+        pk, pv = paged_view(cache, table)                # (B, Hkv, C, hd)
+
+    # ---- scatter suffix K/V: slot s takes the row's largest real position
+    # p in [start, length) with p % C == s; all other lanes hit the trash
+    # block (never a live one).
+    idx = jnp.arange(C)[None, :]
+    last = lengths[:, None] - 1 - jnp.mod(lengths[:, None] - 1 - idx, C)
+    own = (last >= start[:, None]) & (lengths[:, None] > start[:, None])
+    src = jnp.clip(last - start[:, None], 0, S - 1)
+    kc = k.transpose(0, 2, 1, 3)                          # (B, Hkv, S, hd)
+    vc = v.transpose(0, 2, 1, 3)
+    gk = jnp.take_along_axis(kc, src[:, None, :, None], axis=2)
+    gv = jnp.take_along_axis(vc, src[:, None, :, None], axis=2)
+    blk = jnp.take_along_axis(table, jnp.broadcast_to(idx // bt, (B, C)),
+                              axis=1)
+    phys = jnp.where(own, jnp.clip(blk, 0), 0)
+    offs = jnp.broadcast_to(idx % bt, (B, C))
+    new_k = cache.k.at[phys, :, offs].set(gk.transpose(0, 2, 1, 3))
+    new_v = cache.v.at[phys, :, offs].set(gv.transpose(0, 2, 1, 3))
+
+    # ---- suffix queries over [cached prefix ⊕ suffix] ------------------
+    qpos = positions[:, :, None]                          # (B, S, 1)
+    kpos = positions[:, None, :]                          # (B, 1, S)
+    mask = (kpos <= qpos) & (kpos < lengths[:, None, None])
+    if cfg.sliding_window is not None:
+        mask = mask & (kpos > qpos - cfg.sliding_window)
+    if has_prefix:
+        # Slot s of the pre-write view holds prefix position
+        # p_s = largest p < start with p % C == s (ring and full alike).
+        ppos = start[:, None] - 1 - jnp.mod(start[:, None] - 1 - idx, C)
+        pmask = jnp.broadcast_to((ppos >= 0)[:, None, :], (B, S, C))
+        if cfg.sliding_window is not None:
+            pmask = pmask & (ppos[:, None, :] > qpos - cfg.sliding_window)
+        k_cat = jnp.concatenate([pk.transpose(0, 2, 1, 3), k], axis=1)
+        v_cat = jnp.concatenate([pv.transpose(0, 2, 1, 3), v], axis=1)
+        mask = jnp.concatenate([pmask, jnp.broadcast_to(mask, (B, S, S))],
+                               axis=-1)
+        out = _sdpa(q, k_cat, v_cat, mask, cfg.n_heads)
+    else:
+        out = _sdpa(q, k, v, jnp.broadcast_to(mask, (B, S, S)), cfg.n_heads)
+    return out @ p["wo"], PagedKVCache(new_k, new_v)
 
 
 # --------------------------------------------------------------------------

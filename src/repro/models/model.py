@@ -136,11 +136,18 @@ class DecodeCaches(NamedTuple):
 
 
 def init_caches(cfg: ArchConfig, batch: int, max_len: int,
-                dtype=jnp.bfloat16) -> DecodeCaches:
+                dtype=jnp.bfloat16,
+                positions: Optional[list] = None) -> DecodeCaches:
+    """``positions``: optional subset of super-block position keys (str) to
+    build caches for — e.g. only the mamba positions when the attention KV
+    lives in a shared paged pool (allocating dense rows to throw away would
+    waste device memory on every admission)."""
     sb = cfg.superblock_or_default()
     nsb = cfg.n_superblocks()
     blocks = {}
     for pos, kind in enumerate(sb):
+        if positions is not None and str(pos) not in positions:
+            continue
         if kind == "attn":
             cap = max_len if cfg.attn.sliding_window is None \
                 else min(max_len, cfg.attn.sliding_window)
@@ -155,6 +162,41 @@ def init_caches(cfg: ArchConfig, batch: int, max_len: int,
                  cfg.attn.head_dim)
         cross = {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
     return DecodeCaches(blocks=blocks, cross=cross)
+
+
+def attn_logical_capacity(cfg: ArchConfig, max_len: int,
+                          block_tokens: int) -> int:
+    """Per-sequence logical KV capacity under paging: the dense capacity
+    (``max_len``, or the sliding window) rounded UP to a whole number of
+    blocks. Extra padded slots are never valid, so attention results match
+    the dense cache exactly."""
+    cap = max_len if cfg.attn.sliding_window is None \
+        else min(max_len, cfg.attn.sliding_window)
+    return -(-cap // block_tokens) * block_tokens
+
+
+def init_paged_caches(cfg: ArchConfig, batch: int, max_len: int,
+                      block_tokens: int, n_blocks: int,
+                      dtype=jnp.bfloat16) -> DecodeCaches:
+    """Decode caches for the paged engine: attention positions hold ONE
+    shared (nsb, N, Hkv, bt, hd) physical block pool (batch-independent —
+    requests lease blocks out of it via block tables), while mamba
+    positions keep their per-slot recurrent state rows (O(1) per slot, so
+    paging them buys nothing)."""
+    if cfg.is_encoder_decoder:
+        raise NotImplementedError("paged caches are decoder-only")
+    sb = cfg.superblock_or_default()
+    nsb = cfg.n_superblocks()
+    blocks = {}
+    for pos, kind in enumerate(sb):
+        if kind == "attn":
+            c = L.init_paged_kv_cache(n_blocks, block_tokens, cfg.attn,
+                                      dtype)
+        else:
+            c = S.init_mamba_cache(batch, cfg.d_model, cfg.ssm, dtype)
+        blocks[str(pos)] = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (nsb,) + a.shape).copy(), c)
+    return DecodeCaches(blocks=blocks, cross=None)
 
 
 # --------------------------------------------------------------------------
@@ -199,17 +241,35 @@ def _block_train(bp: Dict, cfg: ArchConfig, pos: int, kind: str, x: jax.Array,
 def _block_step(bp: Dict, cfg: ArchConfig, pos: int, kind: str, x: jax.Array,
                 cache, pos_idx, capacity: int, bank,
                 cross_kv, prefill: bool, lengths=None, token_valid=None,
-                n_rows=None):
+                n_rows=None, paged: Optional[Dict] = None):
     """Shared prefill/decode body. x: (B, S, d) (S=1 for decode).
 
     ``lengths``/``token_valid``/``n_rows`` carry the per-row validity
     signal: masked cache writes for padded prefill, masked MoE dispatch,
     and optional per-row router counts (see ``prefill``/``decode_step``).
+    ``paged`` switches attention positions to the block-table path
+    (gather/scatter against the shared ``PagedKVCache`` pool): a dict with
+    ``table`` (B, nb) and either ``write_blk``/``write_off`` (decode) or
+    ``start``/``has_prefix`` (prefill). Mamba positions are unaffected —
+    their per-slot state is not paged.
     Returns (x, cache, counts) where counts is (E,) or (n_rows, E)."""
     B, Sq, d = x.shape
     h = L.rmsnorm(bp["norm1"], x, cfg.norm_eps)
     if kind == "attn":
-        if prefill:
+        if paged is not None:
+            if prefill:
+                # paged["lengths"] are TOTAL prompt lengths (prefix + the
+                # suffix being computed); the ``lengths`` param carries the
+                # suffix lengths for the non-paged (mamba) positions.
+                attn_out, cache = L.attention_prefill_paged(
+                    bp["attn"], cfg.attn, h, cache, paged["table"],
+                    paged["start"], paged["lengths"],
+                    has_prefix=paged["has_prefix"])
+            else:
+                attn_out, cache = L.attention_decode_paged(
+                    bp["attn"], cfg.attn, h, pos_idx, cache,
+                    paged["table"], paged["write_blk"], paged["write_off"])
+        elif prefill:
             attn_out, cache = L.attention_prefill(bp["attn"], cfg.attn, h,
                                                   cache, lengths=lengths)
         else:
@@ -433,5 +493,124 @@ def decode_step(params: Dict, cfg: ArchConfig, token: jax.Array,
     x, (new_blocks, counts) = _scan(sb_body, x, xs)
     logits = _lm_logits(params, cfg, x)[:, 0]
     return logits, DecodeCaches(blocks=new_blocks, cross=caches.cross), counts
+
+
+# --------------------------------------------------------------------------
+# Paged entry points (block-table KV, see repro.serving.kvpool)
+# --------------------------------------------------------------------------
+
+def prefill_paged(params: Dict, cfg: ArchConfig, batch: Dict,
+                  caches: DecodeCaches, block_table: jax.Array,
+                  start: jax.Array, lengths: jax.Array, bank=None,
+                  capacity_factor: Optional[float] = None,
+                  per_row_counts: bool = False, has_prefix: bool = False):
+    """Masked prefill of prompt SUFFIXES into the paged KV pool.
+
+    ``batch["tokens"]``: (R, S) rows holding tokens ``start[r]`` ..
+    ``lengths[r]-1`` right-padded to the bucket width S; ``lengths`` are
+    TOTAL prompt lengths, so ``lengths - start`` are the per-row suffix
+    lengths (0 ⇒ inert batch-pad row). ``block_table``: (R, nb) physical
+    block ids (the engine pre-resolves allocation and copy-on-write).
+    ``has_prefix=True`` (static) additionally attends each suffix over its
+    row's cached prefix blocks — the prefix-sharing fast path that skips
+    recomputing trie-hit tokens entirely. Prefix skips are only valid for
+    attention-state stacks: rows of stacks with mamba positions must have
+    ``start == 0`` (their recurrent state cannot be leased from a cache).
+
+    Returns (suffix-last-token logits (R, V), caches, counts); attention
+    leaves of ``caches`` are the UPDATED shared pools."""
+    sb = cfg.superblock_or_default()
+    if cfg.is_encoder_decoder:
+        raise NotImplementedError("paged prefill is decoder-only")
+    x = _embed_inputs(params, cfg, batch)
+    R, Stot, d = x.shape
+    cap = X.moe_capacity(R * Stot, cfg.moe, capacity_factor) if cfg.is_moe \
+        else 0
+    start = jnp.asarray(start, jnp.int32)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    suffix_lens = lengths - start
+    token_valid = (jnp.arange(Stot)[None, :] <
+                   suffix_lens[:, None]).reshape(-1)
+    n_rows = R if per_row_counts else None
+    paged = {"table": block_table, "start": start, "lengths": lengths,
+             "has_prefix": has_prefix}
+
+    def sb_body(x, xs):
+        if bank is not None:
+            bp_sliced, cache_sliced, bank_sliced = xs
+        else:
+            bp_sliced, cache_sliced = xs
+            bank_sliced = None
+        counts_out, new_caches = {}, {}
+        for pos, kind in enumerate(sb):
+            x, c, counts = _block_step(bp_sliced[str(pos)], cfg, pos, kind, x,
+                                       cache_sliced[str(pos)], None, cap,
+                                       bank_sliced, None,
+                                       prefill=True, lengths=suffix_lens,
+                                       token_valid=token_valid,
+                                       n_rows=n_rows, paged=paged)
+            new_caches[str(pos)] = c
+            if counts is not None:
+                counts_out[str(pos)] = counts
+        return x, (new_caches, counts_out)
+
+    xs = (params["blocks"], caches.blocks)
+    if bank is not None:
+        xs = xs + (bank,)
+    x, (new_blocks, counts) = _scan(sb_body, x, xs)
+    last = jnp.clip(suffix_lens - 1, 0, Stot - 1)
+    x_last = x[jnp.arange(R), last][:, None, :]
+    logits = _lm_logits(params, cfg, x_last)[:, 0]
+    return logits, DecodeCaches(blocks=new_blocks, cross=None), counts
+
+
+def decode_step_paged(params: Dict, cfg: ArchConfig, token: jax.Array,
+                      pos_idx: jax.Array, caches: DecodeCaches,
+                      block_table: jax.Array, write_blk: jax.Array,
+                      write_off: jax.Array, bank=None,
+                      capacity_factor: float = 2.0,
+                      row_valid: Optional[jax.Array] = None,
+                      per_row_counts: bool = False):
+    """One-token decode against the paged KV pool: ``decode_step`` with the
+    attention cache addressed through per-row block tables. ``write_blk``/
+    ``write_off`` ((B,) int32) name each row's pre-resolved physical write
+    target (vacant rows point at the trash block). Semantics otherwise
+    identical to ``decode_step`` — the gathered logical view equals the
+    dense per-slot cache bit for bit."""
+    sb = cfg.superblock_or_default()
+    x = params["embed"][token][:, None, :]  # (B, 1, d)
+    B = x.shape[0]
+    cap = X.moe_capacity(B, cfg.moe, capacity_factor) if cfg.is_moe else 0
+    token_valid = None if row_valid is None \
+        else jnp.asarray(row_valid, bool).reshape(-1)
+    n_rows = B if per_row_counts else None
+    paged = {"table": block_table, "write_blk": write_blk,
+             "write_off": write_off}
+
+    def sb_body(x, xs):
+        if bank is not None:
+            bp_sliced, cache_sliced, bank_sliced = xs
+        else:
+            bp_sliced, cache_sliced = xs
+            bank_sliced = None
+        counts_out, new_caches = {}, {}
+        for pos, kind in enumerate(sb):
+            x, c, counts = _block_step(bp_sliced[str(pos)], cfg, pos, kind, x,
+                                       cache_sliced[str(pos)], pos_idx, cap,
+                                       bank_sliced, None,
+                                       prefill=False,
+                                       token_valid=token_valid,
+                                       n_rows=n_rows, paged=paged)
+            new_caches[str(pos)] = c
+            if counts is not None:
+                counts_out[str(pos)] = counts
+        return x, (new_caches, counts_out)
+
+    xs = (params["blocks"], caches.blocks)
+    if bank is not None:
+        xs = xs + (bank,)
+    x, (new_blocks, counts) = _scan(sb_body, x, xs)
+    logits = _lm_logits(params, cfg, x)[:, 0]
+    return logits, DecodeCaches(blocks=new_blocks, cross=None), counts
 
 

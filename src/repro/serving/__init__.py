@@ -4,13 +4,16 @@ from repro.serving.backends import (BACKENDS, DynaExqBackend, Fp16Backend,
                                     StaticPTQBackend, make_backend)
 from repro.serving.engine import (EngineConfig, InferenceEngine,
                                   RequestHandle, RequestState)
+from repro.serving.kvpool import KVBlockPool, KVLease, TRASH_BLOCK
+from repro.serving.prefix import PrefixTrie
 from repro.serving.requests import (Request, RequestStream, WORKLOADS,
                                     make_prompts, mixed_stream)
 
 __all__ = [
     "BACKENDS", "DynaExqBackend", "EngineConfig", "Fp16Backend",
-    "InferenceEngine", "LRUSet", "OffloadBackend", "OffloadConfig",
-    "Request", "RequestHandle", "RequestState", "RequestStream",
-    "ResidencyBackend", "STAT_KEYS", "StaticPTQBackend", "WORKLOADS",
+    "InferenceEngine", "KVBlockPool", "KVLease", "LRUSet", "OffloadBackend",
+    "OffloadConfig", "PrefixTrie", "Request", "RequestHandle",
+    "RequestState", "RequestStream", "ResidencyBackend", "STAT_KEYS",
+    "StaticPTQBackend", "TRASH_BLOCK", "WORKLOADS",
     "make_backend", "make_prompts", "mixed_stream",
 ]

@@ -10,9 +10,14 @@ structural, not an artifact of two different serving loops.
 
 Protocol (one backend instance per engine):
 
-* ``materialize_banks(cfg, params, kv_bytes)`` — build the device-resident
-  weight tiers; returns the per-MoE-position bank mapping the engine passes
-  into the jitted forward (``None`` ⇒ dense bf16 experts from ``params``).
+* ``materialize_banks(cfg, params, kv_bytes, budget=None)`` — build the
+  device-resident weight tiers; returns the per-MoE-position bank mapping
+  the engine passes into the jitted forward (``None`` ⇒ dense bf16 experts
+  from ``params``). ``kv_bytes`` is the KV pool's own accounting (the
+  engine's block math — no backend re-derives KV sizes); ``budget`` is the
+  engine's shared ``BudgetTracker``: residency strategies that gate byte
+  movement (DynaExq's hi tier) reserve through account-scoped views of it,
+  so expert promotions and KV block admission contend for ONE HBM envelope.
 * ``observe(counts, compute_s, prefill, row_valid)`` — per-forward
   router-trace hook; returns modeled *stall seconds* to charge to the
   step's critical path (non-zero only for demand-fetch strategies like
@@ -62,7 +67,7 @@ class ResidencyBackend(Protocol):
     name: str
 
     def materialize_banks(self, cfg: ArchConfig, params: Dict,
-                          kv_bytes: int) -> Optional[Dict]: ...
+                          kv_bytes: int, budget=None) -> Optional[Dict]: ...
 
     def observe(self, counts: Dict, compute_s: float = 0.0,
                 prefill: bool = False,
@@ -132,12 +137,14 @@ class _BackendBase:
         self._tpot: list[float] = []
         self._counts_sum: Dict[str, np.ndarray] = {}
         self.cfg: Optional[ArchConfig] = None
+        self.budget = None                  # engine's shared BudgetTracker
         self.moe_positions: list[int] = []
 
     # -- lifecycle -------------------------------------------------------
     def materialize_banks(self, cfg: ArchConfig, params: Dict,
-                          kv_bytes: int) -> Optional[Dict]:
+                          kv_bytes: int, budget=None) -> Optional[Dict]:
         self.cfg = cfg
+        self.budget = budget
         sb = cfg.superblock_or_default()
         self.moe_positions = [p for p, _ in enumerate(sb)
                               if cfg.ffn_kind(p) == "moe"] if cfg.is_moe \
@@ -301,9 +308,18 @@ class DynaExqBackend(_BackendBase):
                               hi_bits=self.hi_bits)
             self.banks[str(pos)] = bank
             if n_hi > 0:
+                # Under an engine-shared budget each position's hi tier is
+                # an account-scoped view: its own cap is the classic
+                # n_hi·L·hi_bytes pool, but every reservation also passes
+                # through the ONE envelope KV blocks draw from — KV
+                # pressure defers promotions, demotions free admission
+                # headroom.
+                tracker = None if self.budget is None else \
+                    self.budget.view(f"hi:{pos}", cap=n_hi * L * hi_b)
                 self.controllers[str(pos)] = DynaExqController(
                     bank, host_hi, n_hi_per_layer=n_hi,
-                    hi_bytes_per_expert=hi_b, cfg=self.controller_cfg)
+                    hi_bytes_per_expert=hi_b, cfg=self.controller_cfg,
+                    tracker=tracker)
             params["blocks"][str(pos)]["moe"]["experts"] = None
         return self.banks
 

@@ -1,17 +1,17 @@
-"""Request-level MoE serving engine with pluggable expert residency.
+"""Request-level MoE serving engine with pluggable expert residency and a
+paged, prefix-shared KV cache.
 
 The unit of work is a **request**, not a batch: ``submit(request)`` returns a
 handle, ``step()`` advances every in-flight request by one token, ``drain()``
 runs until the queue empties. The engine implements continuous batching over
-a fixed pool of ``max_slots`` KV-cache slots:
+a fixed pool of ``max_slots`` batch rows:
 
 * **admission** — queued requests are batched into a padded, masked prefill:
   prompt lengths round up a small geometric bucket ladder
   (``bucket_base``·2^i, capped at ``max_len``), up to ``prefill_rows``
   same-bucket requests prefill in ONE forward (per-row true lengths mask
-  padding out of attention-cache writes, MoE dispatch and router counts),
-  and each row's KV/SSM state is scattered into its slot of the batched
-  caches. XLA therefore compiles at most one prefill executable per bucket
+  padding out of attention-cache writes, MoE dispatch and router counts).
+  XLA therefore compiles at most one prefill executable per bucket
   — O(#buckets), not O(#distinct prompt lengths) — and admission cost
   amortizes over the batch at high arrival rates;
 * **decode** — one jitted step advances *all* occupied slots together, with
@@ -21,10 +21,28 @@ a fixed pool of ``max_slots`` KV-cache slots:
 * **eviction/refill** — a finished request frees its slot at the end of the
   step; the next ``step()`` admits queued work into it mid-stream.
 
+KV residency (``paged=True``, the default) is a **block pool**
+(``repro.serving.kvpool``): attention caches live as fixed-size physical
+blocks leased to requests through per-slot block tables, with a token-prefix
+trie (``repro.serving.prefix``) mapping shared prompt prefixes (system
+prompts, few-shot headers) onto the SAME physical blocks — admission adopts
+trie hits and prefills only the suffix, skipping recompute entirely; decode
+appends lazily and copy-on-writes shared blocks on divergence. KV block
+bytes are reserved from the same ``BudgetTracker`` the expert hi-tier
+promotes against, so KV admission and DynaExq promotions genuinely contend
+for one HBM envelope (``hbm_budget_bytes``): KV pressure defers promotions,
+demotions free headroom for admission. ``paged=False`` keeps the dense
+per-slot rows — the parity reference. (Parity caveat: with a TIGHT MoE
+``capacity_factor`` the router may drop overflow tokens, and the drop set
+is a function of the compute batch — prefix skipping changes that batch,
+exactly like batching itself does. Token-identity between the shared and
+dense paths is therefore guaranteed for drop-free capacity settings.)
+
 Where expert weights live — dense fp16, static PTQ, DynaExq mixed precision,
 or host-offloaded with an LRU device cache — is entirely the
 ``ResidencyBackend``'s business (see ``repro.serving.backends``). The engine
-calls exactly the backend protocol: ``materialize_banks`` at build time,
+calls exactly the backend protocol: ``materialize_banks`` at build time
+(receiving the POOL's byte accounting and the shared budget),
 ``observe(counts, compute_s, prefill, row_valid)`` after every forward with
 per-row (slot-resolved) router counts plus the row-validity mask — so no
 backend ever accounts phantom traffic from padding or vacant slots — and
@@ -34,7 +52,8 @@ branch anywhere in this loop.
 Per-request routing telemetry falls out of the same signal: every
 ``RequestHandle`` accumulates its own row's expert counts
 (``handle.expert_counts``: MoE position → (nsb, E)), attributing router
-traffic to the request that caused it.
+traffic to the request that caused it (prefix-skipped tokens are attributed
+to the request that originally computed them).
 
 ``generate(batch, n_tokens)`` survives as a thin compat shim over
 submit + drain for the whole-batch callers (benchmarks, launchers).
@@ -47,16 +66,21 @@ import functools
 import itertools
 import time
 from collections import deque
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import decode_step, init_caches, prefill
+from repro.core.budget import UNBOUNDED, BudgetTracker
+from repro.models import (attn_logical_capacity, decode_step,
+                          decode_step_paged, init_caches, init_paged_caches,
+                          prefill, prefill_paged)
 from repro.models.config import ArchConfig
 from repro.models.model import DecodeCaches
 from repro.serving.backends import ResidencyBackend
+from repro.serving.kvpool import KVBlockPool, KVLease
+from repro.serving.prefix import PrefixTrie
 from repro.serving.requests import Request
 
 
@@ -81,6 +105,26 @@ def _decode_jit(params, token, pos, caches, banks, row_valid, *, cfg,
                        per_row_counts=True)
 
 
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "capacity_factor", "has_prefix"),
+                   donate_argnums=(2,))
+def _prefill_paged_jit(params, batch, caches, banks, table, start, lengths,
+                       *, cfg, capacity_factor, has_prefix):
+    return prefill_paged(params, cfg, batch, caches, table, start, lengths,
+                         bank=banks, capacity_factor=capacity_factor,
+                         per_row_counts=True, has_prefix=has_prefix)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "capacity_factor"),
+                   donate_argnums=(3,))
+def _decode_paged_jit(params, token, pos, caches, banks, row_valid, table,
+                      write_blk, write_off, *, cfg, capacity_factor):
+    return decode_step_paged(params, cfg, token, pos, caches, table,
+                             write_blk, write_off, bank=banks,
+                             capacity_factor=capacity_factor,
+                             row_valid=row_valid, per_row_counts=True)
+
+
 @functools.partial(jax.jit, donate_argnums=(0,))
 def _scatter_rows(pool, rows, slots):
     """Write the first ``len(slots)`` prefilled rows of a bucket cache into
@@ -89,6 +133,17 @@ def _scatter_rows(pool, rows, slots):
     n = slots.shape[0]
     return jax.tree_util.tree_map(
         lambda m, o: m.at[:, slots].set(o[:, :n]), pool, rows)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _copy_blocks(pools, src, dst):
+    """Batched physical block copies (COW resolution): block ``src[i]`` →
+    ``dst[i]`` in every attention pool leaf ((nsb, N, ...)). Sources are
+    all gathered before any scatter, so same-step chains (A→B while A is
+    reallocated as another copy's destination) read pre-step contents.
+    Padding lanes are trash→trash self-copies."""
+    return jax.tree_util.tree_map(
+        lambda a: a.at[:, dst].set(a[:, src]), pools)
 
 
 @dataclasses.dataclass
@@ -101,6 +156,16 @@ class EngineConfig:
     # Rows per batched prefill (compile-time constant so the prefill compile
     # count stays O(#buckets)); None → min(4, max_slots).
     prefill_rows: Optional[int] = None
+    # ---- paged KV pool ------------------------------------------------
+    paged: bool = True               # block-pool KV (False = dense rows)
+    block_tokens: int = 16           # cache positions per physical block
+    # Physical blocks in the pool; None → exactly enough for max_slots full
+    # sequences plus the trash block (sharing then only ADDS headroom).
+    kv_blocks: Optional[int] = None
+    prefix_sharing: bool = True      # trie-based cross-request prefix reuse
+    # Unified HBM envelope shared by KV block reservations and the expert
+    # hi tier (None = unbounded: per-subsystem caps still apply).
+    hbm_budget_bytes: Optional[int] = None
 
 
 class RequestState(enum.Enum):
@@ -122,6 +187,8 @@ class RequestHandle:
         self.stall_at_submit: float = 0.0  # engine stall-clock at submit
         self.ttft_s: float = 0.0         # submit → first token (incl. queue)
         self.step_times: List[float] = []
+        self.lease: Optional[KVLease] = None   # paged-mode KV block lease
+        self.prefix_hit_tokens: int = 0  # prompt tokens served from the trie
         # Per-request routing telemetry: MoE position → (nsb, E) int64
         # router selections attributed to THIS request's row (prompt tokens
         # at prefill + one per decode step). Populated at admission.
@@ -155,17 +222,78 @@ class InferenceEngine:
         self.backend = backend
         self.ecfg = ecfg if ecfg is not None else EngineConfig()
 
-        self.banks = backend.materialize_banks(cfg, params, self._kv_bytes())
+        n = self.ecfg.max_slots
+        sb = cfg.superblock_or_default()
+        self._attn_pos = [str(p) for p, k in enumerate(sb) if k == "attn"]
+        self._mamba_pos = [str(p) for p, k in enumerate(sb) if k != "attn"]
+
+        # ---- unified HBM envelope + paged KV pool ----------------------
+        # The pool is the single source of truth for KV bytes: both modes
+        # size KV from the same block math, and in paged mode every block
+        # is reserved against the shared budget the expert hi tier also
+        # draws from (see repro.core.budget).
+        cap = self.ecfg.hbm_budget_bytes
+        self.budget = BudgetTracker(UNBOUNDED if cap is None else cap)
+        self.pool: Optional[KVBlockPool] = None
+        self.trie: Optional[PrefixTrie] = None
+        self._bt = self.ecfg.block_tokens
+        if self._attn_pos:
+            self._C_attn = self.ecfg.max_len \
+                if cfg.attn.sliding_window is None \
+                else min(self.ecfg.max_len, cfg.attn.sliding_window)
+            self._C_pad = attn_logical_capacity(cfg, self.ecfg.max_len,
+                                                self._bt)
+            self._nb_per_slot = self._C_pad // self._bt
+        else:
+            self._C_attn = self._C_pad = self._nb_per_slot = 0
+        n_blocks = self.ecfg.kv_blocks if self.ecfg.kv_blocks is not None \
+            else 1 + n * self._nb_per_slot
+        block_bytes = self._block_bytes()
+        if self.ecfg.paged and self._attn_pos:
+            if self._nb_per_slot > n_blocks - 1:
+                raise ValueError(
+                    f"kv_blocks={n_blocks} cannot hold even one sequence "
+                    f"({self._nb_per_slot} logical blocks + the trash "
+                    f"block); raise kv_blocks or shrink max_len")
+            self.pool = KVBlockPool(n_blocks, self._bt, block_bytes,
+                                    budget=self.budget.view("kv"),
+                                    reclaim=self._reclaim_blocks)
+            # Prefix skipping needs leasable sequence state; recurrent
+            # (mamba) positions cannot be restored from a cache, so mixed
+            # stacks run the pool without the trie.
+            if self.ecfg.prefix_sharing and not self._mamba_pos:
+                self.trie = PrefixTrie(self.pool)
+        # KV bytes reported to the backend = what is actually allocated:
+        # the pool's capacity (trash + rounding included) in paged mode,
+        # the dense per-slot rows otherwise.
+        if self.pool is not None:
+            kv_bytes = self.pool.capacity_bytes
+        elif self._attn_pos:
+            kv_bytes = (block_bytes // self._bt) * n * self._C_attn
+        else:
+            kv_bytes = 0
+
+        self.banks = backend.materialize_banks(cfg, params, kv_bytes,
+                                               budget=self.budget)
         self._jit_prefill = functools.partial(
             _prefill_jit, cfg=cfg,
             capacity_factor=self.ecfg.capacity_factor)
         self._jit_decode = functools.partial(
             _decode_jit, cfg=cfg,
             capacity_factor=self.ecfg.capacity_factor)
+        self._jit_prefill_paged = functools.partial(
+            _prefill_paged_jit, cfg=cfg,
+            capacity_factor=self.ecfg.capacity_factor)
+        self._jit_decode_paged = functools.partial(
+            _decode_paged_jit, cfg=cfg,
+            capacity_factor=self.ecfg.capacity_factor)
         self._jit_scatter = _scatter_rows
 
-        n = self.ecfg.max_slots
-        self.caches = init_caches(cfg, n, self.ecfg.max_len)
+        if self.pool is not None:
+            self.caches = init_paged_caches(cfg, n, self.ecfg.max_len,
+                                            self._bt, self.pool.n_blocks)
+        else:
+            self.caches = init_caches(cfg, n, self.ecfg.max_len)
         self.slots: List[Optional[RequestHandle]] = [None] * n
         self.pos = np.zeros(n, np.int32)        # next write position per slot
         self.tokens = np.full(n, self.ecfg.pad_token_id, np.int32)
@@ -180,12 +308,12 @@ class InferenceEngine:
         self._stall_clock = 0.0
         self._ids = itertools.count()
         self.counters = {"steps": 0, "prefills": 0, "admitted": 0,
-                         "finished": 0}
+                         "finished": 0, "prefill_tokens": 0,
+                         "prefix_hit_tokens": 0, "kv_cow_copies": 0}
         # ---- length-bucket ladder -----------------------------------
         # SSD prefill requires sequence length divisible by the chunk size,
         # so for stacks with mamba layers every bucket is a chunk multiple.
-        sb = cfg.superblock_or_default()
-        self._seq_mult = cfg.ssm.chunk if "mamba" in sb else 1
+        self._seq_mult = cfg.ssm.chunk if self._mamba_pos else 1
         m = self._seq_mult
         cap = (self.ecfg.max_len // m) * m
         if cap <= 0:
@@ -206,16 +334,37 @@ class InferenceEngine:
         self.prefill_shapes: set = set()        # (rows, bucket) traced
 
     # ------------------------------------------------------------------
-    def _kv_bytes(self) -> int:
+    def _block_bytes(self) -> int:
+        """Bytes of ONE physical block across every attention layer of the
+        stack (k+v, bf16). The pool's block math is the only KV size
+        accounting in the system."""
         cfg = self.cfg
-        if cfg.attn is None:
+        if not self._attn_pos:
             return 0
-        sb = cfg.superblock_or_default()
-        n_attn = sum(1 for k in sb if k == "attn") * cfg.n_superblocks()
-        cap = self.ecfg.max_len if cfg.attn.sliding_window is None else \
-            min(self.ecfg.max_len, cfg.attn.sliding_window)
-        return (2 * self.ecfg.max_slots * cap * cfg.attn.n_kv_heads *
-                cfg.attn.head_dim * 2 * n_attn)
+        n_attn = len(self._attn_pos) * cfg.n_superblocks()
+        return (2 * self._bt * cfg.attn.n_kv_heads * cfg.attn.head_dim *
+                2 * n_attn)
+
+    def _reclaim_blocks(self, need: int) -> int:
+        return self.trie.evict(need) if self.trie is not None else 0
+
+    def _quota_blocks(self, plen: int, start: int, max_new: int) -> int:
+        """Worst-case physical blocks a request can ever allocate.
+
+        Full attention (positions only grow): exactly the logical blocks
+        from the (block-aligned) prefix hit ``start`` to the sequence cap —
+        adopted prefix blocks and registered chunks are never rewritten, so
+        they can never COW. Sliding-window rings can wrap a write onto ANY
+        logical block: one allocation per logical block (lazy append or COW
+        of an adopted block) plus one per trie-registrable prompt chunk (a
+        block this lease computes, shares, then COWs on a later wrap)."""
+        seq_cap = min(self.ecfg.max_len, plen + max_new)
+        if self.cfg.attn.sliding_window is None:
+            return -(-seq_cap // self._bt) - start // self._bt
+        n_write = -(-min(self._C_pad, seq_cap) // self._bt)
+        n_reg = plen // self._bt \
+            if (self.trie is not None and plen <= self._C_attn) else 0
+        return n_write + n_reg
 
     # ------------------------------------------------------------------
     def submit(self, request: Request) -> RequestHandle:
@@ -232,6 +381,19 @@ class InferenceEngine:
             raise ValueError(
                 f"prompt of {plen} tokens exceeds the largest prefill "
                 f"bucket {self._max_prompt} (max_len={self.ecfg.max_len})")
+        if self.pool is not None:
+            # Loud infeasibility instead of an unbounded queue spin: a
+            # request whose worst-case KV quota (no prefix hits) plus the
+            # trash block can NEVER fit the envelope — or whose live block
+            # footprint exceeds the pool's physical blocks — would block
+            # the queue head forever.
+            worst = ((1 + self._quota_blocks(plen, 0, request.max_new_tokens))
+                     * self.pool.block_bytes)
+            if worst > self.budget.cap:
+                raise ValueError(
+                    f"request needs {worst} bytes of KV worst-case but the "
+                    f"HBM envelope caps at {self.budget.cap}; raise "
+                    f"hbm_budget_bytes or shorten the request")
         handle = RequestHandle(next(self._ids), request)
         handle.submit_s = time.perf_counter()
         handle.stall_at_submit = self._stall_clock
@@ -250,6 +412,43 @@ class InferenceEngine:
     def _prompt_len(handle: RequestHandle) -> int:
         return int(np.asarray(handle.request.tokens).reshape(-1).shape[0])
 
+    # -- paged-mode helpers --------------------------------------------
+    def _apply_copies(self, cows: List[Tuple[int, int]]) -> None:
+        """Run the batched (src, dst) block copies on-device; lane count
+        padded to a power of two (trash self-copies) to bound compiles."""
+        if not cows:
+            return
+        n = 1 << max(0, len(cows) - 1).bit_length()
+        src = np.zeros(n, np.int32)
+        dst = np.zeros(n, np.int32)
+        for i, (s, d) in enumerate(cows):
+            src[i], dst[i] = s, d
+        attn_sub = {p: self.caches.blocks[p] for p in self._attn_pos}
+        new_sub = _copy_blocks(attn_sub, jnp.asarray(src), jnp.asarray(dst))
+        self.caches = DecodeCaches(
+            blocks={**self.caches.blocks, **new_sub}, cross=None)
+        self.counters["kv_cow_copies"] += len(cows)
+
+    def _block_tables(self) -> np.ndarray:
+        """(max_slots, nb) physical block table rows (vacant rows -1)."""
+        nb = max(1, self._nb_per_slot)
+        out = np.full((self.ecfg.max_slots, nb), -1, np.int32)
+        for i, h in enumerate(self.slots):
+            if h is not None and h.lease is not None:
+                out[i] = h.lease.table
+        return out
+
+    def _ensure_write(self, lease: KVLease, pos: int,
+                      cows: List[Tuple[int, int]]) -> Tuple[int, int]:
+        """Resolve the physical (block, offset) for a write at absolute
+        position ``pos``, collecting any COW obligation."""
+        s = pos % self._C_pad
+        phys, cow = lease.ensure(s // self._bt)
+        if cow >= 0:
+            cows.append((cow, phys))
+        return phys, s % self._bt
+
+    # ------------------------------------------------------------------
     def _admit(self, finished: List[RequestHandle]) -> None:
         """Fill free slots from the queue with batched, length-bucketed
         masked prefills: the queue head picks the bucket, same-bucket
@@ -257,7 +456,21 @@ class InferenceEngine:
         count), the batch right-pads to (prefill_rows, bucket), and each
         prefilled row scatters into its slot of the batched caches. Batch
         rows beyond the group are ``lengths == 0`` pads, so every prefill
-        compiles at one of O(#buckets) shapes."""
+        compiles at one of O(#buckets) shapes.
+
+        In paged mode the bucket is chosen by the SUFFIX length (prompt
+        minus trie-hit prefix) and admission additionally passes the KV
+        quota gate: a request whose worst-case block bytes do not fit the
+        shared budget waits in the queue — expert demotions or finishing
+        requests free the headroom that admits it. (Stacks without
+        attention positions have no KV to page and always take the dense
+        path.)"""
+        if self.pool is not None:
+            self._admit_paged(finished)
+        else:
+            self._admit_dense(finished)
+
+    def _admit_dense(self, finished: List[RequestHandle]) -> None:
         while self.queue:
             free = [i for i, h in enumerate(self.slots) if h is None]
             if not free:
@@ -292,50 +505,210 @@ class InferenceEngine:
             logits.block_until_ready()
             dt = time.perf_counter() - t0
             self.prefill_shapes.add((R, bucket))
-            counts_np = {k: np.asarray(v) for k, v in counts.items()}
-            self.last_row_counts = counts_np
-            self.last_counts = {k: v.sum(axis=1) if v.ndim == 3 else v
-                                for k, v in counts_np.items()}
-            row_valid = np.zeros(R, bool)
-            row_valid[:G] = True
-            stall = self.backend.observe(counts_np, dt, prefill=True,
-                                         row_valid=row_valid)
-            # Scatter the prefilled rows into their slots' batch rows.
             slots_arr = np.asarray(free[:G], np.int32)
+            # Scatter the prefilled rows into their slots' batch rows.
             self.caches = DecodeCaches(
                 blocks=self._jit_scatter(self.caches.blocks,
                                          row_caches.blocks,
                                          jnp.asarray(slots_arr)),
                 cross=None)
-            self._stall_clock += stall
             first = np.asarray(jnp.argmax(logits, -1), np.int32)
-            for r, handle in enumerate(group):
-                slot = int(slots_arr[r])
-                tok = int(first[r])
-                handle.tokens.append(tok)
-                # Serving TTFT: submit → first token. Wall clock covers
-                # queue wait and the prefills admitted ahead of it; the
-                # stall-clock delta charges every MODELED stall since submit
-                # (predecessors' demand misses and this forward's own) that
-                # wall time never slept. The backend's own ttft_s tracks
-                # per-prefill latency.
-                handle.ttft_s = (time.perf_counter() - handle.submit_s +
-                                 self._stall_clock - handle.stall_at_submit)
-                self.ttfts.append(handle.ttft_s)
-                handle.state = RequestState.RUNNING
-                handle.slot = slot
-                # Per-request attribution needs row-resolved counts; under
-                # shard_map expert parallelism only aggregates exist.
-                handle.expert_counts = {
-                    k: v[:, r].astype(np.int64)
-                    for k, v in counts_np.items() if v.ndim == 3}
-                self.slots[slot] = handle
-                self.pos[slot] = int(lengths[r])
-                self.tokens[slot] = tok
-                self.counters["admitted"] += 1
-                if self._done(handle):
-                    self._finish(handle, finished)
-            self.counters["prefills"] += 1
+            self._post_prefill(group, slots_arr, lengths, counts, dt, first,
+                               [int(x) for x in lengths[:G]], finished)
+
+    def _admit_paged(self, finished: List[RequestHandle]) -> None:
+        while self.queue:
+            free = [i for i, h in enumerate(self.slots) if h is None]
+            if not free:
+                return
+            R = self._prefill_rows
+            limit = min(len(free), R)
+            group: List[Tuple[RequestHandle, KVLease, int]] = []
+            skipped: List[RequestHandle] = []
+            bucket = None
+            while self.queue and len(group) < limit:
+                h = self.queue.popleft()
+                plen = self._prompt_len(h)
+                toks = np.asarray(h.request.tokens, np.int32).reshape(-1)
+                hits: List[int] = []
+                if self.trie is not None:
+                    max_hit = min((plen - 1) // self._bt, self._nb_per_slot)
+                    hits = self.trie.match(toks, max_blocks=max_hit)
+                    # Pin the hits NOW: the quota reservation below may
+                    # reclaim trie-exclusive blocks under byte pressure,
+                    # and a bare match() holds no reference.
+                    for blk in hits:
+                        self.pool.retain(blk)
+                start = len(hits) * self._bt
+                b = self._bucket_len(plen - start)
+                if bucket is None:
+                    bucket = b
+                elif b != bucket:
+                    for blk in hits:
+                        self.pool.release(blk)
+                    skipped.append(h)
+                    continue
+                # Physical headroom: live lease footprints are bounded by
+                # nb_per_slot each (release-before-alloc keeps COW from
+                # pinning extras), so admission defers when an UNDERSIZED
+                # pool (explicit kv_blocks) cannot physically host one more
+                # sequence alongside the running ones — instead of crashing
+                # a mid-stream alloc. Default sizing never defers here.
+                running = sum(s is not None for s in self.slots) + len(group)
+                if (running + 1) * self._nb_per_slot > self.pool.n_blocks - 1:
+                    for blk in hits:
+                        self.pool.release(blk)
+                    skipped.append(h)
+                    if not group:
+                        break       # wait for a running request to finish
+                    continue
+                quota = self._quota_blocks(plen, start,
+                                           h.request.max_new_tokens)
+                if not self.pool.try_reserve_quota(quota):
+                    # Shared-envelope backpressure: the request waits for
+                    # expert demotions / finishing requests to free bytes.
+                    for blk in hits:
+                        self.pool.release(blk)
+                    skipped.append(h)
+                    if not group:
+                        break       # head blocked — retry next step
+                    continue
+                lease = KVLease(self.pool, self._nb_per_slot, quota)
+                if hits:
+                    lease.adopt_prefix(hits, retained=True)
+                    h.prefix_hit_tokens = start
+                group.append((h, lease, start))
+            self.queue.extendleft(reversed(skipped))
+            if not group:
+                return
+            G = len(group)
+            nb = max(1, self._nb_per_slot)
+            lengths = np.zeros(R, np.int32)       # TOTAL prompt lengths
+            starts = np.zeros(R, np.int32)
+            tables = np.full((R, nb), -1, np.int32)
+            batch_toks = np.full((R, bucket), self.ecfg.pad_token_id,
+                                 np.int32)
+            cows: List[Tuple[int, int]] = []
+            for r, (h, lease, start) in enumerate(group):
+                toks = np.asarray(h.request.tokens, np.int32).reshape(-1)
+                plen = toks.shape[0]
+                lengths[r], starts[r] = plen, start
+                batch_toks[r, :plen - start] = toks[start:]
+                # Resolve every block the suffix will write (ring wrap
+                # included): fresh allocation or COW of shared blocks.
+                # O(#blocks), not O(#tokens): the written ring-slot span is
+                # contiguous modulo C_pad.
+                if plen - start >= self._C_pad:
+                    write_blocks = range(self._nb_per_slot)
+                else:
+                    s0 = start % self._C_pad
+                    s1 = (plen - 1) % self._C_pad
+                    if s0 <= s1:
+                        write_blocks = range(s0 // self._bt,
+                                             s1 // self._bt + 1)
+                    else:                    # wrapped once past the ring end
+                        write_blocks = sorted(
+                            set(range(0, s1 // self._bt + 1)) |
+                            set(range(s0 // self._bt, self._nb_per_slot)))
+                for j in write_blocks:
+                    phys, cow = lease.ensure(j)
+                    if cow >= 0:
+                        cows.append((cow, phys))
+                tables[r] = lease.table
+            self._apply_copies(cows)
+            has_prefix = bool((starts > 0).any())
+            mamba_rows = init_caches(self.cfg, R, self.ecfg.max_len,
+                                     positions=self._mamba_pos).blocks \
+                if self._mamba_pos else {}
+            call_caches = DecodeCaches(blocks={
+                **{p: self.caches.blocks[p] for p in self._attn_pos},
+                **mamba_rows}, cross=None)
+            t0 = time.perf_counter()
+            logits, new_caches, counts = self._jit_prefill_paged(
+                self.params, {"tokens": jnp.asarray(batch_toks)},
+                call_caches, self.banks, jnp.asarray(tables),
+                jnp.asarray(starts), jnp.asarray(lengths),
+                has_prefix=has_prefix)
+            logits.block_until_ready()
+            dt = time.perf_counter() - t0
+            self.prefill_shapes.add((R, bucket))
+            slots_arr = np.asarray(free[:G], np.int32)
+            blocks = {p: new_caches.blocks[p] for p in self._attn_pos}
+            if self._mamba_pos:
+                mamba_new = self._jit_scatter(
+                    {p: self.caches.blocks[p] for p in self._mamba_pos},
+                    {p: new_caches.blocks[p] for p in self._mamba_pos},
+                    jnp.asarray(slots_arr))
+                blocks.update(mamba_new)
+            self.caches = DecodeCaches(blocks=blocks, cross=None)
+            # Register newly computed prompt chunks for future sharing (only
+            # prompts that fit the logical cache wholly — ring overwrites
+            # would otherwise leave stale chunks in the trie).
+            for (h, lease, start) in group:
+                plen = self._prompt_len(h)
+                if self.trie is not None and plen <= self._C_attn:
+                    toks = np.asarray(h.request.tokens,
+                                      np.int32).reshape(-1)
+                    chain = [int(lease.table[j])
+                             for j in range(plen // self._bt)]
+                    self.trie.insert(toks, chain)
+            first = np.asarray(jnp.argmax(logits, -1), np.int32)
+            for (h, lease, _) in group:
+                h.lease = lease
+            self._post_prefill([h for h, _, _ in group], slots_arr, lengths,
+                               counts, dt, first,
+                               [int(lengths[r] - starts[r])
+                                for r in range(G)], finished)
+
+    def _post_prefill(self, group: List[RequestHandle],
+                      slots_arr: np.ndarray, lengths: np.ndarray, counts,
+                      dt: float, first: np.ndarray,
+                      computed: List[int],
+                      finished: List[RequestHandle]) -> None:
+        """Shared post-prefill bookkeeping: counts → backend, TTFT, slot
+        assignment, telemetry. ``computed[r]`` is the number of prompt
+        tokens this prefill actually computed for row r (suffix length in
+        paged mode — the prefix-share saving shows up here)."""
+        R = self._prefill_rows
+        G = len(group)
+        counts_np = {k: np.asarray(v) for k, v in counts.items()}
+        self.last_row_counts = counts_np
+        self.last_counts = {k: v.sum(axis=1) if v.ndim == 3 else v
+                            for k, v in counts_np.items()}
+        row_valid = np.zeros(R, bool)
+        row_valid[:G] = True
+        stall = self.backend.observe(counts_np, dt, prefill=True,
+                                     row_valid=row_valid)
+        self._stall_clock += stall
+        for r, handle in enumerate(group):
+            slot = int(slots_arr[r])
+            tok = int(first[r])
+            handle.tokens.append(tok)
+            # Serving TTFT: submit → first token. Wall clock covers
+            # queue wait and the prefills admitted ahead of it; the
+            # stall-clock delta charges every MODELED stall since submit
+            # (predecessors' demand misses and this forward's own) that
+            # wall time never slept. The backend's own ttft_s tracks
+            # per-prefill latency.
+            handle.ttft_s = (time.perf_counter() - handle.submit_s +
+                             self._stall_clock - handle.stall_at_submit)
+            self.ttfts.append(handle.ttft_s)
+            handle.state = RequestState.RUNNING
+            handle.slot = slot
+            # Per-request attribution needs row-resolved counts; under
+            # shard_map expert parallelism only aggregates exist.
+            handle.expert_counts = {
+                k: v[:, r].astype(np.int64)
+                for k, v in counts_np.items() if v.ndim == 3}
+            self.slots[slot] = handle
+            self.pos[slot] = int(lengths[r])
+            self.tokens[slot] = tok
+            self.counters["admitted"] += 1
+            self.counters["prefill_tokens"] += computed[r]
+            self.counters["prefix_hit_tokens"] += handle.prefix_hit_tokens
+            if self._done(handle):
+                self._finish(handle, finished)
+        self.counters["prefills"] += 1
 
     def _done(self, handle: RequestHandle) -> bool:
         req = handle.request
@@ -351,6 +724,10 @@ class InferenceEngine:
                 finished: List[RequestHandle]) -> None:
         handle.state = RequestState.FINISHED
         self.slots[handle.slot] = None
+        if handle.lease is not None:
+            # Release block refs + unspent quota; trie-registered blocks
+            # keep the trie's own reference and stay warm for future hits.
+            handle.lease.close()
         # The vacated row keeps replaying its last token through the batched
         # decode (shape stability), but row_valid masks it out of MoE
         # dispatch and every router count — vacancy is invisible to hotness
@@ -369,10 +746,26 @@ class InferenceEngine:
         if active:
             row_valid = np.asarray([h is not None for h in self.slots], bool)
             t0 = time.perf_counter()
-            logits, self.caches, counts = self._jit_decode(
-                self.params, jnp.asarray(self.tokens),
-                jnp.asarray(self.pos), self.caches, self.banks,
-                jnp.asarray(row_valid))
+            if self.pool is not None:
+                n = self.ecfg.max_slots
+                wblk = np.zeros(n, np.int32)     # vacant rows → trash block
+                woff = np.zeros(n, np.int32)
+                cows: List[Tuple[int, int]] = []
+                for i, h in active:
+                    wblk[i], woff[i] = self._ensure_write(
+                        h.lease, int(self.pos[i]), cows)
+                self._apply_copies(cows)
+                logits, self.caches, counts = self._jit_decode_paged(
+                    self.params, jnp.asarray(self.tokens),
+                    jnp.asarray(self.pos), self.caches, self.banks,
+                    jnp.asarray(row_valid),
+                    jnp.asarray(self._block_tables()),
+                    jnp.asarray(wblk), jnp.asarray(woff))
+            else:
+                logits, self.caches, counts = self._jit_decode(
+                    self.params, jnp.asarray(self.tokens),
+                    jnp.asarray(self.pos), self.caches, self.banks,
+                    jnp.asarray(row_valid))
             logits.block_until_ready()
             dt = time.perf_counter() - t0
             counts_np = {k: np.asarray(v) for k, v in counts.items()}
@@ -402,35 +795,85 @@ class InferenceEngine:
 
     def drain(self) -> List[RequestHandle]:
         """Run ``step()`` until no request is queued or running; returns the
-        handles finished during the drain, in completion order."""
+        handles finished during the drain, in completion order.
+
+        A queued request blocked on the shared HBM envelope normally waits
+        for in-flight work (finishing requests, expert demotions) to free
+        bytes. If the engine goes fully idle and hundreds of consecutive
+        steps (each of which ticks the backend, so pending transitions and
+        demotions do get their chance) admit nothing, no future step can
+        change anything — raise instead of busy-spinning forever."""
         done: List[RequestHandle] = []
+        stalled = 0
         while self.queue or any(h is not None for h in self.slots):
+            before = len(self.queue)
             done.extend(self.step())
+            stalled = self._check_admission_stall(stalled, before)
         return done
 
-    def replay(self, stream) -> List[RequestHandle]:
-        """Serve an arrival-timed request stream (e.g. ``RequestStream``):
-        each request is submitted once the wall clock — measured from replay
-        start — passes its ``arrival_s`` offset, so queueing delay and TTFT
-        reflect the offered load. When the engine goes idle before the next
-        arrival it skips ahead instead of spinning. Returns handles in
-        arrival order; all are FINISHED on return."""
+    def _check_admission_stall(self, stalled: int, queue_before: int) -> int:
+        """Post-step progress accounting for the serving loops: bump (and
+        eventually trip) the stall counter when the engine sits fully idle
+        with queued work it could not admit."""
+        idle = not any(h is not None for h in self.slots)
+        if self.queue and idle and len(self.queue) == queue_before:
+            stalled += 1
+            if stalled > 256:
+                raise RuntimeError(
+                    f"admission stalled: {len(self.queue)} queued "
+                    f"request(s) cannot reserve KV under the shared "
+                    f"HBM envelope and no in-flight work remains to "
+                    f"free bytes (envelope used "
+                    f"{self.budget.used}/{self.budget.cap})")
+            return stalled
+        return 0
+
+    def replay(self, stream, realtime: bool = True,
+               virtual_step_s: float = 2e-3) -> List[RequestHandle]:
+        """Serve an arrival-timed request stream (e.g. ``RequestStream``).
+
+        ``realtime=True`` (benchmarks): each request is submitted once the
+        wall clock — measured from replay start — passes its ``arrival_s``
+        offset, so queueing delay and TTFT reflect the offered load. When
+        the engine goes idle before the next arrival it skips ahead instead
+        of spinning.
+
+        ``realtime=False`` (CI / tests): a **virtual clock** replaces
+        ``perf_counter`` — it advances ``virtual_step_s`` per engine step
+        and fast-forwards across idle gaps — so the interleaving of
+        arrivals with admissions (and therefore every generated token) is
+        fully deterministic, machine speed be damned.
+
+        Returns handles in arrival order; all are FINISHED on return."""
         requests = list(stream)
         handles: List[RequestHandle] = []
-        t0 = time.perf_counter()
         i = 0
+        now = 0.0
+        stalled = 0
+        t0 = time.perf_counter()
         while i < len(requests) or self.queue or \
                 any(h is not None for h in self.slots):
-            now = time.perf_counter() - t0
+            if realtime:
+                now = time.perf_counter() - t0
             while i < len(requests) and requests[i].arrival_s <= now:
                 handles.append(self.submit(requests[i]))
                 i += 1
             if i < len(requests) and not self.queue and \
                     all(h is None for h in self.slots):
                 # Idle gap until the next arrival — fast-forward.
+                if not realtime:
+                    now = requests[i].arrival_s
                 handles.append(self.submit(requests[i]))
                 i += 1
+            before = len(self.queue)
             self.step()
+            if i >= len(requests):
+                # All arrivals in: the same dead-admission detection as
+                # drain() (a permanently envelope-blocked head would
+                # otherwise spin this loop forever).
+                stalled = self._check_admission_stall(stalled, before)
+            if not realtime:
+                now += virtual_step_s
         return handles
 
     def flush(self) -> None:
@@ -477,12 +920,24 @@ class InferenceEngine:
         """Backend's uniform serving stats merged with engine counters.
         ``ttft_s`` is the request-level submit→first-token mean (queue wait
         included); the backend's per-prefill latency stays available via
-        ``backend.stats()``."""
+        ``backend.stats()``. Paged engines add the KV-pool gauges:
+        ``kv_blocks_in_use`` / ``kv_bytes_in_use`` (pool accounting, quota
+        included) and the prefix-sharing meters ``prefix_hit_tokens`` /
+        ``prefill_tokens`` (prompt tokens served from the trie vs actually
+        computed)."""
         out = dict(self.backend.stats())
         if self.ttfts:
             out["ttft_s"] = float(np.mean(self.ttfts))
         out.update({k: float(v) for k, v in self.counters.items()})
         out["prefill_compiles"] = float(len(self.prefill_shapes))
+        if self.pool is not None:
+            out["kv_blocks_in_use"] = float(self.pool.blocks_in_use)
+            out["kv_bytes_in_use"] = float(self.pool.bytes_in_use)
+            if self.trie is not None:
+                out["prefix_trie_nodes"] = float(self.trie.n_nodes)
+        else:
+            out["kv_blocks_in_use"] = 0.0
+            out["kv_bytes_in_use"] = 0.0
         return out
 
     def device_bytes(self) -> int:

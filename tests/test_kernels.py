@@ -6,8 +6,8 @@ import numpy as np
 import pytest
 
 from repro.kernels import ref
-from repro.kernels.ops import (flash_decode_op, grouped_quant_matmul_op,
-                               quant_matmul_op)
+from repro.kernels.ops import (flash_decode_op, flash_decode_paged_op,
+                               grouped_quant_matmul_op, quant_matmul_op)
 from repro.quant import quantize
 
 
@@ -82,6 +82,44 @@ def test_flash_decode_matches_model_attention():
     np.testing.assert_allclose(np.asarray(out_model, np.float32),
                                np.asarray(want, np.float32),
                                rtol=3e-2, atol=3e-1)
+
+
+@pytest.mark.parametrize("h,hkv,bt,nb", [(4, 2, 16, 4), (8, 2, 32, 3),
+                                         (4, 4, 64, 2)])
+def test_flash_decode_paged_matches_gathered_dense(h, hkv, bt, nb):
+    """Block-table flash decode == dense flash decode over the logical view
+    the (scrambled, partially unallocated) tables gather — and it consumes
+    the ``PagedKVCache`` (N, Hkv, bt, hd) pool layout directly, matching
+    ``layers.paged_view``."""
+    from repro.models import layers as L
+    from repro.models.config import AttnConfig
+
+    B, hd = 2, 64
+    S = nb * bt
+    N = 1 + B * nb                      # trash block + B full tables
+    acfg = AttnConfig(n_heads=h, n_kv_heads=hkv, head_dim=hd)
+    pool = L.init_paged_kv_cache(N, bt, acfg)
+    kp = jax.random.normal(jax.random.PRNGKey(1), pool.k.shape, jnp.bfloat16)
+    vp = jax.random.normal(jax.random.PRNGKey(2), pool.v.shape, jnp.bfloat16)
+    pool = L.PagedKVCache(kp, vp)
+    q = jax.random.normal(jax.random.PRNGKey(h * bt + nb), (B, h, hd),
+                          jnp.bfloat16)
+    rng = np.random.default_rng(0)
+    table = rng.permutation(np.arange(1, N, dtype=np.int32)).reshape(B, nb)
+    table[0, -1] = -1                   # one unallocated logical block
+    valid = np.zeros((B, S), bool)
+    valid[0, :S - bt - 3] = True        # stays clear of the -1 block
+    valid[1, :S - 1] = True
+    # dense reference over the same logical view the model gathers
+    k_log, v_log = L.paged_view(pool, jnp.asarray(table))  # (B,Hkv,S,hd)
+    want = flash_decode_op(q, jnp.moveaxis(k_log, 1, 2),
+                           jnp.moveaxis(v_log, 1, 2),
+                           jnp.asarray(valid), bs=bt)
+    out = flash_decode_paged_op(q, pool.k, pool.v, jnp.asarray(table),
+                                jnp.asarray(valid))
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=3e-2, atol=3e-2)
 
 
 def test_quant_matmul_rejects_bad_tiling():

@@ -1,0 +1,297 @@
+"""Paged KV allocator core: block refcount / free-list / COW invariants and
+trie insert–match–release round-trips under randomized request
+interleavings (property-style, in the spirit of test_ver_transitions)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import BudgetExceeded, BudgetTracker
+from repro.serving.kvpool import KVBlockPool, KVLease, TRASH_BLOCK
+from repro.serving.prefix import PrefixTrie
+
+BB = 64      # block bytes for these tests
+BT = 4       # tokens per block
+
+
+def make_pool(n_blocks=16, cap_blocks=None, trie=False):
+    cap = (cap_blocks if cap_blocks is not None else n_blocks) * BB
+    budget = BudgetTracker(cap)
+    holder = {}
+
+    def reclaim(need):
+        t = holder.get("trie")
+        return t.evict(need) if t is not None else 0
+
+    pool = KVBlockPool(n_blocks, BT, BB, budget=budget.view("kv"),
+                       reclaim=reclaim)
+    t = PrefixTrie(pool) if trie else None
+    holder["trie"] = t
+    return pool, t, budget
+
+
+# ---------------------------------------------------------------------------
+# Pool basics
+# ---------------------------------------------------------------------------
+
+def test_pool_accounting_and_trash():
+    pool, _, budget = make_pool(8)
+    assert pool.blocks_in_use == 0 and pool.n_free == 7
+    assert budget.used == BB                       # trash block reserved
+    assert pool.try_reserve_quota(3)
+    lease = KVLease(pool, 4, 3)
+    a, cow = lease.ensure(0)
+    b, _ = lease.ensure(1)
+    assert cow == -1 and a != b and TRASH_BLOCK not in (a, b)
+    assert pool.blocks_in_use == 2 and pool.quota_blocks == 1
+    assert budget.used == (2 + 1 + 1) * BB         # blocks + quota + trash
+    pool.check_invariants()
+    lease.close()
+    assert pool.blocks_in_use == 0 and pool.quota_blocks == 0
+    assert budget.used == BB
+    pool.check_invariants()
+
+
+def test_quota_denied_when_budget_full():
+    pool, _, budget = make_pool(8, cap_blocks=3)    # trash + 2 blocks of cap
+    assert pool.try_reserve_quota(2)
+    assert not pool.try_reserve_quota(1)            # envelope exhausted
+    assert pool.stats["quota_denied"] == 1
+    pool.release_quota(2)
+    assert pool.try_reserve_quota(1)
+    pool.release_quota(1)
+    pool.check_invariants()
+
+
+def test_cow_on_shared_block():
+    pool, _, _ = make_pool(8)
+    assert pool.try_reserve_quota(4)
+    a_lease = KVLease(pool, 2, 2)
+    blk, _ = a_lease.ensure(0)
+    b_lease = KVLease(pool, 2, 2)
+    b_lease.adopt_prefix([blk])
+    assert pool.refcount[blk] == 2
+    # writer of a shared block gets a private copy + a copy obligation
+    phys, cow = b_lease.ensure(0)
+    assert cow == blk and phys != blk
+    assert pool.refcount[blk] == 1 and pool.refcount[phys] == 1
+    # the original owner is unaffected and writes in place
+    phys_a, cow_a = a_lease.ensure(0)
+    assert phys_a == blk and cow_a == -1
+    a_lease.close()
+    b_lease.close()
+    pool.check_invariants()
+
+
+def test_double_free_and_dead_retain_raise():
+    pool, _, _ = make_pool(4)
+    assert pool.try_reserve_quota(1)
+    lease = KVLease(pool, 1, 1)
+    blk, _ = lease.ensure(0)
+    lease.close()
+    with pytest.raises(RuntimeError):
+        pool.release(blk)
+    with pytest.raises(RuntimeError):
+        pool.retain(blk)
+    with pytest.raises(RuntimeError):
+        pool.release(TRASH_BLOCK)
+    with pytest.raises(BudgetExceeded):
+        pool.budget.release(BB * 100)
+
+
+def test_alloc_without_quota_raises():
+    pool, _, _ = make_pool(4)
+    lease = KVLease(pool, 1, 0)
+    with pytest.raises(RuntimeError):
+        lease.ensure(0)
+
+
+# ---------------------------------------------------------------------------
+# Trie round-trips
+# ---------------------------------------------------------------------------
+
+def _toks(*chunks):
+    return np.concatenate([np.full(BT, c, np.int32) for c in chunks])
+
+
+def test_trie_insert_match_roundtrip():
+    pool, trie, _ = make_pool(16, trie=True)
+    assert pool.try_reserve_quota(3)
+    lease = KVLease(pool, 3, 3)
+    chain = [lease.ensure(j)[0] for j in range(3)]
+    toks = _toks(1, 2, 3)
+    assert trie.insert(toks, chain) == 3
+    assert trie.match(toks) == chain
+    assert trie.match(_toks(1, 2)) == chain[:2]
+    assert trie.match(_toks(1, 9, 3)) == chain[:1]   # diverges at chunk 2
+    assert trie.match(_toks(7)) == []
+    assert trie.match(toks, max_blocks=1) == chain[:1]
+    # partial trailing tokens never match a whole chunk
+    assert trie.match(np.full(BT - 1, 1, np.int32)) == []
+    # trie holds its own refs: blocks survive the computing lease
+    lease.close()
+    assert all(pool.refcount[b] == 1 for b in chain)
+    assert trie.clear() == 3
+    pool.check_invariants()
+
+
+def test_trie_first_writer_wins():
+    pool, trie, _ = make_pool(16, trie=True)
+    assert pool.try_reserve_quota(2)
+    l1, l2 = KVLease(pool, 1, 1), KVLease(pool, 1, 1)
+    b1, b2 = l1.ensure(0)[0], l2.ensure(0)[0]
+    toks = _toks(5)
+    trie.insert(toks, [b1])
+    trie.insert(toks, [b2])                  # duplicate compute: no-op
+    assert trie.match(toks) == [b1]
+    assert pool.refcount[b2] == 1            # stays private to l2
+    l1.close(); l2.close()
+    trie.clear()
+    pool.check_invariants()
+
+
+def test_trie_eviction_lru_and_lease_pinning():
+    pool, trie, _ = make_pool(6, trie=True)   # trash + 5 usable
+    assert pool.try_reserve_quota(4)
+    lease = KVLease(pool, 4, 4)
+    blocks = [lease.ensure(j)[0] for j in range(4)]
+    trie.insert(_toks(1), [blocks[0]])
+    trie.insert(_toks(2), [blocks[1]])
+    lease.close()                             # both chains now trie-only
+    trie.match(_toks(1))                      # chain 1 is now most recent
+    # exhaust the pool: eviction must reclaim the LRU chain (2) first
+    assert pool.try_reserve_quota(4)
+    l2 = KVLease(pool, 4, 4)
+    got = [l2.ensure(j)[0] for j in range(4)]
+    assert blocks[1] in got                   # evicted + recycled
+    assert trie.match(_toks(2)) == []
+    assert trie.match(_toks(1)) == [blocks[0]]  # survivor
+    l2.close()
+    trie.clear()
+    pool.check_invariants()
+
+
+def test_trie_eviction_leaf_first():
+    """A chain evicts leaf-to-root; inner nodes with live children are
+    never dropped before their descendants."""
+    pool, trie, _ = make_pool(8, trie=True)
+    assert pool.try_reserve_quota(3)
+    lease = KVLease(pool, 3, 3)
+    chain = [lease.ensure(j)[0] for j in range(3)]
+    trie.insert(_toks(1, 2, 3), chain)
+    lease.close()
+    assert trie.evict(1) == 1
+    assert trie.match(_toks(1, 2, 3)) == chain[:2]   # leaf gone, prefix OK
+    assert trie.evict(10) == 2                        # rest unwinds
+    assert trie.n_nodes == 0
+    pool.check_invariants()
+
+
+def test_trie_eviction_unwinds_to_interior_blocks():
+    """A trie-exclusive block BEHIND a still-leased deeper chunk (the COWed
+    ancestor of an adopted chain) is reclaimable: eviction unwinds the
+    lease-shared leaf (dropping only the trie's reference) to reach it."""
+    pool, trie, _ = make_pool(4, trie=True)   # trash + 3 usable
+    assert pool.try_reserve_quota(2)
+    l1 = KVLease(pool, 2, 2)
+    chain = [l1.ensure(0)[0], l1.ensure(1)[0]]
+    trie.insert(_toks(1, 2), chain)
+    l1.close()
+    # a second request adopts the chain, then COWs logical block 0 (ring
+    # wrap): the interior trie block keeps refcount 1, the leaf stays
+    # shared with the live lease
+    assert pool.try_reserve_quota(1)
+    l2 = KVLease(pool, 2, 1)
+    l2.adopt_prefix(chain)
+    phys, cow = l2.ensure(0)
+    assert cow == chain[0] and pool.refcount[chain[0]] == 1
+    assert pool.refcount[chain[1]] == 2       # trie + l2
+    # pool now dry: trash + {chain[0] (trie-only), chain[1], phys}
+    assert pool.n_free == 0
+    freed = trie.evict(1)
+    assert freed == 1                         # interior chain[0] reclaimed
+    assert pool.refcount[chain[1]] == 1       # leaf ref dropped, lease lives
+    assert trie.n_nodes == 0
+    l2.close()
+    pool.check_invariants()
+
+
+def test_quota_reclaim_cannot_evict_pinned_hits():
+    """The engine pins matched hit blocks before reserving quota; pinned
+    blocks (refcount > 1) survive any reclaim the reservation triggers,
+    while unpinned trie-only chains are fair game."""
+    pool, trie, _ = make_pool(8, cap_blocks=5, trie=True)
+    assert pool.try_reserve_quota(4)
+    lease = KVLease(pool, 4, 4)
+    blocks = [lease.ensure(j)[0] for j in range(4)]
+    trie.insert(_toks(1), [blocks[0]])
+    trie.insert(_toks(2), [blocks[1]])
+    lease.close()                             # two trie-only chains
+    hits = trie.match(_toks(1))
+    for b in hits:
+        pool.retain(b)                        # the engine's pin
+    # cap 5 blocks: trash + 2 trie chains leave 2 blocks of headroom, so a
+    # 4-block quota needs BOTH chains reclaimed. Only the unpinned one may
+    # go: the reservation must fail rather than evict the pinned hit (the
+    # pre-pin bug freed it and the later adopt crashed on a dead block).
+    assert not pool.try_reserve_quota(4)
+    assert pool.refcount[hits[0]] >= 1        # pinned hit survived
+    assert trie.match(_toks(1)) == hits       # chain intact for adoption
+    assert trie.match(_toks(2)) == []         # unpinned chain was evicted
+    assert pool.try_reserve_quota(3)          # within the real headroom
+    for b in hits:
+        pool.release(b)
+    pool.release_quota(3)
+    trie.clear()
+    pool.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# Property: random interleavings keep every invariant
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), n_requests=st.integers(4, 24))
+def test_random_interleaving_invariants(seed, n_requests):
+    """Random admission/share/COW/finish interleavings: refcounts, free
+    list, quota, budget bytes and trie consistency hold at every step, and
+    everything returns to baseline after the last release."""
+    rng = np.random.default_rng(seed)
+    n_logical = 4
+    pool, trie, budget = make_pool(1 + 6 * n_logical * 2, trie=True)
+    live = []
+    for _ in range(n_requests):
+        op = rng.integers(3)
+        if op == 0 or len(live) < 2:          # admit (maybe via trie hit)
+            chunks = tuple(int(c) for c in rng.integers(0, 3, size=rng.integers(1, n_logical + 1)))
+            toks = _toks(*chunks)
+            hits = trie.match(toks, max_blocks=len(chunks))
+            for b in hits:
+                pool.retain(b)        # pin before the reclaim-capable gate
+            quota = 2 * n_logical
+            if not pool.try_reserve_quota(quota):
+                for b in hits:
+                    pool.release(b)
+                continue
+            lease = KVLease(pool, n_logical, quota)
+            lease.adopt_prefix(hits, retained=True)
+            for j in range(len(chunks)):
+                lease.ensure(j)
+            trie.insert(toks, [int(lease.table[j])
+                               for j in range(len(chunks))])
+            live.append(lease)
+        elif op == 1:                         # decode-style write (COW)
+            lease = live[rng.integers(len(live))]
+            lease.ensure(int(rng.integers(n_logical)))
+        else:                                 # finish
+            lease = live.pop(rng.integers(len(live)))
+            lease.close()
+        pool.check_invariants()
+        # every trie-visible block is alive
+        assert all(pool.refcount[n.block] >= 1 for n in trie._leaves())
+    for lease in live:
+        lease.close()
+    pool.check_invariants()
+    trie.clear()
+    pool.check_invariants()
+    assert pool.blocks_in_use == 0 and pool.quota_blocks == 0
+    assert budget.used == BB                  # only the trash block

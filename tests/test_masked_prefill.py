@@ -187,11 +187,12 @@ class _RecordingBackend(Fp16Backend):
 
 
 def _bucketed_engine(cfg, params, backend, max_slots, max_len=64,
-                     prefill_rows=2):
+                     prefill_rows=2, paged=True):
     clone = jax.tree_util.tree_map(lambda x: x, params)
     return InferenceEngine(cfg, clone, backend,
                            EngineConfig(max_slots=max_slots, max_len=max_len,
-                                        prefill_rows=prefill_rows))
+                                        prefill_rows=prefill_rows,
+                                        paged=paged))
 
 
 def test_vacant_slot_masking_hotness_identical(serving_setup):
@@ -222,22 +223,27 @@ def test_vacant_slot_masking_hotness_identical(serving_setup):
     np.testing.assert_array_equal(scores[0], scores[1])
 
 
-def test_mixed_length_stream_compiles_per_bucket(serving_setup):
+@pytest.mark.parametrize("paged", [False, True])
+def test_mixed_length_stream_compiles_per_bucket(serving_setup, paged):
     """≥8 distinct prompt lengths admit through at most #buckets prefill
-    executables (the O(#buckets) compile bound)."""
+    executables (the O(#buckets) compile bound) — guarded on the jit cache
+    of whichever prefill entry point the engine mode actually uses (the
+    dense parity path still ships and must not regress either)."""
+    from repro.serving.engine import _prefill_paged_jit
     cfg, params = serving_setup
     eng = _bucketed_engine(cfg, params, make_backend("fp16"), max_slots=4,
-                           max_len=64, prefill_rows=4)
+                           max_len=64, prefill_rows=4, paged=paged)
+    jit_fn = _prefill_paged_jit if paged else _prefill_jit
     lens = (4, 7, 9, 13, 18, 23, 29, 33, 41, 55)
     assert len(set(lens)) >= 8
-    before = _prefill_jit._cache_size()
+    before = jit_fn._cache_size()
     handles = [eng.submit(Request(
         tokens=make_prompts("text", cfg.vocab_size, 1, ln, seed=ln)[0],
         max_new_tokens=2)) for ln in lens]
     eng.drain()
     n_buckets = len(eng.buckets)
     assert len(eng.prefill_shapes) <= n_buckets, eng.prefill_shapes
-    assert _prefill_jit._cache_size() - before <= n_buckets
+    assert jit_fn._cache_size() - before <= (2 if paged else 1) * n_buckets
     assert all(len(h.tokens) == 2 for h in handles)
     assert eng.counters["prefills"] < len(lens)   # batched admission
 

@@ -105,6 +105,34 @@ def test_budget_accounting_exact():
     assert ctl.tracker.used <= ctl.tracker.cap
 
 
+def test_publish_ready_probes_each_copy_not_the_bank(monkeypatch):
+    """Regression: readiness used to be probed on one leaf of the CURRENT
+    ``bank.hi`` — which every later ``_issue_copy`` overwrites — so an older
+    pending promotion could publish based on a newer copy's readiness. Each
+    ``PendingPromotion`` now carries its own result arrays: with only the
+    FIRST copy's arrays reporting ready, exactly that promotion publishes."""
+    from repro.core import transitions as T
+    ctl, _, _ = make_controller(n_hi=3)
+    ctl.tm.request_promotion(0, 1)
+    ctl.tm.drain()                            # pending A (issued first)
+    ctl.tm.request_promotion(0, 4)
+    ctl.tm.drain()                            # pending B overwrites bank.hi
+    pend = ctl.tm._pending
+    assert len(pend) == 2
+    assert all(p.arrays for p in pend)
+    assert set(map(id, pend[0].arrays)).isdisjoint(map(id, pend[1].arrays))
+    ready_ids = {id(a) for a in pend[0].arrays}
+    monkeypatch.setattr(T, "_is_ready", lambda a: id(a) in ready_ids)
+    published = ctl.tm.publish_ready()
+    assert published == 1
+    assert ctl.tm.hi_set(0) == {1}            # A published, B still pending
+    assert ctl.tm.pending_experts(0) == {4}
+    monkeypatch.undo()
+    ctl.tm.publish_ready(wait=True)
+    assert ctl.tm.hi_set(0) == {1, 4}
+    ctl.tm.check_invariants()
+
+
 def test_demote_while_promoting_reclaims():
     ctl, _, _ = make_controller(n_hi=1)
     a = np.zeros((2, 8), np.int64); a[:, 0] = 100
