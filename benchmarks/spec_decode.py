@@ -1,0 +1,105 @@
+"""Self-speculative decoding: tokens-per-verify-step and acceptance rate
+vs draft depth on the DynaExq backend.
+
+The structural claim: the always-resident lo tier is a free draft model, so
+a verify round emits MORE than one token on average (tokens/round > 1) while
+the output stays distribution-exact. Decode-heavy traffic (short prompts,
+long generations) through the same engine at spec off / k ∈ {2, 4}:
+
+* ``tokens_per_round`` — verified tokens per (round, active-row) pair (the
+  uplift: the non-speculative engine is pinned at 1.0);
+* ``accept_rate`` — accepted draft fraction (how good int-lo is as a
+  speculator for the mixed-precision target);
+* wall-clock tokens/s plus the uniform ``stats()`` schema.
+
+Honest caveat on wall clock for THIS container: the jnp oracle path
+dequantizes the lo tier to bf16, so drafting costs the same FLOPs as the
+target — tokens/s can regress even while tokens/dispatch climbs. The win
+this measures is structural (fewer verify dispatches per token, high lo→hi
+argmax agreement); converting it into wall-clock needs the int4 compute
+path (``kernels/quant_matmul``) under the draft and/or the fused wide
+verify (ROADMAP follow-ups).
+
+Rows land in ``experiments/BENCH_spec.json``; ``BENCH_SMOKE=1`` shrinks the
+stream for CI.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from benchmarks.common import BENCH_SMOKE, clone, trained_model
+from repro.core import ControllerConfig
+from repro.serving import (EngineConfig, InferenceEngine, Request,
+                           STAT_KEYS, make_backend, make_prompts)
+
+N_REQ = 4 if BENCH_SMOKE else 12
+PROMPT_LEN = 12
+N_NEW = 16 if BENCH_SMOKE else 32
+SPEC_KS = (0, 2, 4)
+JSON_OUT = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                        "BENCH_spec.json")
+
+
+def _run(cfg, params, spec_k):
+    eng = InferenceEngine(
+        cfg, clone(params),
+        make_backend("dynaexq", lo_bits=4, n_hi_per_layer=2,
+                     controller=ControllerConfig(update_interval_s=0.05)),
+        # capacity_factor 8: drop-free MoE keeps the draft/verify compute
+        # comparable across batch shapes (same caveat as prefix sharing)
+        EngineConfig(max_slots=4, max_len=64, capacity_factor=8.0,
+                     spec_k=spec_k))
+    reqs = [Request(tokens=make_prompts("text", cfg.vocab_size, 1,
+                                        PROMPT_LEN, seed=100 + i)[0],
+                    max_new_tokens=N_NEW)
+            for i in range(N_REQ)]
+    t0 = time.perf_counter()
+    handles = [eng.submit(r) for r in reqs]
+    eng.drain()
+    eng.flush()
+    wall = time.perf_counter() - t0
+    st = eng.stats()
+    n_tokens = sum(len(h.tokens) for h in handles)
+    st["e2e_s"] = wall + st["stall_s"]
+    st["tokens_total"] = float(n_tokens)
+    st["tokens_per_s"] = n_tokens / st["e2e_s"]
+    # Per-ROW verify-step uplift: tokens emitted per (round, active-row)
+    # pair. The non-speculative engine emits exactly 1.0 by definition.
+    st["tokens_per_round"] = (st["verified_tokens"] /
+                              max(1.0, st["spec_row_rounds"])) if spec_k \
+        else 1.0
+    return st
+
+
+def run(report):
+    cfg, params, _task = trained_model()
+    results = {"schema": list(STAT_KEYS) + [
+                   "e2e_s", "tokens_total", "tokens_per_s",
+                   "tokens_per_round"],
+               "smoke": BENCH_SMOKE, "n_requests": N_REQ,
+               "prompt_len": PROMPT_LEN, "new_tokens": N_NEW,
+               "variants": {}}
+    for k in SPEC_KS:
+        _run(cfg, params, k)                     # warm-up compile
+        st = _run(cfg, params, k)
+        name = f"spec_k{k}" if k else "spec_off"
+        results["variants"][name] = st
+        report(f"spec_decode/tokens_per_round/{name}", 0.0,
+               round(st["tokens_per_round"], 3))
+        report(f"spec_decode/accept_rate/{name}", 0.0,
+               round(st["accept_rate"], 3))
+        report(f"spec_decode/tokens_per_s/{name}", 0.0,
+               round(st["tokens_per_s"], 2))
+    os.makedirs(os.path.dirname(JSON_OUT), exist_ok=True)
+    with open(JSON_OUT, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+    best = max(results["variants"][f"spec_k{k}"]["tokens_per_round"]
+               for k in SPEC_KS if k)
+    print(f"# spec_decode: best tokens/round {best:.2f} "
+          f"(spec-off pins 1.0) → {JSON_OUT}")
+
+
+if __name__ == "__main__":
+    run(lambda *a: print(",".join(str(x) for x in a)))

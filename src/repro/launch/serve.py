@@ -16,7 +16,8 @@ from repro.configs import ARCH_IDS, get_config
 from repro.core import ControllerConfig
 from repro.models import init_params
 from repro.serving import (BACKENDS, EngineConfig, InferenceEngine,
-                           OffloadConfig, Request, make_backend, make_prompts)
+                           OffloadConfig, Request, SamplingParams,
+                           make_backend, make_prompts)
 
 
 def build_backend(args):
@@ -61,11 +62,27 @@ def main():
                     help="unified envelope shared by KV blocks and the "
                          "expert hi tier (promotion backpressure under KV "
                          "pressure)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="max speculative draft depth per round (drafts on "
+                         "the all-lo expert tier, verifies against the "
+                         "mixed-precision banks)")
+    ap.add_argument("--no-spec", action="store_true",
+                    help="disable speculative decoding (one token per step)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy)")
+    ap.add_argument("--top-k", type=int, default=None,
+                    help="sample only from the k most probable tokens")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling mass (1.0 = full vocab)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="per-request sampling seed base (request b uses "
+                         "seed+b)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=not args.full)
+    spec_k = 0 if args.no_spec else max(0, args.spec_k)
     print(f"[serve] {cfg.name} backend={args.backend} "
-          f"devices={jax.device_count()}")
+          f"devices={jax.device_count()} spec_k={spec_k}")
     params = init_params(jax.random.PRNGKey(0), cfg)
     engine = InferenceEngine(
         cfg, params, build_backend(args),
@@ -75,12 +92,19 @@ def main():
                      block_tokens=args.block_tokens,
                      prefix_sharing=not args.no_prefix_sharing,
                      hbm_budget_bytes=None if args.hbm_budget_gb is None
-                     else int(args.hbm_budget_gb * (1 << 30))))
+                     else int(args.hbm_budget_gb * (1 << 30)),
+                     spec_k=spec_k))
     toks = make_prompts(args.workload, cfg.vocab_size,
                         args.batch, args.prompt_len)
+    use_sampling = (args.temperature > 0 or args.top_k is not None or
+                    args.top_p < 1.0)
     t0 = time.perf_counter()
-    handles = [engine.submit(Request(tokens=toks[b],
-                                     max_new_tokens=args.new_tokens))
+    handles = [engine.submit(Request(
+        tokens=toks[b], max_new_tokens=args.new_tokens,
+        sampling=SamplingParams(temperature=args.temperature,
+                                top_k=args.top_k, top_p=args.top_p,
+                                seed=args.seed + b)
+        if use_sampling else None))
                for b in range(args.batch)]
     engine.drain()
     engine.flush()
@@ -89,6 +113,12 @@ def main():
     st = engine.stats()
     print(f"[serve] TTFT {st['ttft_s']*1e3:.1f} ms  TPOT "
           f"{st['tpot_s']*1e3:.1f} ms  throughput {tput:.2f} tok/s")
+    if spec_k:
+        row_rounds = max(1.0, st.get("spec_row_rounds", 0.0))
+        print(f"[serve] spec: accept_rate {st['accept_rate']:.2f}  "
+              f"tokens/row-round {st['verified_tokens']/row_rounds:.2f} "
+              f"(1.0 = no speculation; {st['draft_tokens']:.0f} drafted "
+              f"over {st['spec_rounds']:.0f} rounds)")
     print(f"[serve] uniform stats: "
           f"{ {k: round(float(v), 4) for k, v in st.items()} }")
     print(f"[serve] resident expert bytes: {engine.device_bytes():,}")

@@ -2,12 +2,13 @@ from repro.models.config import ArchConfig, AttnConfig, MoEConfig, SSMConfig
 from repro.models.model import (
     init_params, init_caches, init_paged_caches, attn_logical_capacity,
     forward_train, prefill, prefill_paged, decode_step, decode_step_paged,
-    DecodeCaches,
+    spec_draft, spec_verify, DecodeCaches,
 )
 
 __all__ = [
     "ArchConfig", "AttnConfig", "MoEConfig", "SSMConfig",
     "init_params", "init_caches", "init_paged_caches",
     "attn_logical_capacity", "forward_train", "prefill", "prefill_paged",
-    "decode_step", "decode_step_paged", "DecodeCaches",
+    "decode_step", "decode_step_paged", "spec_draft", "spec_verify",
+    "DecodeCaches",
 ]

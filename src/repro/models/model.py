@@ -614,3 +614,109 @@ def decode_step_paged(params: Dict, cfg: ArchConfig, token: jax.Array,
     return logits, DecodeCaches(blocks=new_blocks, cross=None), counts
 
 
+# --------------------------------------------------------------------------
+# Speculative decoding entry points (multi-token draft / verify)
+# --------------------------------------------------------------------------
+#
+# Both run S chained single-token decode steps under ONE ``lax.scan`` — one
+# device dispatch advances every row by S positions. Each scan iteration IS
+# ``decode_step``/``decode_step_paged``, so every per-position computation
+# (attention reduction order, MoE capacity = moe_capacity(B), masked cache
+# writes) is identical to the engine's sequential decode — token parity with
+# the non-speculative path holds by construction, the same way the paged
+# attention shares ``_attend_cache`` with the dense path. (A width-S fused
+# verify forward — the arithmetic-intensity win on real accelerators — is a
+# kernel follow-up; it would trade this bit-parity for throughput.)
+
+def _mamba_position_keys(cfg: ArchConfig) -> tuple:
+    sb = cfg.superblock_or_default()
+    return tuple(str(p) for p, k in enumerate(sb) if k != "attn")
+
+
+def spec_draft(params: Dict, cfg: ArchConfig, token: jax.Array,
+               pos: jax.Array, caches: DecodeCaches, row_valid: jax.Array,
+               bank=None, capacity_factor: float = 2.0,
+               paged: Optional[Dict] = None):
+    """Draft ``S = row_valid.shape[0]`` greedy tokens per row by chaining
+    decode steps (each step's argmax feeds the next step's embedding).
+
+    ``token``: (B,) the last emitted token per row; ``pos``: (B,) the first
+    write position; ``row_valid``: (S, B) per-STEP validity (a row past its
+    own draft depth is masked out of MoE dispatch and counts but still rides
+    for shape stability). ``paged``: ``{"table": (B, nb), "write_blk"/
+    "write_off": (S, B)}`` pre-resolved physical write lanes (the engine
+    routes beyond-depth and vacant lanes to the trash block).
+
+    Passing an all-lo ``bank`` (every ``slot_owner`` = -1) turns the
+    always-resident low-precision fallback tier into the draft model — no
+    extra weights exist, the lo tier IS the speculator. Returns
+    ``(drafted (S, B) int32, caches)``; counts are not emitted (draft
+    traffic must never feed hotness)."""
+    S = row_valid.shape[0]
+
+    def body(carry, xs):
+        tok, c = carry
+        if paged is not None:
+            j, rv, wb, wo = xs
+            logits, c, _ = decode_step_paged(
+                params, cfg, tok, pos + j, c, paged["table"], wb, wo,
+                bank=bank, capacity_factor=capacity_factor, row_valid=rv)
+        else:
+            j, rv = xs
+            logits, c, _ = decode_step(
+                params, cfg, tok, pos + j, c, bank=bank,
+                capacity_factor=capacity_factor, row_valid=rv)
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+        return (nxt, c), nxt
+
+    xs = (jnp.arange(S, dtype=jnp.int32), row_valid)
+    if paged is not None:
+        xs = xs + (paged["write_blk"], paged["write_off"])
+    (_, caches), drafted = jax.lax.scan(body, (token, caches), xs)
+    return drafted, caches
+
+
+def spec_verify(params: Dict, cfg: ArchConfig, tokens: jax.Array,
+                pos: jax.Array, caches: DecodeCaches, row_valid: jax.Array,
+                bank=None, capacity_factor: float = 2.0,
+                paged: Optional[Dict] = None):
+    """Verify ``S`` positions in one dispatch: chained decode steps over the
+    given tokens (row r, step j consumes ``tokens[j, r]`` at position
+    ``pos[r] + j``) under the TARGET (mixed-precision) bank.
+
+    Returns ``(logits (S, B, V), caches, counts, ssm_states)``:
+
+    * ``logits[j]`` is the next-token distribution after consuming
+      ``tokens[:j+1]`` — position j's draft is judged against
+      ``logits[j-1]`` and ``logits[a]`` supplies the bonus token;
+    * ``counts`` values are per-step stacked ((S, nsb, B, E)) so the engine
+      can keep REJECTED positions out of the hotness signal;
+    * ``ssm_states`` maps each mamba position to its per-step stacked cache
+      ((S, nsb, B, ...)) — rejection rolls a row's recurrent state back to
+      exactly the last accepted step, no recompute."""
+    mkeys = _mamba_position_keys(cfg)
+
+    def body(c, xs):
+        if paged is not None:
+            tok, j, rv, wb, wo = xs
+            logits, c, counts = decode_step_paged(
+                params, cfg, tok, pos + j, c, paged["table"], wb, wo,
+                bank=bank, capacity_factor=capacity_factor, row_valid=rv,
+                per_row_counts=True)
+        else:
+            tok, j, rv = xs
+            logits, c, counts = decode_step(
+                params, cfg, tok, pos + j, c, bank=bank,
+                capacity_factor=capacity_factor, row_valid=rv,
+                per_row_counts=True)
+        ssm = {p: c.blocks[p] for p in mkeys}
+        return c, (logits, counts, ssm)
+
+    S = tokens.shape[0]
+    xs = (tokens, jnp.arange(S, dtype=jnp.int32), row_valid)
+    if paged is not None:
+        xs = xs + (paged["write_blk"], paged["write_off"])
+    caches, (logits, counts, ssm) = jax.lax.scan(body, caches, xs)
+    return logits, caches, counts, ssm
+
+

@@ -8,12 +8,17 @@ from repro.serving.kvpool import KVBlockPool, KVLease, TRASH_BLOCK
 from repro.serving.prefix import PrefixTrie
 from repro.serving.requests import (Request, RequestStream, WORKLOADS,
                                     make_prompts, mixed_stream)
+from repro.serving.sampler import (GREEDY, RequestSampler, SamplingParams,
+                                   counter_uniform, sampling_probs)
+from repro.serving.spec import SpecDecoder, accept_burst, all_lo_banks
 
 __all__ = [
-    "BACKENDS", "DynaExqBackend", "EngineConfig", "Fp16Backend",
+    "BACKENDS", "DynaExqBackend", "EngineConfig", "Fp16Backend", "GREEDY",
     "InferenceEngine", "KVBlockPool", "KVLease", "LRUSet", "OffloadBackend",
     "OffloadConfig", "PrefixTrie", "Request", "RequestHandle",
-    "RequestState", "RequestStream", "ResidencyBackend", "STAT_KEYS",
-    "StaticPTQBackend", "TRASH_BLOCK", "WORKLOADS",
-    "make_backend", "make_prompts", "mixed_stream",
+    "RequestSampler", "RequestState", "RequestStream", "ResidencyBackend",
+    "STAT_KEYS", "SamplingParams", "SpecDecoder", "StaticPTQBackend",
+    "TRASH_BLOCK", "WORKLOADS", "accept_burst", "all_lo_banks",
+    "counter_uniform", "make_backend", "make_prompts", "mixed_stream",
+    "sampling_probs",
 ]

@@ -48,9 +48,14 @@ from repro.models.config import ArchConfig
 
 GiB = 1 << 30
 
-#: Keys every backend's ``stats()`` must return (zeros where N/A).
+#: Keys every backend's ``stats()`` must return (zeros where N/A). The
+#: speculative-decoding meters (``accept_rate``/``draft_tokens``/
+#: ``verified_tokens``/``spec_rounds``) are part of the uniform schema so
+#: every benchmark row is machine-comparable whether or not speculation ran;
+#: the engine overwrites them with live values when its SpecDecoder is on.
 STAT_KEYS = ("ttft_s", "tpot_s", "stall_s", "bytes_moved",
-             "promotions", "demotions")
+             "promotions", "demotions",
+             "accept_rate", "draft_tokens", "verified_tokens", "spec_rounds")
 
 
 def _param_bytes(tree) -> int:

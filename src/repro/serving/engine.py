@@ -2,9 +2,13 @@
 paged, prefix-shared KV cache.
 
 The unit of work is a **request**, not a batch: ``submit(request)`` returns a
-handle, ``step()`` advances every in-flight request by one token, ``drain()``
-runs until the queue empties. The engine implements continuous batching over
-a fixed pool of ``max_slots`` batch rows:
+handle, ``step()`` advances every in-flight request — by one sampled token,
+or by a whole accepted draft burst when self-speculative decoding is on
+(``EngineConfig(spec_k > 0)``, see ``repro.serving.spec``) — and ``drain()``
+runs until the queue empties. Tokens are drawn host-side by each request's
+own ``SamplingParams`` (``repro.serving.sampler``; greedy default is exact
+argmax). The engine implements continuous batching over a fixed pool of
+``max_slots`` batch rows:
 
 * **admission** — queued requests are batched into a padded, masked prefill:
   prompt lengths round up a small geometric bucket ladder
@@ -82,6 +86,7 @@ from repro.serving.backends import ResidencyBackend
 from repro.serving.kvpool import KVBlockPool, KVLease
 from repro.serving.prefix import PrefixTrie
 from repro.serving.requests import Request
+from repro.serving.sampler import RequestSampler
 
 
 # Module-level jitted entry points with the (frozen, hashable) ArchConfig as
@@ -166,6 +171,15 @@ class EngineConfig:
     # Unified HBM envelope shared by KV block reservations and the expert
     # hi tier (None = unbounded: per-subsystem caps still apply).
     hbm_budget_bytes: Optional[int] = None
+    # ---- self-speculative decoding -----------------------------------
+    # Max draft depth per round (0 = off). Drafting runs decode with the
+    # backend's all-lo expert banks (no extra weights); every verify round
+    # emits 1..spec_k+1 tokens. Token-identical to spec-off at
+    # temperature=0 under drop-free MoE capacity (see serving.spec).
+    spec_k: int = 0
+    # Adapt the per-round draft depth from an acceptance-rate EMA over a
+    # power-of-two ladder (False = always draft spec_k).
+    spec_adaptive: bool = True
 
 
 class RequestState(enum.Enum):
@@ -182,7 +196,17 @@ class RequestHandle:
         self.request = request
         self.state = RequestState.QUEUED
         self.slot: Optional[int] = None
-        self.tokens: List[int] = []      # generated tokens (greedy)
+        self.tokens: List[int] = []      # generated tokens
+        # Per-request sampling state (counter-based PRNG keyed by the
+        # request's seed; greedy when the request carries no params).
+        self.sampler = RequestSampler(request.sampling)
+        self._eos_scanned = 0            # tokens already checked for EOS
+        # Per-REQUEST speculative acceptance EMA: draft depth adapts from
+        # this request's own history only, so its burst boundaries (and
+        # therefore its PRNG stream consumption) never depend on which
+        # other requests share the batch — bit-reproducibility survives
+        # adaptive speculation.
+        self.spec_ema = 0.75
         self.submit_s: float = 0.0       # perf_counter at submit
         self.stall_at_submit: float = 0.0  # engine stall-clock at submit
         self.ttft_s: float = 0.0         # submit → first token (incl. queue)
@@ -301,6 +325,11 @@ class InferenceEngine:
         self.last_counts: Dict = {}             # (nsb, E) counts, last forward
         self.last_row_counts: Dict = {}         # (nsb, R, E), last forward
         self.decode_times: List[float] = []     # per-step latency incl. stall
+        # Per-TOKEN decode latency accounting: a speculative round's
+        # dispatch latency amortizes over every token the round emits, so
+        # tpot stays time-per-OUTPUT-token whether or not speculation runs.
+        self._tpot_sum = 0.0                    # Σ row-rounds × latency
+        self._tpot_tokens = 0                   # decode-emitted tokens
         self.ttfts: List[float] = []            # per-request submit→first-tok
         # Cumulative modeled stall seconds (backend-returned, never slept):
         # a virtual clock running alongside perf_counter, so queue-inclusive
@@ -332,6 +361,11 @@ class InferenceEngine:
         self._prefill_rows = self.ecfg.prefill_rows \
             if self.ecfg.prefill_rows is not None else min(4, n)
         self.prefill_shapes: set = set()        # (rows, bucket) traced
+        # ---- self-speculative decoding ------------------------------
+        self._spec = None
+        if self.ecfg.spec_k > 0:
+            from repro.serving.spec import SpecDecoder
+            self._spec = SpecDecoder(self)
 
     # ------------------------------------------------------------------
     def _block_bytes(self) -> int:
@@ -381,6 +415,9 @@ class InferenceEngine:
             raise ValueError(
                 f"prompt of {plen} tokens exceeds the largest prefill "
                 f"bucket {self._max_prompt} (max_len={self.ecfg.max_len})")
+        if request.sampling is not None:
+            # Malformed sampling params fail at the door, not mid-decode.
+            request.sampling.validate()
         if self.pool is not None:
             # Loud infeasibility instead of an unbounded queue spin: a
             # request whose worst-case KV quota (no prefix hits) plus the
@@ -512,8 +549,8 @@ class InferenceEngine:
                                          row_caches.blocks,
                                          jnp.asarray(slots_arr)),
                 cross=None)
-            first = np.asarray(jnp.argmax(logits, -1), np.int32)
-            self._post_prefill(group, slots_arr, lengths, counts, dt, first,
+            self._post_prefill(group, slots_arr, lengths, counts, dt,
+                               logits,
                                [int(x) for x in lengths[:G]], finished)
 
     def _admit_paged(self, finished: List[RequestHandle]) -> None:
@@ -652,25 +689,31 @@ class InferenceEngine:
                     chain = [int(lease.table[j])
                              for j in range(plen // self._bt)]
                     self.trie.insert(toks, chain)
-            first = np.asarray(jnp.argmax(logits, -1), np.int32)
             for (h, lease, _) in group:
                 h.lease = lease
             self._post_prefill([h for h, _, _ in group], slots_arr, lengths,
-                               counts, dt, first,
+                               counts, dt, logits,
                                [int(lengths[r] - starts[r])
                                 for r in range(G)], finished)
 
     def _post_prefill(self, group: List[RequestHandle],
                       slots_arr: np.ndarray, lengths: np.ndarray, counts,
-                      dt: float, first: np.ndarray,
+                      dt: float, logits,
                       computed: List[int],
                       finished: List[RequestHandle]) -> None:
         """Shared post-prefill bookkeeping: counts → backend, TTFT, slot
-        assignment, telemetry. ``computed[r]`` is the number of prompt
-        tokens this prefill actually computed for row r (suffix length in
-        paged mode — the prefix-share saving shows up here)."""
+        assignment, telemetry. ``logits`` ((R, V) f32, device) are the
+        last-token logits each row's sampler draws its FIRST token from
+        (emission index 0); an all-greedy group ships only the device
+        argmax to host. ``computed[r]`` is the number of prompt tokens this
+        prefill actually computed for row r (suffix length in paged mode —
+        the prefix-share saving shows up here)."""
         R = self._prefill_rows
         G = len(group)
+        amax = np.asarray(jnp.argmax(logits, -1), np.int32)
+        samp = self._gather_sampling_rows(
+            logits, [r for r, h in enumerate(group)
+                     if not h.sampler.greedy])
         counts_np = {k: np.asarray(v) for k, v in counts.items()}
         self.last_row_counts = counts_np
         self.last_counts = {k: v.sum(axis=1) if v.ndim == 3 else v
@@ -682,7 +725,8 @@ class InferenceEngine:
         self._stall_clock += stall
         for r, handle in enumerate(group):
             slot = int(slots_arr[r])
-            tok = int(first[r])
+            tok = int(amax[r]) if r not in samp else \
+                handle.sampler.next_token(samp[r], 0)
             handle.tokens.append(tok)
             # Serving TTFT: submit → first token. Wall clock covers
             # queue wait and the prefills admitted ahead of it; the
@@ -710,12 +754,30 @@ class InferenceEngine:
                 self._finish(handle, finished)
         self.counters["prefills"] += 1
 
+    @staticmethod
+    def _gather_sampling_rows(logits, rows: List[int]) -> Dict[int,
+                                                               np.ndarray]:
+        """Ship the (·, V) f32 logits of only the given batch rows to host
+        (device-side gather first): row index → (V,) np array."""
+        if not rows:
+            return {}
+        sub = np.asarray(logits[jnp.asarray(rows, jnp.int32)])
+        return {i: sub[j] for j, i in enumerate(rows)}
+
     def _done(self, handle: RequestHandle) -> bool:
         req = handle.request
+        if req.eos_token_id is not None:
+            # A speculative verify step can accept a burst with EOS in the
+            # MIDDLE: scan every not-yet-checked token (not just the tail)
+            # and truncate the output at the first occurrence.
+            toks = handle.tokens
+            for t in range(handle._eos_scanned, len(toks)):
+                if toks[t] == req.eos_token_id:
+                    del toks[t + 1:]
+                    handle._eos_scanned = len(toks)
+                    return True
+            handle._eos_scanned = len(toks)
         if len(handle.tokens) >= req.max_new_tokens:
-            return True
-        if req.eos_token_id is not None and \
-                handle.tokens[-1] == req.eos_token_id:
             return True
         # Out of sequence budget: the slot's cache row is full.
         return int(self.pos[handle.slot]) >= self.ecfg.max_len
@@ -738,60 +800,76 @@ class InferenceEngine:
     # ------------------------------------------------------------------
     def step(self) -> List[RequestHandle]:
         """One engine step: admit queued requests into free slots, then
-        advance every running request by one token. Returns the handles
-        that finished during this step."""
+        advance every running request — by one token on the plain path, by
+        a whole accepted burst (1..spec_k+1 tokens) when speculative
+        decoding is on. Returns the handles that finished this step."""
         finished: List[RequestHandle] = []
         self._admit(finished)
         active = [(i, h) for i, h in enumerate(self.slots) if h is not None]
         if active:
-            row_valid = np.asarray([h is not None for h in self.slots], bool)
-            t0 = time.perf_counter()
-            if self.pool is not None:
-                n = self.ecfg.max_slots
-                wblk = np.zeros(n, np.int32)     # vacant rows → trash block
-                woff = np.zeros(n, np.int32)
-                cows: List[Tuple[int, int]] = []
-                for i, h in active:
-                    wblk[i], woff[i] = self._ensure_write(
-                        h.lease, int(self.pos[i]), cows)
-                self._apply_copies(cows)
-                logits, self.caches, counts = self._jit_decode_paged(
-                    self.params, jnp.asarray(self.tokens),
-                    jnp.asarray(self.pos), self.caches, self.banks,
-                    jnp.asarray(row_valid),
-                    jnp.asarray(self._block_tables()),
-                    jnp.asarray(wblk), jnp.asarray(woff))
-            else:
-                logits, self.caches, counts = self._jit_decode(
-                    self.params, jnp.asarray(self.tokens),
-                    jnp.asarray(self.pos), self.caches, self.banks,
-                    jnp.asarray(row_valid))
-            logits.block_until_ready()
-            dt = time.perf_counter() - t0
-            counts_np = {k: np.asarray(v) for k, v in counts.items()}
-            self.last_row_counts = counts_np
-            self.last_counts = {k: v.sum(axis=1) if v.ndim == 3 else v
-                                for k, v in counts_np.items()}
-            stall = self.backend.observe(counts_np, dt, prefill=False,
-                                         row_valid=row_valid)
-            self._stall_clock += stall
-            latency = dt + stall
-            self.decode_times.append(latency)
-            next_tokens = np.asarray(jnp.argmax(logits, -1), np.int32)
-            for i, handle in active:
-                tok = int(next_tokens[i])
-                handle.tokens.append(tok)
-                handle.step_times.append(latency)
-                for k, v in counts_np.items():
-                    if v.ndim == 3 and k in handle.expert_counts:
-                        handle.expert_counts[k] += v[:, i]
-                self.tokens[i] = tok
-                self.pos[i] += 1
-                if self._done(handle):
-                    self._finish(handle, finished)
-            self.counters["steps"] += 1
+            # The speculative round falls back to the single-token step
+            # when no row has draft headroom (e.g. one token remaining).
+            if self._spec is None or not self._spec.round(active, finished):
+                self._decode_one(active, finished)
         self.backend.tick()
         return finished
+
+    def _decode_one(self, active, finished: List[RequestHandle]) -> None:
+        """Advance every active row by exactly one sampled token."""
+        row_valid = np.asarray([h is not None for h in self.slots], bool)
+        t0 = time.perf_counter()
+        if self.pool is not None:
+            n = self.ecfg.max_slots
+            wblk = np.zeros(n, np.int32)     # vacant rows → trash block
+            woff = np.zeros(n, np.int32)
+            cows: List[Tuple[int, int]] = []
+            for i, h in active:
+                wblk[i], woff[i] = self._ensure_write(
+                    h.lease, int(self.pos[i]), cows)
+            self._apply_copies(cows)
+            logits, self.caches, counts = self._jit_decode_paged(
+                self.params, jnp.asarray(self.tokens),
+                jnp.asarray(self.pos), self.caches, self.banks,
+                jnp.asarray(row_valid),
+                jnp.asarray(self._block_tables()),
+                jnp.asarray(wblk), jnp.asarray(woff))
+        else:
+            logits, self.caches, counts = self._jit_decode(
+                self.params, jnp.asarray(self.tokens),
+                jnp.asarray(self.pos), self.caches, self.banks,
+                jnp.asarray(row_valid))
+        logits.block_until_ready()
+        dt = time.perf_counter() - t0
+        counts_np = {k: np.asarray(v) for k, v in counts.items()}
+        self.last_row_counts = counts_np
+        self.last_counts = {k: v.sum(axis=1) if v.ndim == 3 else v
+                            for k, v in counts_np.items()}
+        stall = self.backend.observe(counts_np, dt, prefill=False,
+                                     row_valid=row_valid)
+        self._stall_clock += stall
+        latency = dt + stall
+        self.decode_times.append(latency)
+        self._tpot_sum += latency * len(active)
+        self._tpot_tokens += len(active)
+        # Greedy fast path: only the (B,) device argmax crosses to host;
+        # full (·, V) logits rows ship only for requests that sample
+        # (device-gathered, so greedy neighbors stay off the transfer).
+        amax = np.asarray(jnp.argmax(logits, -1), np.int32)
+        samp = self._gather_sampling_rows(
+            logits, [i for i, h in active if not h.sampler.greedy])
+        for i, handle in active:
+            tok = int(amax[i]) if i not in samp else \
+                handle.sampler.next_token(samp[i], len(handle.tokens))
+            handle.tokens.append(tok)
+            handle.step_times.append(latency)
+            for k, v in counts_np.items():
+                if v.ndim == 3 and k in handle.expert_counts:
+                    handle.expert_counts[k] += v[:, i]
+            self.tokens[i] = tok
+            self.pos[i] += 1
+            if self._done(handle):
+                self._finish(handle, finished)
+        self.counters["steps"] += 1
 
     def drain(self) -> List[RequestHandle]:
         """Run ``step()`` until no request is queued or running; returns the
@@ -881,12 +959,15 @@ class InferenceEngine:
         self.backend.flush()
 
     # ------------------------------------------------------------------
-    def generate(self, batch: Dict, n_tokens: int):
+    def generate(self, batch: Dict, n_tokens: int, sampling=None):
         """Whole-batch compat shim over submit + drain.
 
-        ``batch``: ``{"tokens": (B, S)}`` with B ≤ ``max_slots``. Greedy
-        generation; returns ``(tokens (B, n_tokens), ttft_s, per_step_s)``
-        token-for-token identical to driving submit/step/drain directly.
+        ``batch``: ``{"tokens": (B, S)}`` with B ≤ ``max_slots``.
+        ``sampling``: optional ``SamplingParams`` applied to every row
+        (default greedy — bit-identical to the pre-sampler shim); validated
+        at ``submit`` like any request. Returns ``(tokens (B, n_tokens),
+        ttft_s, per_step_s)`` token-for-token identical to driving
+        submit/step/drain directly.
         Token-only: multimodal batches (``image_embeds``/``audio_embeds``)
         are not supported by the request path and are rejected loudly.
         """
@@ -907,7 +988,8 @@ class InferenceEngine:
                 f"{toks.shape[1]}-token prompts + {n_tokens} new tokens "
                 f"exceed max_len={self.ecfg.max_len}")
         handles = [self.submit(Request(tokens=toks[i],
-                                       max_new_tokens=n_tokens))
+                                       max_new_tokens=n_tokens,
+                                       sampling=sampling))
                    for i in range(B)]
         n_before = len(self.decode_times)
         self.drain()
@@ -928,8 +1010,15 @@ class InferenceEngine:
         out = dict(self.backend.stats())
         if self.ttfts:
             out["ttft_s"] = float(np.mean(self.ttfts))
+        if self._tpot_tokens:
+            # Time per OUTPUT token: a speculative round's latency spreads
+            # over every token it emitted (the backend's own tpot_s stays
+            # per-forward — per-dispatch latency).
+            out["tpot_s"] = self._tpot_sum / self._tpot_tokens
         out.update({k: float(v) for k, v in self.counters.items()})
         out["prefill_compiles"] = float(len(self.prefill_shapes))
+        if self._spec is not None:
+            out.update(self._spec.stats())
         if self.pool is not None:
             out["kv_blocks_in_use"] = float(self.pool.blocks_in_use)
             out["kv_bytes_in_use"] = float(self.pool.bytes_in_use)

@@ -56,7 +56,7 @@ class KVBlockPool:
         self._free: List[int] = list(range(self.n_blocks - 1, 0, -1))
         self.quota_blocks = 0                   # pre-reserved, not yet alloc'd
         self.stats = {"allocs": 0, "frees": 0, "cow": 0, "retains": 0,
-                      "reclaimed": 0, "quota_denied": 0}
+                      "reclaimed": 0, "quota_denied": 0, "unwinds": 0}
         if self.budget is not None and \
                 not self.budget.try_reserve(self.block_bytes):
             raise MemoryError("KV pool: budget cannot cover the trash block")
@@ -222,6 +222,36 @@ class KVLease:
         if new == cow_src:
             cow_src = -1                        # self-copy is a no-op
         return new, cow_src
+
+    def unwind(self, j: int) -> None:
+        """Give logical block ``j`` back (speculative-rewind path): the
+        block held only REJECTED positions, so it returns to the pool and
+        its bytes move back onto this lease's quota — a later write at the
+        same position re-allocates without a new admission decision.
+
+        COW-safety: only privately-owned blocks may unwind. A block the
+        rewind would release back while shared (adopted prefix, trie
+        registration) was never allocated BY the burst in the first place —
+        the engine only unwinds blocks it saw ``ensure`` freshly allocate,
+        and those always carry exactly one reference."""
+        blk = int(self.table[j])
+        if blk < 0:
+            raise RuntimeError(f"unwind of unallocated logical block {j}")
+        if self.pool.refcount[blk] != 1:
+            raise RuntimeError(
+                f"unwind of shared block {blk} (refcount "
+                f"{int(self.pool.refcount[blk])}) — only burst-fresh "
+                f"private blocks may rewind")
+        self.pool.release(blk)                  # frees the block's bytes
+        self.table[j] = -1
+        # Re-fund the quota with the bytes the release just returned; this
+        # cannot fail — the budget has at least block_bytes free now.
+        if self.pool.budget is not None and \
+                not self.pool.budget.try_reserve(self.pool.block_bytes):
+            raise RuntimeError("unwind could not re-reserve quota bytes")
+        self.pool.quota_blocks += 1
+        self.quota += 1
+        self.pool.stats["unwinds"] += 1
 
     def blocks(self) -> List[int]:
         return [int(b) for b in self.table if b >= 0]

@@ -23,17 +23,24 @@ from typing import Iterator, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.serving.sampler import SamplingParams
+
 WORKLOADS = ("text", "math", "code")
 
 
 @dataclasses.dataclass
 class Request:
-    """One serving request: a prompt plus generation and accounting tags."""
+    """One serving request: a prompt plus generation and accounting tags.
+
+    ``sampling``: per-request ``SamplingParams`` (temperature / top-k /
+    top-p / seed). ``None`` means greedy — bit-identical to pre-sampler
+    engines. Validated at ``InferenceEngine.submit``."""
     tokens: np.ndarray                   # (prompt_len,) int32
     max_new_tokens: int = 16
     workload: str = "text"               # which traffic phase produced it
     arrival_s: float = 0.0               # offset from stream start
     eos_token_id: Optional[int] = None
+    sampling: Optional[SamplingParams] = None
 
 
 class RequestStream:
@@ -53,7 +60,8 @@ class RequestStream:
                  prompt_len_jitter: int = 0,
                  max_new_tokens: int = 8,
                  arrival_rate_rps: Optional[float] = None,
-                 seed: int = 0):
+                 seed: int = 0,
+                 sampling: Optional[SamplingParams] = None):
         self.vocab_size = vocab_size
         self.phases = list(phases)
         self.prompt_len = prompt_len
@@ -61,6 +69,10 @@ class RequestStream:
         self.max_new_tokens = max_new_tokens
         self.arrival_rate_rps = arrival_rate_rps
         self.seed = seed
+        # Per-request sampling params: every request in the stream carries
+        # its own seed (base seed + request ordinal) so replaying the
+        # stream is reproducible while rows stay decorrelated.
+        self.sampling = sampling
 
     def __len__(self) -> int:
         return sum(n for _, n in self.phases)
@@ -68,6 +80,7 @@ class RequestStream:
     def __iter__(self) -> Iterator[Request]:
         rng = np.random.default_rng(self.seed ^ 0x5EED)
         now = 0.0
+        ordinal = 0
         for pi, (workload, n_requests) in enumerate(self.phases):
             for j in range(n_requests):
                 lo = max(1, self.prompt_len - self.prompt_len_jitter)
@@ -77,8 +90,14 @@ class RequestStream:
                                     seed=self.seed + 1009 * pi + j)[0]
                 if self.arrival_rate_rps:
                     now += float(rng.exponential(1.0 / self.arrival_rate_rps))
+                sampling = None
+                if self.sampling is not None:
+                    sampling = dataclasses.replace(
+                        self.sampling, seed=self.sampling.seed + ordinal)
                 yield Request(tokens=toks, max_new_tokens=self.max_new_tokens,
-                              workload=workload, arrival_s=now)
+                              workload=workload, arrival_s=now,
+                              sampling=sampling)
+                ordinal += 1
 
 
 def _zipf_probs(n: int, s: float = 1.2) -> np.ndarray:

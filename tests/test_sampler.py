@@ -1,0 +1,202 @@
+"""Per-request sampling subsystem: mask correctness, counter-PRNG
+determinism, submit-time validation, greedy ≡ argmax bit-identity, and
+seed reproducibility across batch compositions."""
+import numpy as np
+import pytest
+
+from repro.serving import Request, SamplingParams, make_prompts
+from repro.serving.sampler import (RequestSampler, categorical,
+                                   counter_uniform, sampling_probs)
+
+
+# ---------------------------------------------------------------------------
+# Masking
+# ---------------------------------------------------------------------------
+
+def test_top_k_mask():
+    logits = np.array([3.0, 1.0, 2.0, 0.0, -1.0], np.float32)
+    p = sampling_probs(logits, SamplingParams(temperature=1.0, top_k=2))
+    assert p[1] == p[3] == p[4] == 0.0
+    assert p[0] > p[2] > 0.0
+    np.testing.assert_allclose(p.sum(), 1.0, rtol=1e-12)
+
+
+def test_top_p_nucleus_keeps_threshold_crosser():
+    # probs ~ [0.6, 0.3, 0.1]; top_p=0.7 keeps {0.6, 0.3} (the crosser).
+    logits = np.log(np.array([0.6, 0.3, 0.1]))
+    p = sampling_probs(logits.astype(np.float32),
+                       SamplingParams(temperature=1.0, top_p=0.7))
+    assert p[2] == 0.0 and p[0] > 0 and p[1] > 0
+    np.testing.assert_allclose(p, [2 / 3, 1 / 3, 0.0], atol=1e-6)
+
+
+def test_top_p_one_keeps_everything():
+    logits = np.random.default_rng(0).normal(size=16).astype(np.float32)
+    p = sampling_probs(logits, SamplingParams(temperature=0.7, top_p=1.0))
+    assert (p > 0).all()
+
+
+def test_temperature_sharpens():
+    logits = np.array([2.0, 1.0, 0.0], np.float32)
+    hot = sampling_probs(logits, SamplingParams(temperature=2.0))
+    cold = sampling_probs(logits, SamplingParams(temperature=0.25))
+    assert cold[0] > hot[0]                 # low T concentrates on the max
+    assert cold[2] < hot[2]
+
+
+def test_categorical_inverse_cdf():
+    p = np.array([0.25, 0.5, 0.25])
+    assert categorical(p, 0.0) == 0
+    assert categorical(p, 0.3) == 1
+    assert categorical(p, 0.95) == 2
+
+
+# ---------------------------------------------------------------------------
+# Counter PRNG
+# ---------------------------------------------------------------------------
+
+def test_counter_uniform_is_pure():
+    a = counter_uniform(123, 0, 7, 3)
+    b = counter_uniform(123, 0, 7, 3)
+    assert a == b and 0.0 <= a < 1.0
+    assert counter_uniform(123, 0, 8, 3) != a      # counter matters
+    assert counter_uniform(124, 0, 7, 3) != a      # seed matters
+    assert counter_uniform(123, 1, 7, 3) != a      # stream matters
+
+
+def test_greedy_sampler_is_exact_argmax():
+    rng = np.random.default_rng(3)
+    s = RequestSampler(SamplingParams(temperature=0.0, seed=5))
+    for i in range(20):
+        row = rng.normal(size=64).astype(np.float32)
+        assert s.next_token(row, i) == int(np.argmax(row))
+
+
+def test_sampled_token_depends_only_on_seed_and_index():
+    row = np.random.default_rng(1).normal(size=32).astype(np.float32)
+    sp = SamplingParams(temperature=0.9, seed=11)
+    a = RequestSampler(sp).next_token(row, 4)
+    b = RequestSampler(sp).next_token(row, 4)     # fresh sampler, same draw
+    assert a == b
+    assert isinstance(a, int) and 0 <= a < 32
+
+
+# ---------------------------------------------------------------------------
+# Validation (at submit time)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bad", [
+    SamplingParams(temperature=float("nan")),
+    SamplingParams(temperature=-0.5),
+    SamplingParams(temperature=float("inf")),
+    SamplingParams(temperature=1.0, top_p=0.0),
+    SamplingParams(temperature=1.0, top_p=1.5),
+    SamplingParams(temperature=1.0, top_p=float("nan")),
+    SamplingParams(temperature=1.0, top_k=0),
+    SamplingParams(temperature=1.0, top_k=-3),
+])
+def test_validate_rejects(bad):
+    with pytest.raises(ValueError):
+        bad.validate()
+
+
+def test_submit_rejects_bad_params(engine_factory):
+    eng = engine_factory("fp16")
+    toks = make_prompts("text", 512, 1, 8)[0]
+    with pytest.raises(ValueError):
+        eng.submit(Request(tokens=toks, max_new_tokens=2,
+                           sampling=SamplingParams(temperature=-1.0)))
+    with pytest.raises(ValueError):
+        eng.submit(Request(tokens=toks, max_new_tokens=2,
+                           sampling=SamplingParams(temperature=1.0,
+                                                   top_p=2.0)))
+    # queue stayed clean — nothing half-admitted
+    assert not eng.queue
+
+
+# ---------------------------------------------------------------------------
+# Engine integration
+# ---------------------------------------------------------------------------
+
+def _drain_tokens(engine, requests):
+    handles = [engine.submit(r) for r in requests]
+    engine.drain()
+    return [h.tokens for h in handles]
+
+
+def test_greedy_param_identical_to_default(serving_setup, engine_factory):
+    """Explicit temperature=0 params and the no-params default are the
+    same bit-exact greedy path."""
+    cfg, _ = serving_setup
+    prompts = [make_prompts("text", cfg.vocab_size, 1, n, seed=n)[0]
+               for n in (8, 14, 11)]
+    a = _drain_tokens(engine_factory("fp16"), [
+        Request(tokens=p, max_new_tokens=6) for p in prompts])
+    b = _drain_tokens(engine_factory("fp16"), [
+        Request(tokens=p, max_new_tokens=6,
+                sampling=SamplingParams(temperature=0.0, seed=s))
+        for s, p in enumerate(prompts)])
+    assert a == b
+
+
+def test_seed_reproducible_across_batch_compositions(serving_setup):
+    """The same request (same seed) samples the same tokens whether it runs
+    alone or beside other traffic — the PRNG is keyed by the request's own
+    emission counter, never by batch shape. (Drop-free capacity: MoE drops
+    are compute-batch-dependent, the documented parity caveat.)"""
+    import jax
+    from repro.serving import EngineConfig, InferenceEngine, make_backend
+    cfg, params = serving_setup
+
+    def build():
+        clone = jax.tree_util.tree_map(lambda x: x, params)
+        return InferenceEngine(cfg, clone, make_backend("fp16"),
+                               EngineConfig(max_slots=4, max_len=64,
+                                            capacity_factor=8.0))
+
+    target = Request(tokens=make_prompts("text", cfg.vocab_size, 1, 12,
+                                         seed=5)[0],
+                     max_new_tokens=8,
+                     sampling=SamplingParams(temperature=0.8, seed=1234))
+    alone = _drain_tokens(build(), [target])[0]
+
+    others = [Request(tokens=make_prompts("math", cfg.vocab_size, 1, n,
+                                          seed=n)[0],
+                      max_new_tokens=8,
+                      sampling=SamplingParams(temperature=0.8, seed=50 + n))
+              for n in (9, 15)]
+    crowded = _drain_tokens(build(), [others[0], target, others[1]])[1]
+    assert alone == crowded
+
+
+def test_different_seeds_diverge(serving_setup):
+    """Sanity: at high temperature two seeds should not produce the same
+    8-token continuation (deterministic given the fixed seeds here)."""
+    import jax
+    from repro.serving import EngineConfig, InferenceEngine, make_backend
+    cfg, params = serving_setup
+    prompt = make_prompts("text", cfg.vocab_size, 1, 12, seed=5)[0]
+
+    def run(seed):
+        clone = jax.tree_util.tree_map(lambda x: x, params)
+        eng = InferenceEngine(cfg, clone, make_backend("fp16"),
+                              EngineConfig(max_slots=2, max_len=64,
+                                           capacity_factor=8.0))
+        return _drain_tokens(eng, [Request(
+            tokens=prompt, max_new_tokens=8,
+            sampling=SamplingParams(temperature=1.2, seed=seed))])[0]
+
+    assert run(1) != run(2)
+
+
+def test_generate_shim_routes_sampling(engine_factory, serving_setup):
+    cfg, _ = serving_setup
+    prompts = np.asarray(make_prompts("text", cfg.vocab_size, 2, 10))
+    eng = engine_factory("fp16")
+    out, _, _ = eng.generate({"tokens": prompts}, 5,
+                             sampling=SamplingParams(temperature=0.9,
+                                                     seed=7))
+    assert out.shape == (2, 5)
+    with pytest.raises(ValueError):
+        eng.generate({"tokens": prompts}, 2,
+                     sampling=SamplingParams(temperature=float("nan")))

@@ -1,0 +1,382 @@
+"""Self-speculative decoding: token-identity with the non-speculative path
+at temperature=0 (full-attention / sliding-window / mamba stacks, paged and
+dense), KV-pool invariance after rewind, EOS-mid-burst truncation, stats
+surfacing, and rejection-sampling plumbing.
+
+Identity caveats (both documented): MoE capacity drops are compute-batch
+dependent, so tests run drop-free (capacity_factor=8); and an ONLINE
+residency controller makes the target model a function of its own serving
+history (observe/tick cadence), so the mixed-precision identity test warms
+the hi tier then freezes the policy — the drafts still run all-lo, so
+rejection genuinely happens against a time-invariant mixed target."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import ControllerConfig
+from repro.models import init_params
+from repro.serving import (EngineConfig, InferenceEngine, Request,
+                           SamplingParams, make_backend, make_prompts)
+from repro.serving.sampler import RequestSampler
+from repro.serving.spec import accept_burst
+
+ARCHS = {}
+
+
+def _setup(arch):
+    if arch not in ARCHS:
+        cfg = get_config(arch, reduced=True)
+        ARCHS[arch] = (cfg, init_params(jax.random.PRNGKey(0), cfg))
+    cfg, params = ARCHS[arch]
+    return cfg, jax.tree_util.tree_map(lambda x: x, params)
+
+
+def _engine(arch, spec_k, paged=True, backend=None, max_slots=2,
+            max_len=96, **ecfg_kw):
+    cfg, params = _setup(arch)
+    be = make_backend("fp16") if backend is None else backend()
+    eng = InferenceEngine(cfg, params, be,
+                          EngineConfig(max_slots=max_slots, max_len=max_len,
+                                       capacity_factor=8.0, spec_k=spec_k,
+                                       paged=paged, **ecfg_kw))
+    return cfg, eng
+
+
+def _serve(cfg, eng, lengths=(24, 17, 21), new=10, seed=7, **req_kw):
+    """Three requests over two slots: the third admits into a freed slot
+    mid-stream, so every identity test also covers spec rounds across a
+    continuous-batching refill."""
+    handles = [eng.submit(Request(
+        tokens=make_prompts("text", cfg.vocab_size, 1, L, seed=seed + s)[0],
+        max_new_tokens=new, **req_kw))
+        for s, L in enumerate(lengths)]
+    eng.drain()
+    return [h.tokens for h in handles]
+
+
+# ---------------------------------------------------------------------------
+# Greedy token-identity, all three stack types
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch,paged", [
+    ("granite-moe-1b-a400m", True),      # full attention, paged pool
+    ("granite-moe-1b-a400m", False),     # full attention, dense rows
+    ("h2o-danube-3-4b", True),           # sliding-window ring, paged
+    ("h2o-danube-3-4b", False),          # sliding-window ring, dense
+    ("mamba2-130m", False),              # pure SSM (no KV at all)
+])
+def test_spec_token_identity_greedy(arch, paged):
+    cfg, eng_off = _engine(arch, spec_k=0, paged=paged)
+    off = _serve(cfg, eng_off)
+    cfg, eng_on = _engine(arch, spec_k=4, paged=paged)
+    on = _serve(cfg, eng_on)
+    assert off == on
+    st = eng_on.stats()
+    assert st["spec_rounds"] > 0
+    assert st["verified_tokens"] > st["spec_rounds"]  # >1 token/round
+
+
+def test_spec_token_identity_jamba_mixed_stack():
+    """Mixed mamba+attention: SSM snapshot/rollback and KV rewind in the
+    same round."""
+    cfg, eng_off = _engine("jamba-v0_1-52b", spec_k=0)
+    off = _serve(cfg, eng_off, new=8)
+    cfg, eng_on = _engine("jamba-v0_1-52b", spec_k=3)
+    on = _serve(cfg, eng_on, new=8)
+    assert off == on
+
+
+def test_spec_identity_against_frozen_mixed_precision_target():
+    """The real DynaExq shape: draft on the all-lo tier, verify against a
+    WARMED mixed-precision bank (hi tier populated, policy then frozen so
+    the target is time-invariant). Rejections must actually occur — the
+    draft model genuinely differs — and the emitted tokens must still equal
+    the non-speculative engine's."""
+    def backend():
+        return make_backend("dynaexq", lo_bits=4, n_hi_per_layer=2,
+                            controller=ControllerConfig(
+                                update_interval_s=0.0))
+
+    def build(spec_k):
+        cfg, eng = _engine("granite-moe-1b-a400m", spec_k=spec_k,
+                           backend=backend, max_slots=2, max_len=96)
+        warm = make_prompts("text", cfg.vocab_size, 2, 16, seed=99)
+        eng.generate({"tokens": warm}, 4)
+        eng.backend.force_update()
+        eng.backend.flush()
+        for ctl in eng.backend.controllers.values():
+            ctl.cfg = dataclasses.replace(ctl.cfg, update_interval_s=1e9)
+        return cfg, eng
+
+    cfg, eng_off = build(0)
+    off = _serve(cfg, eng_off, lengths=(20, 13))
+    cfg, eng_on = build(4)
+    on = _serve(cfg, eng_on, lengths=(20, 13))
+    assert off == on
+    st = eng_on.stats()
+    assert st["draft_tokens"] > 0
+    # hi tier is populated, so lo-draft vs mixed-target must disagree
+    # somewhere (otherwise this test is vacuous)
+    assert st["accept_rate"] < 1.0
+    assert 0.0 < st["accept_rate"]
+
+
+# ---------------------------------------------------------------------------
+# KV pool: no leaked blocks / refcounts after rewind
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["granite-moe-1b-a400m", "h2o-danube-3-4b"])
+def test_kvpool_invariant_after_spec_rewind(arch):
+    cfg, eng_off = _engine(arch, spec_k=0, paged=True)
+    _serve(cfg, eng_off, new=12)
+    cfg, eng_on = _engine(arch, spec_k=4, paged=True)
+    _serve(cfg, eng_on, new=12)
+    eng_on.pool.check_invariants()
+    # Every lease closed: spec-on must hold exactly the blocks spec-off
+    # does (trie-retained prefix chunks only) — rejected-tail blocks were
+    # unwound/released, refcounts fully unwound, quota fully returned.
+    assert eng_on.pool.blocks_in_use == eng_off.pool.blocks_in_use
+    assert eng_on.pool.quota_blocks == 0
+    np.testing.assert_array_equal(np.sort(eng_on.pool.refcount),
+                                  np.sort(eng_off.pool.refcount))
+
+
+def test_spec_unwinds_rejected_tail_blocks():
+    """Force tiny blocks so a draft burst regularly crosses a block
+    boundary; rejected-tail blocks must flow back (pool stats see either
+    unwinds or zero crossings, and invariants always hold mid-flight)."""
+    cfg, eng = _engine("granite-moe-1b-a400m", spec_k=4, paged=True,
+                       block_tokens=4, max_slots=1)
+    h = eng.submit(Request(
+        tokens=make_prompts("text", cfg.vocab_size, 1, 18, seed=3)[0],
+        max_new_tokens=16))
+    while h.state.value != "finished":
+        eng.step()
+        eng.pool.check_invariants()
+    assert len(h.tokens) == 16
+
+
+# ---------------------------------------------------------------------------
+# EOS mid-burst truncation
+# ---------------------------------------------------------------------------
+
+def test_eos_mid_burst_truncates_at_first_occurrence():
+    # Find a token the greedy continuation emits mid-stream, then rerun
+    # with that token as EOS: both engines must truncate identically even
+    # though the speculative engine accepted it mid-burst.
+    cfg, eng = _engine("granite-moe-1b-a400m", spec_k=0)
+    base = _serve(cfg, eng, lengths=(20,), new=12)[0]
+    eos = base[len(base) // 2]                   # appears mid-generation
+    want = base[:base.index(eos) + 1]
+
+    cfg, eng_off = _engine("granite-moe-1b-a400m", spec_k=0)
+    off = _serve(cfg, eng_off, lengths=(20,), new=12, eos_token_id=eos)[0]
+    cfg, eng_on = _engine("granite-moe-1b-a400m", spec_k=4)
+    h = eng_on.submit(Request(
+        tokens=make_prompts("text", cfg.vocab_size, 1, 20, seed=7)[0],
+        max_new_tokens=12, eos_token_id=eos))
+    eng_on.drain()
+    on = h.tokens
+    assert off == want
+    assert on == want
+    assert on[-1] == eos and eos not in on[:-1]
+    # Discarded post-EOS tokens must not linger in per-token accounting:
+    # one step_times entry per DECODE-emitted kept token (the first token
+    # comes from prefill and is tracked by ttft instead).
+    assert len(h.step_times) == len(h.tokens) - 1
+    assert eng_on.stats()["verified_tokens"] <= len(h.tokens) - 1
+
+
+# ---------------------------------------------------------------------------
+# Stats + sampling integration
+# ---------------------------------------------------------------------------
+
+def test_spec_stats_in_uniform_schema():
+    from repro.serving import STAT_KEYS
+    for key in ("accept_rate", "draft_tokens", "verified_tokens",
+                "spec_rounds"):
+        assert key in STAT_KEYS
+    cfg, eng = _engine("granite-moe-1b-a400m", spec_k=3)
+    _serve(cfg, eng)
+    st = eng.stats()
+    assert st["spec_rounds"] > 0 and st["draft_tokens"] > 0
+    assert 0.0 <= st["accept_rate"] <= 1.0
+    assert st["verified_tokens"] >= st["spec_rounds"]
+    # spec-off engines still carry the schema keys (zeros)
+    cfg, eng0 = _engine("granite-moe-1b-a400m", spec_k=0)
+    _serve(cfg, eng0)
+    assert eng0.stats()["spec_rounds"] == 0.0
+
+
+def test_spec_sampled_decode_is_deterministic_per_seed():
+    """temperature>0 + speculation: rejection sampling draws from
+    counter-keyed streams, so a full rebuild reproduces the tokens."""
+    def run():
+        cfg, eng = _engine("granite-moe-1b-a400m", spec_k=3)
+        return _serve(cfg, eng, new=8,
+                      sampling=SamplingParams(temperature=0.9, seed=42))
+    a, b = run(), run()
+    assert a == b
+    assert all(len(t) == 8 for t in a)
+
+
+def test_spec_sampled_reproducible_across_batch_compositions():
+    """Adaptive speculation must not leak batch composition into sampled
+    outputs: draft depth comes from each request's OWN acceptance EMA, so
+    the same request consumes identical PRNG streams alone or crowded
+    (frozen mixed-precision target keeps acceptance genuinely variable)."""
+    def backend():
+        return make_backend("dynaexq", lo_bits=4, n_hi_per_layer=2,
+                            controller=ControllerConfig(
+                                update_interval_s=0.0))
+
+    def build():
+        cfg, eng = _engine("granite-moe-1b-a400m", spec_k=4,
+                           backend=backend, max_slots=3, max_len=96)
+        warm = make_prompts("text", cfg.vocab_size, 2, 16, seed=99)
+        eng.generate({"tokens": warm}, 4)
+        eng.backend.force_update()
+        eng.backend.flush()
+        for ctl in eng.backend.controllers.values():
+            ctl.cfg = dataclasses.replace(ctl.cfg, update_interval_s=1e9)
+        return cfg, eng
+
+    cfg, eng = build()
+    target = Request(tokens=make_prompts("text", cfg.vocab_size, 1, 18,
+                                         seed=5)[0],
+                     max_new_tokens=10,
+                     sampling=SamplingParams(temperature=0.8, seed=777))
+    alone = eng.submit(target)
+    eng.drain()
+
+    cfg, eng2 = build()
+    others = [Request(tokens=make_prompts("math", cfg.vocab_size, 1, n,
+                                          seed=n)[0],
+                      max_new_tokens=10,
+                      sampling=SamplingParams(temperature=0.8, seed=n))
+              for n in (11, 23)]
+    hs = [eng2.submit(r) for r in (others[0], target, others[1])]
+    eng2.drain()
+    assert alone.tokens == hs[1].tokens
+
+
+def test_accept_burst_rejection_math():
+    """Unit check of the acceptance rule: greedy draft proposal ⇒ accept
+    prob p(d), residual = p minus the draft token, renormalized."""
+    sampler = RequestSampler(SamplingParams(temperature=1.0, seed=0))
+    V = 8
+    logits = np.zeros((3, V), np.float32)
+    logits[:, 0] = 10.0                           # p ≈ one-hot at 0
+    drafts = np.array([0, 0], np.int32)
+    a, out = accept_burst(sampler, drafts, logits)
+    assert a == 2 and len(out) == 3               # all accepted + bonus
+    assert out == [0, 0, 0]
+
+    # draft disagrees with a near-deterministic target → rejected at j=0,
+    # exactly one corrected token emitted, never the draft token
+    drafts = np.array([3, 3], np.int32)
+    a, out = accept_burst(sampler, drafts, logits)
+    assert a == 0 and len(out) == 1
+    assert out[0] != 3
+
+    # greedy params: pure argmax agreement
+    g = RequestSampler(SamplingParams(temperature=0.0))
+    logits = np.random.default_rng(0).normal(size=(4, V)).astype(np.float32)
+    drafts = np.argmax(logits[:3], -1).astype(np.int32)
+    a, out = accept_burst(g, drafts, logits)
+    assert a == 3
+    assert out == [int(np.argmax(logits[j])) for j in range(4)]
+
+
+@pytest.mark.parametrize("arch", ["granite-moe-1b-a400m", "h2o-danube-3-4b"])
+def test_spec_round_touches_only_accepted_slots_dense(arch):
+    """Invariant: a speculative round may change a live row's dense cache
+    ONLY at the slots of the tokens it accepted ([pos_before, pos_after) mod
+    C) — every other slot must be bit-identical before/after the round.
+    This directly catches the whole non-accepted-write class: rejected-tail
+    lanes, beyond-depth lanes a shallow row rides on a deeper row's burst,
+    and the wrap of those lanes onto LIVE low slots when a row sits near
+    its sequence cap ((pos + j) % C in full caches, any wrap in rings)."""
+    cfg, eng = _engine(arch, spec_k=4, paged=False, max_slots=2, max_len=24)
+    # Row 0 admitted near the cap (depth clamps to max_len-1-pos while row 1
+    # drafts deep), row 1 with full headroom.
+    handles = [eng.submit(Request(
+        tokens=make_prompts("text", cfg.vocab_size, 1, L, seed=31 + L)[0],
+        max_new_tokens=12)) for L in (18, 6)]
+    C = eng._C_attn
+    spec_rounds_checked = 0
+    for _ in range(64):
+        if all(h.state.value == "finished" for h in handles):
+            break
+        live = {i: h for i, h in enumerate(eng.slots) if h is not None}
+        pos_before = eng.pos.copy()
+        before = {p: (np.asarray(eng.caches.blocks[p].k),
+                      np.asarray(eng.caches.blocks[p].v))
+                  for p in eng._attn_pos}
+        rounds0 = eng._spec.rounds
+        eng.step()
+        if eng._spec.rounds == rounds0:
+            continue                     # single-token fallback step
+        spec_rounds_checked += 1
+        for i, h in live.items():
+            # pos advanced by exactly the accepted+bonus tokens; _finish
+            # does not reset it, so the range is valid even for rows that
+            # completed during the round. (Rows admitted THIS step are not
+            # in `live` and are not checked — their cache row was fully
+            # rewritten by admission.)
+            allowed = {int(p) % C
+                       for p in range(int(pos_before[i]), int(eng.pos[i]))}
+            keep = np.asarray([s not in allowed for s in range(C)], bool)
+            for p in eng._attn_pos:
+                for arr, name in ((eng.caches.blocks[p].k, "k"),
+                                  (eng.caches.blocks[p].v, "v")):
+                    after = np.asarray(arr)
+                    idx = 0 if name == "k" else 1
+                    np.testing.assert_array_equal(
+                        after[:, i, :, keep], before[p][idx][:, i, :, keep],
+                        err_msg=f"row {i} {name} pos {p}: non-accepted "
+                                f"slot changed (allowed={sorted(allowed)})")
+    assert spec_rounds_checked > 0
+
+
+def test_spec_identity_near_sequence_cap_dense():
+    """A row close to its sequence cap rides a deeper row's burst beyond
+    its own depth; in a DENSE full cache those extra lanes wrap
+    ``(pos + j) % C`` onto live low slots and must be restored, or the
+    row's remaining decode reads clobbered context. Frozen mixed-precision
+    target keeps rejections real (partial acceptance leaves rows alive
+    past wrapped lanes) while the trajectory stays time-invariant."""
+    def backend():
+        return make_backend("dynaexq", lo_bits=4, n_hi_per_layer=2,
+                            controller=ControllerConfig(
+                                update_interval_s=0.0))
+
+    def build(spec_k):
+        cfg, eng = _engine("granite-moe-1b-a400m", spec_k=spec_k,
+                           paged=False, backend=backend, max_slots=3,
+                           max_len=48)
+        warm = make_prompts("text", cfg.vocab_size, 2, 16, seed=99)
+        eng.generate({"tokens": warm}, 4)
+        eng.backend.force_update()
+        eng.backend.flush()
+        for ctl in eng.backend.controllers.values():
+            ctl.cfg = dataclasses.replace(ctl.cfg, update_interval_s=1e9)
+        return cfg, eng
+
+    cfg, eng_off = build(0)
+    off = _serve(cfg, eng_off, lengths=(40, 8, 36), new=12)
+    cfg, eng_on = build(4)
+    on = _serve(cfg, eng_on, lengths=(40, 8, 36), new=12)
+    assert off == on
+
+
+def test_spec_headroom_fallback_single_token():
+    """max_new_tokens=1 leaves no draft headroom: the engine must fall back
+    to the plain single-token step and still finish correctly."""
+    cfg, eng = _engine("granite-moe-1b-a400m", spec_k=4)
+    toks = _serve(cfg, eng, lengths=(12, 9), new=1)
+    assert all(len(t) == 1 for t in toks)
+    assert eng.stats()["spec_rounds"] == 0.0
