@@ -1,21 +1,154 @@
-"""Kernel microbenchmarks: interpret-mode correctness-path timing plus the
-ANALYTIC TPU roofline for the quant-GEMM (the number that matters — this
-container has no TPU). derived = arithmetic-intensity/roofline speedup of the
-int4 fused path over bf16 weights for the memory-bound decode GEMM."""
+"""Decode hot-path kernel benchmark: padded (E, C, d) dispatch vs the
+padding-free ragged dispatch + fused mixed-precision kernel, at decode
+batches 1 / 8 / 32 under heavy-tailed routing.
+
+The number that matters on a memory-bound decode step is WEIGHT BYTES READ
+PER TOKEN. The padded path streams every expert's lo codes plus every
+published hi slot each step regardless of routing; the ragged path streams
+only the experts that actually received tokens, and for each only its
+resident tier. Bytes are computed analytically from the observed routing
+(counts ∩ residency) — interpret-mode wall clock on this CPU container
+measures Python, not HBM, so the byte model IS the deliverable — alongside
+measured ``MoEAux`` telemetry (active experts, dispatch pad ratio) and
+jnp-path tokens/s for sanity.
+
+Rows land in ``experiments/BENCH_kernels.json`` (uniform schema:
+``{batch, path, bytes_per_token, pad_ratio, active_experts, tokens_per_s}``);
+``BENCH_SMOKE=1`` shrinks the step count for CI. The analytic TPU roofline
+for the plain quant-matmul (old deliverable) stays in ``run_roofline``.
+"""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from benchmarks.common import BENCH_SMOKE
 from benchmarks.hw import HBM_GBPS, PEAK_TFLOPS_BF16
+from repro.core.ver import build_bank, expert_hi_nbytes, expert_lo_nbytes
 from repro.kernels.ops import quant_matmul_op
-from repro.kernels import ref
+from repro.models.config import MoEConfig
+from repro.models.moe import init_moe, moe_apply, moe_capacity
 from repro.quant import quantize
+
+E, TOP_K, D_MODEL, D_FF = 32, 2, 256, 512
+N_HI, LO_BITS, GROUP = 4, 4, 64
+BATCHES = (1, 8, 32)
+N_STEPS = 3 if BENCH_SMOKE else 10
+JSON_OUT = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                        "BENCH_kernels.json")
+
+
+def _setup():
+    cfg = MoEConfig(num_experts=E, top_k=TOP_K, d_ff_expert=D_FF,
+                    norm_topk_prob=True)
+    params = init_moe(jax.random.PRNGKey(0), D_MODEL, cfg)
+    # Heavy-tailed routing (the serving regime the ragged path targets):
+    # bias the router so a handful of experts absorb most tokens.
+    bias = jnp.linspace(2.5, -2.5, E)[None, :]
+    params["router"] = params["router"] * 0.3 + bias
+    w = {n: a[None] for n, a in params["experts"].items()}
+    bank = build_bank(w, n_hi=N_HI, lo_bits=LO_BITS, group_size=GROUP)
+    # Publish the N_HI hottest experts (lowest column index = hottest under
+    # the bias above) — the mixed hi/lo residency the kernel selects over.
+    for s in range(N_HI):
+        bank.slot_map = bank.slot_map.at[0, s].set(s)
+        bank.slot_owner = bank.slot_owner.at[0, s].set(s)
+        for n in bank.hi:
+            bank.hi[n] = bank.hi[n].at[0, s].set(w[n][0, s])
+    sliced = jax.tree_util.tree_map(lambda a: a[0], bank)
+    shapes = {n: tuple(a.shape) for n, a in w.items()}
+    lo_b = expert_lo_nbytes(shapes, LO_BITS, GROUP)
+    hi_b = expert_hi_nbytes(shapes, hi_bits=16, group_size=GROUP)
+    return cfg, params, sliced, lo_b, hi_b
+
+
+def _bytes_per_token(counts: np.ndarray, slot_map: np.ndarray, batch: int,
+                     path: str, lo_b: int, hi_b: int) -> float:
+    """Weight bytes one decode step reads under ``path``, / batch tokens."""
+    is_hi = slot_map >= 0
+    if path.startswith("padded"):
+        # Padded reads EVERY expert's lo codes + EVERY published hi slot.
+        total = E * lo_b + int(is_hi.sum()) * hi_b
+    else:
+        active = counts > 0
+        total = int((active & ~is_hi).sum()) * lo_b + \
+            int((active & is_hi).sum()) * hi_b
+    return total / batch
 
 
 def run(report):
+    cfg, params, bank, lo_b, hi_b = _setup()
+    slot_map = np.asarray(bank.slot_map)
+    rows = []
+    for batch in BATCHES:
+        cap = moe_capacity(batch, cfg, 2.0)
+        for path in ("padded-jnp", "ragged-jnp"):
+            dispatch = path.split("-")[0]
+
+            @jax.jit
+            def step(x):
+                return moe_apply(params, bank, x, cfg, cap,
+                                 dispatch=dispatch)
+
+            xs = [jax.random.normal(jax.random.PRNGKey(7 + s),
+                                    (batch, D_MODEL), jnp.bfloat16)
+                  for s in range(N_STEPS)]
+            step(xs[0])[0].block_until_ready()          # compile
+            bpt, padr, act = [], [], []
+            t0 = time.perf_counter()
+            for x in xs:
+                y, aux = step(x)
+                y.block_until_ready()
+                c = np.asarray(aux.counts)
+                bpt.append(_bytes_per_token(c, slot_map, batch, path,
+                                            lo_b, hi_b))
+                padr.append(float(aux.dispatch_pad_ratio))
+                act.append(float(aux.active_experts))
+            dt = (time.perf_counter() - t0) / N_STEPS
+            row = {
+                "batch": batch,
+                "path": path,
+                "bytes_per_token": float(np.mean(bpt)),
+                "pad_ratio": float(np.mean(padr)),
+                "active_experts": float(np.mean(act)),
+                "tokens_per_s": batch / dt,
+                "num_experts": E,
+                "n_hi": N_HI,
+                "lo_bits": LO_BITS,
+            }
+            rows.append(row)
+            report(f"kernels/dispatch/{path}/b{batch}", dt * 1e6,
+                   round(row["bytes_per_token"] / 1024, 1))
+    # The structural claim the ragged path exists for: strictly fewer
+    # weight bytes per token than padded at every decode batch ≤ 32.
+    for batch in BATCHES:
+        p = next(r for r in rows if r["batch"] == batch
+                 and r["path"] == "padded-jnp")
+        g = next(r for r in rows if r["batch"] == batch
+                 and r["path"] == "ragged-jnp")
+        assert g["bytes_per_token"] < p["bytes_per_token"], \
+            (batch, g["bytes_per_token"], p["bytes_per_token"])
+    out = {"schema": "bench/kernels/v1", "smoke": BENCH_SMOKE,
+           "config": {"num_experts": E, "top_k": TOP_K, "d_model": D_MODEL,
+                      "d_ff_expert": D_FF, "n_hi": N_HI,
+                      "lo_bits": LO_BITS, "group_size": GROUP,
+                      "ragged_bm": int(os.environ.get(
+                          "REPRO_MOE_RAGGED_BM", "8"))},
+           "rows": rows}
+    os.makedirs(os.path.dirname(JSON_OUT), exist_ok=True)
+    with open(JSON_OUT, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+
+
+def run_roofline(report):
+    """Analytic TPU roofline for the plain quant-GEMM (the original
+    deliverable — this container has no TPU, so derived = roofline speedup
+    of the int-fused path over bf16 weights for the memory-bound GEMM)."""
     m, k, n = 128, 2048, 768          # one qwen3 expert GEMM at decode
     x = jax.random.normal(jax.random.PRNGKey(0), (m, k), jnp.bfloat16)
     w = jax.random.normal(jax.random.PRNGKey(1), (k, n), jnp.float32)
@@ -25,7 +158,6 @@ def run(report):
         t0 = time.perf_counter()
         quant_matmul_op(x, qt).block_until_ready()
         dt = time.perf_counter() - t0
-        # analytic v5e roofline: memory-bound decode GEMM time = bytes/bw
         w_bytes = qt.nbytes
         t_mem = w_bytes / (HBM_GBPS * 1e9)
         t_bf16 = (k * n * 2) / (HBM_GBPS * 1e9)

@@ -42,6 +42,7 @@ def main() -> None:
         ("spec_decode", spec_decode.run),
         ("prompt_scaling", prompt_scaling.run),
         ("kernels", kernels_bench.run),
+        ("kernels_roofline", kernels_bench.run_roofline),
         ("kernels_flash", kernels_bench.run_flash),
     ]
     failures = 0

@@ -4,16 +4,26 @@ On CUDA the paper fights allocator fragmentation with fixed-size block pools
 and constant-time free lists. In JAX the device arrays are preallocated once,
 so fragmentation cannot occur; what remains is the *slot accounting*: which
 hi-pool slot is free, which expert owns which slot. ``SlotPool`` is that
-constant-time free list, host-side, one per layer.
+free list, host-side, one per layer.
+
+Allocation is lowest-index-first (a min-heap, O(log n)): occupied hi slots
+pack toward the low end of the pool, so after churn the live slots stay a
+(mostly) contiguous prefix of the (n_hi, K, N) pool arrays. That layout is
+what the ragged decode kernel's BlockSpec indexing wants — the hi-slot
+blocks a step touches cluster instead of striding across the whole pool —
+and it costs nothing over the previous LIFO list.
 """
 from __future__ import annotations
 
+import heapq
+
 
 class SlotPool:
-    """Constant-time free list over ``n_slots`` fixed-granularity slots."""
+    """Lowest-index-first free list over ``n_slots`` fixed-granularity
+    slots (constant-time membership, log-time alloc/free)."""
 
     def __init__(self, n_slots: int):
-        self._free = list(range(n_slots - 1, -1, -1))
+        self._free = list(range(n_slots))     # already a valid min-heap
         self._owner: dict[int, int] = {}      # slot → expert
         self.n_slots = n_slots
 
@@ -22,18 +32,18 @@ class SlotPool:
         return len(self._free)
 
     def alloc(self, expert: int) -> int:
-        """Pop a free slot for ``expert``; raises if full (the admission
-        check must prevent that)."""
+        """Pop the lowest free slot for ``expert``; raises if full (the
+        admission check must prevent that)."""
         if not self._free:
             raise RuntimeError("pool exhausted — admission control bug")
-        slot = self._free.pop()
+        slot = heapq.heappop(self._free)
         self._owner[slot] = expert
         return slot
 
     def free(self, slot: int) -> None:
         if slot in self._owner:
             del self._owner[slot]
-            self._free.append(slot)
+            heapq.heappush(self._free, slot)
 
     def owner(self, slot: int) -> int | None:
         return self._owner.get(slot)

@@ -1,10 +1,12 @@
-"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets) plus the
+group-blocked quantized GEMM expressions the serving path dispatches to on
+backends without Pallas support (see ``repro.kernels.ops``)."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.quant.qtensor import unpack_bits
+from repro.quant.qtensor import unpack_bits, unpack_codes_int8
 
 
 def dequant_ref(packed: jax.Array, scales: jax.Array, bits: int,
@@ -32,6 +34,68 @@ def grouped_quant_matmul_ref(xg: jax.Array, packed: jax.Array,
     """xg: (E, C, K) × quantized (E, K, N) → (E, C, N)."""
     w = dequant_ref(packed, scales, bits, group)
     return jnp.einsum("eck,ekn->ecn", xg.astype(jnp.float32), w).astype(xg.dtype)
+
+
+def grouped_lo_gemm_jnp(xg: jax.Array, packed: jax.Array, scales: jax.Array,
+                        bits: int, group: int) -> jax.Array:
+    """Group-blocked quantized GEMM, jnp expression: xg (B, C, K) × int codes
+    (B, K, N) with per-(group, N) scales applied AFTER the per-group partial
+    matmuls — the dequantized (K, N) weight matrix is never materialized.
+    This is the jnp re-expression of the Pallas fused quant-matmul
+    (``kernels.quant_matmul``); the two are collapsed behind ONE dispatcher
+    (``ops.grouped_lo_matmul``) and bit-parity-tested against each other.
+    The leading dim is any batch (experts in the padded MoE path, row tiles
+    in the ragged path)."""
+    B, C, K = xg.shape
+    codes = unpack_codes_int8(packed, bits)          # (B, K, N) int8
+    N = codes.shape[-1]
+    G = K // group
+    # (b, g) merge into ONE batch dim (multi-batch-dim bf16 dots are not
+    # universally supported by backends).
+    xr = xg.reshape(B, C, G, group).transpose(0, 2, 1, 3) \
+        .reshape(B * G, C, group)
+    qr = codes.reshape(B * G, group, N).astype(xg.dtype)
+    part = jnp.einsum("bcd,bdn->bcn", xr, qr,
+                      preferred_element_type=jnp.float32)
+    part = part.reshape(B, G, C, N).transpose(0, 2, 1, 3)    # (B, C, G, N)
+    out = jnp.einsum("ecgn,egn->ecn", part,
+                     scales.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    return out.astype(xg.dtype)
+
+
+def ragged_quant_ffn_ref(xs: jax.Array, tile_eid: jax.Array,
+                         tile_slot: jax.Array,
+                         gate_packed, gate_scales, up_packed, up_scales,
+                         down_packed, down_scales,
+                         hi_gate=None, hi_up=None, hi_down=None, *,
+                         bits: int, group: int, bm: int) -> jax.Array:
+    """jnp oracle for the ragged mixed-precision expert FFN: ``xs`` is the
+    (R = Tt·bm, K) bm-aligned compacted activation buffer, ``tile_eid`` the
+    (Tt,) expert id per row tile and ``tile_slot`` its hi-pool slot (−1 ⇒
+    lo tier). Each tile computes SwiGLU with either its expert's lo-tier
+    group-blocked quantized weights or its hi-slot bf16 weights — the same
+    per-row math (and therefore the same bits on a given backend) as the
+    padded ``_quant_expert_ffn`` path, just laid out raggedly."""
+    Tt = tile_eid.shape[0]
+    K = xs.shape[1]
+    xt = xs.reshape(Tt, bm, K)
+    g1 = grouped_lo_gemm_jnp(xt, gate_packed[tile_eid],
+                             gate_scales[tile_eid], bits, group)
+    up = grouped_lo_gemm_jnp(xt, up_packed[tile_eid],
+                             up_scales[tile_eid], bits, group)
+    h = jax.nn.silu(g1.astype(jnp.float32)).astype(xt.dtype) * up
+    y = grouped_lo_gemm_jnp(h, down_packed[tile_eid],
+                            down_scales[tile_eid], bits, group)
+    if hi_gate is not None and hi_gate.shape[0] > 0:
+        safe = jnp.clip(tile_slot, 0, hi_gate.shape[0] - 1)
+        hh = jax.nn.silu(
+            jnp.einsum("tbd,tdf->tbf", xt, hi_gate[safe])
+            .astype(jnp.float32)).astype(xt.dtype)
+        hh = hh * jnp.einsum("tbd,tdf->tbf", xt, hi_up[safe])
+        yh = jnp.einsum("tbf,tfd->tbd", hh, hi_down[safe])
+        y = jnp.where((tile_slot >= 0)[:, None, None], yh, y)
+    return y.reshape(Tt * bm, y.shape[-1])
 
 
 def flash_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,

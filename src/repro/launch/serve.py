@@ -62,6 +62,14 @@ def main():
                     help="unified envelope shared by KV blocks and the "
                          "expert hi tier (promotion backpressure under KV "
                          "pressure)")
+    ap.add_argument("--moe-dispatch", default=None,
+                    choices=["padded", "ragged"],
+                    help="MoE token layout: padded (E,C,d) reference vs "
+                         "ragged compacted dispatch + fused mixed-precision "
+                         "kernel (default: ragged on TPU, padded on CPU)")
+    ap.add_argument("--row-capacity", action="store_true",
+                    help="normalize MoE capacity drops per request row "
+                         "(batch-shape-independent token drops)")
     ap.add_argument("--spec-k", type=int, default=4,
                     help="max speculative draft depth per round (drafts on "
                          "the all-lo expert tier, verifies against the "
@@ -93,7 +101,9 @@ def main():
                      prefix_sharing=not args.no_prefix_sharing,
                      hbm_budget_bytes=None if args.hbm_budget_gb is None
                      else int(args.hbm_budget_gb * (1 << 30)),
-                     spec_k=spec_k))
+                     spec_k=spec_k,
+                     moe_dispatch=args.moe_dispatch,
+                     row_capacity_norm=args.row_capacity))
     toks = make_prompts(args.workload, cfg.vocab_size,
                         args.batch, args.prompt_len)
     use_sampling = (args.temperature > 0 or args.top_k is not None or
@@ -113,6 +123,10 @@ def main():
     st = engine.stats()
     print(f"[serve] TTFT {st['ttft_s']*1e3:.1f} ms  TPOT "
           f"{st['tpot_s']*1e3:.1f} ms  throughput {tput:.2f} tok/s")
+    print(f"[serve] moe dispatch={engine.moe_dispatch}: "
+          f"active_experts {st.get('active_experts', 0.0):.1f}"
+          f"/{cfg.moe.num_experts if cfg.is_moe else 0}  "
+          f"pad_ratio {st.get('dispatch_pad_ratio', 0.0):.2f}")
     if spec_k:
         row_rounds = max(1.0, st.get("spec_row_rounds", 0.0))
         print(f"[serve] spec: accept_rate {st['accept_rate']:.2f}  "

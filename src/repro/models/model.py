@@ -204,13 +204,16 @@ def init_paged_caches(cfg: ArchConfig, batch: int, max_len: int,
 # --------------------------------------------------------------------------
 
 def _apply_ffn(bp: Dict, cfg: ArchConfig, pos: int, x2d: jax.Array,
-               capacity: int, bank, token_valid=None, n_rows=None):
+               capacity: int, bank, token_valid=None, n_rows=None,
+               row_capacity=None, moe_dispatch=None):
     """x2d: (T, d) → (y, MoEAux | None)."""
     ffn = cfg.ffn_kind(pos)
     if ffn == "moe":
         b = bank[str(pos)] if bank is not None else bp["moe"]["experts"]
         y, aux = X.moe_apply(bp["moe"], b, x2d, cfg.moe, capacity,
-                             token_valid=token_valid, n_rows=n_rows)
+                             token_valid=token_valid, n_rows=n_rows,
+                             row_capacity=row_capacity,
+                             dispatch=moe_dispatch)
         return y, aux
     if "mlp" in bp:
         return M.swiglu(bp["mlp"], x2d), None
@@ -241,7 +244,8 @@ def _block_train(bp: Dict, cfg: ArchConfig, pos: int, kind: str, x: jax.Array,
 def _block_step(bp: Dict, cfg: ArchConfig, pos: int, kind: str, x: jax.Array,
                 cache, pos_idx, capacity: int, bank,
                 cross_kv, prefill: bool, lengths=None, token_valid=None,
-                n_rows=None, paged: Optional[Dict] = None):
+                n_rows=None, paged: Optional[Dict] = None,
+                row_capacity=None, moe_dispatch=None):
     """Shared prefill/decode body. x: (B, S, d) (S=1 for decode).
 
     ``lengths``/``token_valid``/``n_rows`` carry the per-row validity
@@ -251,7 +255,8 @@ def _block_step(bp: Dict, cfg: ArchConfig, pos: int, kind: str, x: jax.Array,
     (gather/scatter against the shared ``PagedKVCache`` pool): a dict with
     ``table`` (B, nb) and either ``write_blk``/``write_off`` (decode) or
     ``start``/``has_prefix`` (prefill). Mamba positions are unaffected —
-    their per-slot state is not paged.
+    their per-slot state is not paged. ``row_capacity``/``moe_dispatch``
+    select the MoE drop rule and token layout (see ``moe.moe_apply``).
     Returns (x, cache, counts) where counts is (E,) or (n_rows, E)."""
     B, Sq, d = x.shape
     h = L.rmsnorm(bp["norm1"], x, cfg.norm_eps)
@@ -289,8 +294,14 @@ def _block_step(bp: Dict, cfg: ArchConfig, pos: int, kind: str, x: jax.Array,
                                                 cfg.d_model, h, cache)
     x = x + attn_out
     h = L.rmsnorm(bp["norm2"], x, cfg.norm_eps)
+    # Per-row capacity needs the row count even when per-row counts were
+    # not requested; the counts selection below still keys on the caller's
+    # ``n_rows`` so the emitted telemetry shape is unchanged.
+    n_rows_ffn = n_rows if n_rows is not None \
+        else (B if row_capacity is not None else None)
     y, aux = _apply_ffn(bp, cfg, pos, h.reshape(B * Sq, d), capacity, bank,
-                        token_valid=token_valid, n_rows=n_rows)
+                        token_valid=token_valid, n_rows=n_rows_ffn,
+                        row_capacity=row_capacity, moe_dispatch=moe_dispatch)
     if aux is None:
         counts = None
     elif n_rows is not None and aux.row_counts is not None:
@@ -372,7 +383,9 @@ def forward_train(params: Dict, cfg: ArchConfig, batch: Dict,
 def prefill(params: Dict, cfg: ArchConfig, batch: Dict, caches: DecodeCaches,
             bank=None, capacity_factor: Optional[float] = None,
             lengths: Optional[jax.Array] = None,
-            per_row_counts: bool = False):
+            per_row_counts: bool = False,
+            row_capacity: Optional[int] = None,
+            moe_dispatch: Optional[str] = None):
     """Full forward writing caches. Returns (last-token logits (B,V),
     caches, counts).
 
@@ -386,6 +399,8 @@ def prefill(params: Dict, cfg: ArchConfig, batch: Dict, caches: DecodeCaches,
 
     ``per_row_counts=True`` returns counts values of shape (nsb, B, E)
     (per-row routing telemetry) instead of the aggregated (nsb, E).
+    ``row_capacity``/``moe_dispatch``: MoE drop rule and token layout
+    (``moe.moe_apply``); ``row_capacity`` requires per-row counts.
     """
     sb = cfg.superblock_or_default()
     x = _embed_inputs(params, cfg, batch)
@@ -425,7 +440,9 @@ def prefill(params: Dict, cfg: ArchConfig, batch: Dict, caches: DecodeCaches,
                                        bank_sliced, cross_sliced,
                                        prefill=True, lengths=lengths,
                                        token_valid=token_valid,
-                                       n_rows=n_rows)
+                                       n_rows=n_rows,
+                                       row_capacity=row_capacity,
+                                       moe_dispatch=moe_dispatch)
             new_caches[str(pos)] = c
             if counts is not None:
                 counts_out[str(pos)] = counts
@@ -448,7 +465,9 @@ def decode_step(params: Dict, cfg: ArchConfig, token: jax.Array,
                 pos_idx: jax.Array, caches: DecodeCaches, bank=None,
                 capacity_factor: float = 2.0,
                 row_valid: Optional[jax.Array] = None,
-                per_row_counts: bool = False):
+                per_row_counts: bool = False,
+                row_capacity: Optional[int] = None,
+                moe_dispatch: Optional[str] = None):
     """One-token decode. token: (B,) int32; pos_idx: scalar int32 position,
     or a (B,) int32 vector of per-sequence positions (continuous batching —
     each KV-cache slot advances at its own request's offset).
@@ -459,7 +478,10 @@ def decode_step(params: Dict, cfg: ArchConfig, token: jax.Array,
     capacity and all router counts, so their replayed tokens cannot
     contaminate hotness or offload accounting. Their logits are garbage and
     must not be read. ``per_row_counts=True`` returns counts values shaped
-    (nsb, B, E) instead of the aggregated (nsb, E)."""
+    (nsb, B, E) instead of the aggregated (nsb, E). ``row_capacity``
+    normalizes MoE drops per row; ``moe_dispatch`` picks the token layout
+    — ``"ragged"`` routes every MoE layer of this step through the
+    padding-free compacted dispatch + fused mixed-precision kernel."""
     sb = cfg.superblock_or_default()
     x = params["embed"][token][:, None, :]  # (B, 1, d)
     B = x.shape[0]
@@ -481,7 +503,9 @@ def decode_step(params: Dict, cfg: ArchConfig, token: jax.Array,
                                        bank_sliced, cross_sliced,
                                        prefill=False,
                                        token_valid=token_valid,
-                                       n_rows=n_rows)
+                                       n_rows=n_rows,
+                                       row_capacity=row_capacity,
+                                       moe_dispatch=moe_dispatch)
             new_caches[str(pos)] = c
             if counts is not None:
                 counts_out[str(pos)] = counts
@@ -503,7 +527,9 @@ def prefill_paged(params: Dict, cfg: ArchConfig, batch: Dict,
                   caches: DecodeCaches, block_table: jax.Array,
                   start: jax.Array, lengths: jax.Array, bank=None,
                   capacity_factor: Optional[float] = None,
-                  per_row_counts: bool = False, has_prefix: bool = False):
+                  per_row_counts: bool = False, has_prefix: bool = False,
+                  row_capacity: Optional[int] = None,
+                  moe_dispatch: Optional[str] = None):
     """Masked prefill of prompt SUFFIXES into the paged KV pool.
 
     ``batch["tokens"]``: (R, S) rows holding tokens ``start[r]`` ..
@@ -548,7 +574,9 @@ def prefill_paged(params: Dict, cfg: ArchConfig, batch: Dict,
                                        bank_sliced, None,
                                        prefill=True, lengths=suffix_lens,
                                        token_valid=token_valid,
-                                       n_rows=n_rows, paged=paged)
+                                       n_rows=n_rows, paged=paged,
+                                       row_capacity=row_capacity,
+                                       moe_dispatch=moe_dispatch)
             new_caches[str(pos)] = c
             if counts is not None:
                 counts_out[str(pos)] = counts
@@ -570,7 +598,9 @@ def decode_step_paged(params: Dict, cfg: ArchConfig, token: jax.Array,
                       write_off: jax.Array, bank=None,
                       capacity_factor: float = 2.0,
                       row_valid: Optional[jax.Array] = None,
-                      per_row_counts: bool = False):
+                      per_row_counts: bool = False,
+                      row_capacity: Optional[int] = None,
+                      moe_dispatch: Optional[str] = None):
     """One-token decode against the paged KV pool: ``decode_step`` with the
     attention cache addressed through per-row block tables. ``write_blk``/
     ``write_off`` ((B,) int32) name each row's pre-resolved physical write
@@ -600,7 +630,9 @@ def decode_step_paged(params: Dict, cfg: ArchConfig, token: jax.Array,
                                        bank_sliced, None,
                                        prefill=False,
                                        token_valid=token_valid,
-                                       n_rows=n_rows, paged=paged)
+                                       n_rows=n_rows, paged=paged,
+                                       row_capacity=row_capacity,
+                                       moe_dispatch=moe_dispatch)
             new_caches[str(pos)] = c
             if counts is not None:
                 counts_out[str(pos)] = counts
@@ -636,7 +668,9 @@ def _mamba_position_keys(cfg: ArchConfig) -> tuple:
 def spec_draft(params: Dict, cfg: ArchConfig, token: jax.Array,
                pos: jax.Array, caches: DecodeCaches, row_valid: jax.Array,
                bank=None, capacity_factor: float = 2.0,
-               paged: Optional[Dict] = None):
+               paged: Optional[Dict] = None,
+               row_capacity: Optional[int] = None,
+               moe_dispatch: Optional[str] = None):
     """Draft ``S = row_valid.shape[0]`` greedy tokens per row by chaining
     decode steps (each step's argmax feeds the next step's embedding).
 
@@ -649,9 +683,12 @@ def spec_draft(params: Dict, cfg: ArchConfig, token: jax.Array,
 
     Passing an all-lo ``bank`` (every ``slot_owner`` = -1) turns the
     always-resident low-precision fallback tier into the draft model — no
-    extra weights exist, the lo tier IS the speculator. Returns
-    ``(drafted (S, B) int32, caches)``; counts are not emitted (draft
-    traffic must never feed hotness)."""
+    extra weights exist, the lo tier IS the speculator; under
+    ``moe_dispatch="ragged"`` each draft step runs the same padding-free
+    fused kernel as the target decode (the slot derivation reads the
+    disowned handles, so every tile streams lo — no separate all-lo GEMM
+    path). Returns ``(drafted (S, B) int32, caches)``; counts are not
+    emitted (draft traffic must never feed hotness)."""
     S = row_valid.shape[0]
 
     def body(carry, xs):
@@ -660,12 +697,14 @@ def spec_draft(params: Dict, cfg: ArchConfig, token: jax.Array,
             j, rv, wb, wo = xs
             logits, c, _ = decode_step_paged(
                 params, cfg, tok, pos + j, c, paged["table"], wb, wo,
-                bank=bank, capacity_factor=capacity_factor, row_valid=rv)
+                bank=bank, capacity_factor=capacity_factor, row_valid=rv,
+                row_capacity=row_capacity, moe_dispatch=moe_dispatch)
         else:
             j, rv = xs
             logits, c, _ = decode_step(
                 params, cfg, tok, pos + j, c, bank=bank,
-                capacity_factor=capacity_factor, row_valid=rv)
+                capacity_factor=capacity_factor, row_valid=rv,
+                row_capacity=row_capacity, moe_dispatch=moe_dispatch)
         nxt = jnp.argmax(logits, -1).astype(jnp.int32)
         return (nxt, c), nxt
 
@@ -679,7 +718,9 @@ def spec_draft(params: Dict, cfg: ArchConfig, token: jax.Array,
 def spec_verify(params: Dict, cfg: ArchConfig, tokens: jax.Array,
                 pos: jax.Array, caches: DecodeCaches, row_valid: jax.Array,
                 bank=None, capacity_factor: float = 2.0,
-                paged: Optional[Dict] = None):
+                paged: Optional[Dict] = None,
+                row_capacity: Optional[int] = None,
+                moe_dispatch: Optional[str] = None):
     """Verify ``S`` positions in one dispatch: chained decode steps over the
     given tokens (row r, step j consumes ``tokens[j, r]`` at position
     ``pos[r] + j``) under the TARGET (mixed-precision) bank.
@@ -702,13 +743,15 @@ def spec_verify(params: Dict, cfg: ArchConfig, tokens: jax.Array,
             logits, c, counts = decode_step_paged(
                 params, cfg, tok, pos + j, c, paged["table"], wb, wo,
                 bank=bank, capacity_factor=capacity_factor, row_valid=rv,
-                per_row_counts=True)
+                per_row_counts=True, row_capacity=row_capacity,
+                moe_dispatch=moe_dispatch)
         else:
             tok, j, rv = xs
             logits, c, counts = decode_step(
                 params, cfg, tok, pos + j, c, bank=bank,
                 capacity_factor=capacity_factor, row_valid=rv,
-                per_row_counts=True)
+                per_row_counts=True, row_capacity=row_capacity,
+                moe_dispatch=moe_dispatch)
         ssm = {p: c.blocks[p] for p in mkeys}
         return c, (logits, counts, ssm)
 

@@ -1,34 +1,58 @@
 """Mixture-of-Experts layer with capacity-based dispatch and a pluggable
 expert bank (dense bf16 for training, DynaExq mixed-precision for serving).
 
-Two execution regimes, one code path:
+Two dispatch layouts, selected per call (``dispatch=``, default from
+``kernels.ops.moe_dispatch_default``):
 
-* Single device (tests, CPU serving, benchmarks): ``moe_apply`` sorts the
-  token→expert assignments, scatters into a fixed-capacity (E, C, d) buffer,
-  runs the batched expert GEMM, and combines with the router gates.
-* Distributed (dry-run / launcher, via ``repro.launch.dist``): the same
-  kernel body runs inside ``shard_map`` — each data shard routes its own
-  tokens, each model shard computes only its local E/n experts
+* **padded** (reference): sort the token→expert assignments, scatter into a
+  fixed-capacity (E, C, d) buffer, run the batched expert GEMM over ALL E
+  experts, combine with the router gates. Simple, shardable, and the
+  bit-parity oracle — but at decode batch sizes most of (E, C) is padding,
+  so every step pays the weight-read bytes of every expert.
+* **ragged** (serving decode hot path): sort + compact into a (Tt·bm, d)
+  buffer whose per-expert segments are aligned to the row tile ``bm``, and
+  hand per-tile expert/slot maps to ONE fused mixed-precision kernel
+  (``kernels.ops.ragged_quant_ffn_op``). Only experts that received tokens
+  this step stream their weights, and each streams its *resident tier only*
+  (hi bf16 slot or packed lo codes dequantized in VMEM) — the bytes/token
+  the lo tier was built to save are actually saved.
+
+Execution regimes:
+
+* Single device (tests, CPU serving, benchmarks): both layouts available.
+* Distributed (dry-run / launcher, via ``repro.launch.dist``): the padded
+  body runs inside ``shard_map`` — each data shard routes its own tokens,
+  each model shard computes only its local E/n experts
   (``e_offset``/``e_local``), and the partial token outputs reduce with a
   single psum over the model axis. This is the formulation GSPMD cannot
   derive on its own (data-dependent sort/scatter) and the reason dispatch is
-  explicit here.
+  explicit here. (Ragged is single-device for now; the sharded mesh keeps
+  the padded body.)
 
 Per-(layer, expert) selection counts — the hotness signal the DynaExq
-scheduler consumes (paper §3.5) — fall out of dispatch for free.
+scheduler consumes (paper §3.5) — fall out of dispatch for free, as do the
+dispatch-efficiency gauges (``MoEAux.active_experts`` /
+``dispatch_pad_ratio``) the serving stats surface.
 """
 from __future__ import annotations
 
+import os
 from typing import Dict, NamedTuple, Optional, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.ver import ExpertBankQ
+from repro.kernels import ops as kops
 from repro.models.config import MoEConfig
 from repro.models.layers import _init
 from repro.models.mlp import init_swiglu, swiglu
 from repro.quant.qtensor import dequantize
+
+#: Row-tile height of the ragged layout: each active expert's token segment
+#: is padded up to a multiple of this (the ONLY padding the ragged path
+#: pays). 8 matches the f32 sublane on TPU and keeps CPU tests cheap.
+RAGGED_BM = int(os.environ.get("REPRO_MOE_RAGGED_BM", "8"))
 
 
 class MoEAux(NamedTuple):
@@ -41,6 +65,12 @@ class MoEAux(NamedTuple):
     # serving engine keep vacant continuous-batching slots and prompt
     # padding out of the hotness signal.
     row_counts: Optional[jax.Array] = None
+    # Dispatch-efficiency telemetry (None on the sharded path): number of
+    # experts that received ≥1 assignment this call, and the fraction of
+    # GEMM rows that were padding — (E·C − kept)/(E·C) for the padded
+    # layout, (Tt·bm − routed)/(Tt·bm) for the ragged layout.
+    active_experts: Optional[jax.Array] = None
+    dispatch_pad_ratio: Optional[jax.Array] = None
 
 
 def init_moe(key, d_model: int, cfg: MoEConfig) -> Dict:
@@ -105,17 +135,13 @@ def route(router_w: jax.Array, x: jax.Array, cfg: MoEConfig):
     return gates, idx, probs
 
 
-def dispatch_compute(bank, x: jax.Array, idx: jax.Array, gates: jax.Array,
-                     e_local: int, capacity: int, e_offset: int = 0,
-                     n_slot_local: Optional[int] = None, slot_lo: int = 0,
-                     ff_axis=None):
-    """Sort-scatter dispatch + batched expert GEMM + gated combine.
-
-    x: (T, d); idx: (T, k) LOCAL expert ids with ``e_local`` as the
-    out-of-range sentinel; gates: (T, k) with zeros on sentinel entries.
-    Returns (y (T, d), counts (e_local,), dropped scalar).
-    """
-    T, d = x.shape
+def _sort_routing(idx: jax.Array, e_local: int):
+    """Shared dispatch prologue — the ONE place the assignment order, the
+    per-expert counts and positions, and therefore the padded↔ragged
+    bit-identity contract are defined. idx: (T, k) local expert ids with
+    ``e_local`` as the out-of-range sentinel. Returns ``(order, sorted_eid,
+    counts (e_local,), pos_in_e, tok)`` over the stable sort-by-expert of
+    the flattened assignments."""
     k = idx.shape[1]
     fidx = idx.reshape(-1)                                   # (T*k,)
     order = jnp.argsort(fidx, stable=True)
@@ -123,16 +149,82 @@ def dispatch_compute(bank, x: jax.Array, idx: jax.Array, gates: jax.Array,
     counts_all = jnp.bincount(fidx, length=e_local + 1)
     counts = counts_all[:e_local]
     starts = jnp.cumsum(counts_all) - counts_all
-    pos_in_e = jnp.arange(T * k, dtype=jnp.int32) - starts[sorted_eid]
+    pos_in_e = jnp.arange(fidx.shape[0], dtype=jnp.int32) - \
+        starts[sorted_eid]
     tok = order // k                                         # source token
+    return order, sorted_eid, counts, pos_in_e, tok
+
+
+def _keep_mask(sorted_eid: jax.Array, pos_in_e: jax.Array, tok: jax.Array,
+               e_local: int, capacity: int, row_capacity: Optional[int],
+               n_rows: Optional[int], n_tokens: int) -> jax.Array:
+    """The ONE drop rule both layouts share: global per-expert capacity, or
+    the per-row normalization when ``row_capacity`` is set."""
+    if row_capacity is None:
+        return (pos_in_e < capacity) & (sorted_eid < e_local)
+    return _row_capacity_keep(sorted_eid, tok, e_local, n_rows, n_tokens,
+                              row_capacity) & (sorted_eid < e_local)
+
+
+def _row_capacity_keep(sorted_eid: jax.Array, tok: jax.Array, e_local: int,
+                       n_rows: int, n_tokens: int,
+                       row_capacity: int) -> jax.Array:
+    """Per-row drop rule: an assignment survives iff its rank among ITS OWN
+    row's assignments to the same expert is < ``row_capacity``. Whether a
+    token's assignment drops then depends only on that row's routing —
+    never on which other rows share the compute batch (the batch-shape
+    independence prefix sharing and spec-verify token-identity need in drop
+    regimes). Assumes ``sorted_eid``/``tok`` come from the stable
+    sort-by-expert (same-(expert, row) entries are contiguous and in token
+    order)."""
+    tpr = n_tokens // n_rows
+    rid = tok // tpr
+    key = jnp.where(sorted_eid < e_local, sorted_eid * n_rows + rid,
+                    e_local * n_rows)
+    cnt = jnp.zeros((e_local * n_rows + 1,), jnp.int32).at[key].add(1)
+    kstart = jnp.cumsum(cnt) - cnt
+    pos_re = jnp.arange(key.shape[0], dtype=jnp.int32) - kstart[key]
+    return pos_re < row_capacity
+
+
+def dispatch_compute(bank, x: jax.Array, idx: jax.Array, gates: jax.Array,
+                     e_local: int, capacity: int, e_offset: int = 0,
+                     n_slot_local: Optional[int] = None, slot_lo: int = 0,
+                     ff_axis=None, row_capacity: Optional[int] = None,
+                     n_rows: Optional[int] = None, gemm: Optional[str] = None):
+    """Padded sort-scatter dispatch + batched expert GEMM + gated combine.
+
+    x: (T, d); idx: (T, k) LOCAL expert ids with ``e_local`` as the
+    out-of-range sentinel; gates: (T, k) with zeros on sentinel entries.
+    ``row_capacity`` (with ``n_rows``) switches the drop rule from the
+    global per-expert capacity to the per-row rule (see
+    ``_row_capacity_keep``); ``capacity`` must then be the physical bound
+    the caller derived (``n_rows · row_capacity`` makes overflow
+    impossible). Returns (y (T, d), counts (e_local,), dropped scalar).
+    """
+    T, d = x.shape
+    order, sorted_eid, counts, pos_in_e, tok = _sort_routing(idx, e_local)
+    valid = _keep_mask(sorted_eid, pos_in_e, tok, e_local, capacity,
+                       row_capacity, n_rows, T)
+    if row_capacity is None:
+        scat_pos = pos_in_e
+    else:
+        # Scatter by rank among KEPT assignments of the expert so the
+        # physical buffer only ever holds survivors.
+        kept_i = valid.astype(jnp.int32)
+        inc = jnp.cumsum(kept_i)
+        kept_e = jnp.zeros((e_local + 1,), jnp.int32) \
+            .at[sorted_eid].add(kept_i)
+        kstart = jnp.cumsum(kept_e) - kept_e
+        scat_pos = jnp.where(valid, inc - 1 - kstart[sorted_eid], capacity)
 
     xg = jnp.zeros((e_local, capacity, d), x.dtype)
-    xg = xg.at[sorted_eid, pos_in_e].set(x[tok], mode="drop")
+    xg = xg.at[sorted_eid, scat_pos].set(x[tok], mode="drop")
 
     if isinstance(bank, ExpertBankQ):
         yg = _quant_expert_ffn(bank, xg, e_offset=e_offset, e_local=e_local,
                                slot_lo=slot_lo, n_slot_local=n_slot_local,
-                               ff_axis=ff_axis)
+                               ff_axis=ff_axis, gemm=gemm)
     else:
         w = bank
         h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xg, w["w_gate"])
@@ -140,8 +232,7 @@ def dispatch_compute(bank, x: jax.Array, idx: jax.Array, gates: jax.Array,
         h = h * jnp.einsum("ecd,edf->ecf", xg, w["w_up"])
         yg = jnp.einsum("ecf,efd->ecd", h, w["w_down"])
 
-    valid = (pos_in_e < capacity) & (sorted_eid < e_local)
-    pos_safe = jnp.minimum(pos_in_e, capacity - 1)
+    pos_safe = jnp.minimum(scat_pos, capacity - 1)
     eid_safe = jnp.minimum(sorted_eid, e_local - 1)
     y_sorted = yg[eid_safe, pos_safe]
     gate_sorted = gates.reshape(-1)[order].astype(x.dtype)
@@ -155,47 +246,24 @@ def dispatch_compute(bank, x: jax.Array, idx: jax.Array, gates: jax.Array,
     return y, counts.astype(jnp.int32), dropped
 
 
-def _qgemm_grouped(xg: jax.Array, packed: jax.Array, scales: jax.Array,
-                   bits: int, group: int) -> jax.Array:
-    """Group-blocked quantized expert GEMM: xg (E, C, K) × int codes (E, K, N)
-    with per-(group, N) scales applied AFTER the per-group partial matmuls —
-    the dequantized (K, N) weight matrix is never materialized. This is the
-    jnp expression of the Pallas fused quant-matmul (kernels/quant_matmul.py)
-    and cuts the decode memory term ~4× vs dequantize-then-einsum."""
-    from repro.quant.qtensor import unpack_codes_int8
-    E_, C, K = xg.shape
-    codes = unpack_codes_int8(packed, bits)          # (E, K, N) int8
-    N = codes.shape[-1]
-    G = K // group
-    # (e, g) merge into ONE batch dim (multi-batch-dim bf16 dots are not
-    # universally supported by backends).
-    xr = xg.reshape(E_, C, G, group).transpose(0, 2, 1, 3) \
-        .reshape(E_ * G, C, group)
-    qr = codes.reshape(E_ * G, group, N).astype(xg.dtype)
-    part = jnp.einsum("bcd,bdn->bcn", xr, qr,
-                      preferred_element_type=jnp.float32)
-    part = part.reshape(E_, G, C, N).transpose(0, 2, 1, 3)   # (E, C, G, N)
-    out = jnp.einsum("ecgn,egn->ecn", part,
-                     scales.astype(jnp.float32),
-                     preferred_element_type=jnp.float32)
-    return out.astype(xg.dtype)
-
-
 def _quant_expert_ffn(bank: ExpertBankQ, xg: jax.Array, e_offset=0,
                       e_local: Optional[int] = None, slot_lo: int = 0,
                       n_slot_local: Optional[int] = None,
-                      ff_axis=None) -> jax.Array:
-    """SwiGLU expert FFN on the lo tier (blocked quantized GEMMs) with the
-    published hi-precision experts overlaid: hi slots compute in bf16 and
-    their outputs replace the lo outputs of the experts they own —
-    numerically identical to swapping the weights, without materializing
-    per-expert dense weights."""
+                      ff_axis=None, gemm: Optional[str] = None) -> jax.Array:
+    """SwiGLU expert FFN on the lo tier (group-blocked quantized GEMMs via
+    the ``kernels.ops.grouped_lo_matmul`` dispatcher — jnp expression or
+    Pallas kernel, one math) with the published hi-precision experts
+    overlaid: hi slots compute in bf16 and their outputs replace the lo
+    outputs of the experts they own — numerically identical to swapping the
+    weights, without materializing per-expert dense weights."""
     E_, C, d = xg.shape
     lo = bank.lo
-    g1 = _qgemm_grouped(xg, lo["w_gate"].packed, lo["w_gate"].scales,
-                        lo["w_gate"].bits, lo["w_gate"].group_size)
-    up = _qgemm_grouped(xg, lo["w_up"].packed, lo["w_up"].scales,
-                        lo["w_up"].bits, lo["w_up"].group_size)
+    g1 = kops.grouped_lo_matmul(xg, lo["w_gate"].packed, lo["w_gate"].scales,
+                                lo["w_gate"].bits, lo["w_gate"].group_size,
+                                backend=gemm)
+    up = kops.grouped_lo_matmul(xg, lo["w_up"].packed, lo["w_up"].scales,
+                                lo["w_up"].bits, lo["w_up"].group_size,
+                                backend=gemm)
     h = (jax.nn.silu(g1.astype(jnp.float32)).astype(xg.dtype) * up)
     if ff_axis is not None:
         # 2-D expert sharding for token-replicated decode (batch-1 long
@@ -203,8 +271,9 @@ def _quant_expert_ffn(bank: ExpertBankQ, xg: jax.Array, e_offset=0,
         # so each rank dequantized/read only F/|data| of every expert. The
         # activations are tiny at decode — gathering h costs ~100 KB.
         h = jax.lax.all_gather(h, ff_axis, axis=2, tiled=True)
-    y = _qgemm_grouped(h, lo["w_down"].packed, lo["w_down"].scales,
-                       lo["w_down"].bits, lo["w_down"].group_size)
+    y = kops.grouped_lo_matmul(h, lo["w_down"].packed, lo["w_down"].scales,
+                               lo["w_down"].bits, lo["w_down"].group_size,
+                               backend=gemm)
 
     owner = bank.slot_owner
     if n_slot_local is not None:
@@ -227,11 +296,106 @@ def _quant_expert_ffn(bank: ExpertBankQ, xg: jax.Array, e_offset=0,
     return y.at[sentinel].set(yh, mode="drop")
 
 
+def ragged_tile_map(counts: jax.Array, bm: int, n_assign: int):
+    """bm-aligned ragged layout over per-expert assignment ``counts``
+    ((E,) int32; ``n_assign`` = static total assignment budget T·k).
+
+    Returns ``(astart (E,), tile_eid (Tt,), n_tiles scalar)``: expert e's
+    segment starts at compact row ``astart[e]``; row tile t computes with
+    expert ``tile_eid[t]``. Experts with zero tokens never appear in the
+    live prefix ``tile_eid[:n_tiles]`` — their weights are never streamed.
+    Σ ceil(c_e/bm) tiles ≤ n_assign//bm + #active, so the static tile
+    budget Tt covers every routing; tail tiles (t ≥ n_tiles) repeat the
+    last active expert — no fresh weight DMA, and their garbage rows are
+    never gathered back."""
+    e_local = counts.shape[0]
+    aligned = ((counts + bm - 1) // bm) * bm
+    astart = jnp.cumsum(aligned) - aligned
+    ntile = aligned // bm
+    cum_t = jnp.cumsum(ntile)
+    n_tiles = cum_t[-1]
+    Tt = n_assign // bm + min(e_local, n_assign) + 1
+    t_range = jnp.arange(Tt, dtype=jnp.int32)
+    tile_eid = jnp.searchsorted(cum_t, t_range, side="right") \
+        .astype(jnp.int32)
+    e_last = jnp.maximum(
+        jnp.max(jnp.where(counts > 0, jnp.arange(e_local), -1)), 0)
+    tile_eid = jnp.clip(jnp.where(t_range < n_tiles, tile_eid, e_last),
+                        0, e_local - 1)
+    return astart, tile_eid, n_tiles
+
+
+def _dispatch_ragged(bank: ExpertBankQ, x: jax.Array, idx: jax.Array,
+                     gates: jax.Array, e_local: int, capacity: int,
+                     row_capacity: Optional[int] = None,
+                     n_rows: Optional[int] = None,
+                     gemm: Optional[str] = None):
+    """Padding-free ragged dispatch + ONE fused mixed-precision kernel.
+
+    Same routing contract as ``dispatch_compute`` (idx sorted stably by
+    expert, identical drop rule, identical gate-weighted combine — the two
+    layouts are bit-identical per token on a given backend), but tokens
+    compact into a (Tt·bm, d) buffer whose per-expert segments are aligned
+    to the row tile ``RAGGED_BM`` instead of scattering into (E, C, d).
+    The tile→expert map visits only experts that received tokens this
+    step; per tile the kernel streams the expert's resident tier only (hi
+    slot derived from ``slot_owner`` — the same stable handles the padded
+    overlay scatters through, so an all-lo draft bank stays all-lo here
+    too). Dropped-by-capacity assignments still occupy compact rows (the
+    layout depends only on routing) but are zeroed at combine, exactly
+    like the padded path never computing them.
+
+    Returns (y (T, D), counts (E,), dropped, pad_ratio)."""
+    T, d = x.shape
+    Tk = T * idx.shape[1]
+    bm = RAGGED_BM
+    order, sorted_eid, counts, pos_in_e, tok = _sort_routing(idx, e_local)
+    kept = _keep_mask(sorted_eid, pos_in_e, tok, e_local, capacity,
+                      row_capacity, n_rows, T)
+    astart, tile_eid, n_tiles = ragged_tile_map(counts, bm, Tk)
+    R = tile_eid.shape[0] * bm
+    safe_e = jnp.minimum(sorted_eid, e_local - 1)
+    rowpos = jnp.where(sorted_eid < e_local,
+                       astart[safe_e] + pos_in_e, R)        # sentinel → drop
+    xs = jnp.zeros((R, d), x.dtype).at[rowpos].set(x[tok], mode="drop")
+
+    # Stable handles: expert → hi slot derived from slot_owner (NOT
+    # slot_map), matching the padded overlay's semantics — a draft bank
+    # that disowns every slot is all-lo under both layouts.
+    owner = bank.slot_owner                                  # (n_hi,)
+    n_hi = owner.shape[0]
+    if n_hi > 0:
+        eff_map = jnp.full((e_local + 1,), -1, jnp.int32).at[
+            jnp.where(owner >= 0, owner, e_local)].set(
+            jnp.arange(n_hi, dtype=jnp.int32), mode="drop")[:e_local]
+        tile_slot = eff_map[tile_eid]
+    else:
+        tile_slot = jnp.full_like(tile_eid, -1)
+
+    y_rows = kops.ragged_quant_ffn_op(
+        xs, tile_eid, tile_slot, bank.lo, bank.hi if n_hi else None,
+        bits=bank.lo["w_gate"].bits, group=bank.lo["w_gate"].group_size,
+        bm=bm, backend=gemm)
+
+    y_asn = y_rows[jnp.minimum(rowpos, R - 1)]
+    gate_sorted = gates.reshape(-1)[order].astype(x.dtype)
+    contrib = jnp.where(kept[:, None], y_asn * gate_sorted[:, None], 0)
+    y = jnp.zeros((T, y_rows.shape[-1]), x.dtype).at[tok].add(contrib)
+
+    routed = jnp.sum(jnp.where(sorted_eid < e_local, 1.0, 0.0))
+    kept_f = jnp.sum(jnp.where(kept, 1.0, 0.0))
+    dropped = 1.0 - kept_f / jnp.maximum(routed, 1.0)
+    pad_ratio = 1.0 - routed / jnp.maximum(n_tiles * bm, 1).astype(jnp.float32)
+    return y, counts.astype(jnp.int32), dropped, pad_ratio
+
+
 def _moe_local(params: Dict, bank, x: jax.Array, cfg: MoEConfig,
                capacity: int, e_offset, e_local: int,
                slot_lo=0, n_slot_local: Optional[int] = None, ff_axis=None,
                token_valid: Optional[jax.Array] = None,
-               n_rows: Optional[int] = None):
+               n_rows: Optional[int] = None,
+               row_capacity: Optional[int] = None,
+               dispatch: Optional[str] = None, gemm: Optional[str] = None):
     """Route + dispatch for one shard (e_offset may be traced).
 
     ``token_valid`` ((T,) bool) drops masked tokens from dispatch entirely:
@@ -239,6 +403,9 @@ def _moe_local(params: Dict, bank, x: jax.Array, cfg: MoEConfig,
     and vanish from every count — the per-row validity signal prefill
     padding and vacant decode slots ride in on. ``n_rows`` additionally
     returns (n_rows, E) counts segment-summed over T/n_rows-token rows.
+    ``row_capacity`` switches the drop rule to the per-row normalization
+    (see ``_row_capacity_keep``); ``dispatch``/``gemm`` select the token
+    layout and GEMM backend (see ``kernels.ops``).
     """
     E, k = cfg.num_experts, cfg.top_k
     T = x.shape[0]
@@ -248,10 +415,33 @@ def _moe_local(params: Dict, bank, x: jax.Array, cfg: MoEConfig,
         sel = sel & token_valid[:, None]
     idx_l = jnp.where(sel, idx - e_offset, e_local)          # sentinel
     gates_l = jnp.where(sel, gates, 0.0)
-    y, counts_l, dropped = dispatch_compute(
-        bank, x, idx_l, gates_l, e_local, capacity,
-        e_offset=e_offset, slot_lo=slot_lo, n_slot_local=n_slot_local,
-        ff_axis=ff_axis)
+    if row_capacity is not None:
+        if n_rows is None:
+            raise ValueError("row_capacity needs n_rows")
+        # Physical capacity covering the per-row rule's worst case (all
+        # surviving assignments on one expert) — overflow-free, so drops
+        # come from the row rule alone.
+        capacity = n_rows * row_capacity
+    # Ragged layout: single-device quantized serving path only — sharded
+    # meshes (traced e_offset / sliced slots / FF-split experts) and the
+    # dense training bank keep the padded reference body.
+    use_ragged = (dispatch == "ragged" and isinstance(bank, ExpertBankQ)
+                  and isinstance(e_offset, int) and e_offset == 0
+                  and n_slot_local is None and ff_axis is None)
+    if use_ragged:
+        y, counts_l, dropped, pad_ratio = _dispatch_ragged(
+            bank, x, idx_l, gates_l, e_local, capacity,
+            row_capacity=row_capacity, n_rows=n_rows, gemm=gemm)
+    else:
+        y, counts_l, dropped = dispatch_compute(
+            bank, x, idx_l, gates_l, e_local, capacity,
+            e_offset=e_offset, slot_lo=slot_lo, n_slot_local=n_slot_local,
+            ff_axis=ff_axis, row_capacity=row_capacity, n_rows=n_rows,
+            gemm=gemm)
+        kept_rows = jnp.sum(jnp.clip(counts_l, 0, capacity))
+        pad_ratio = 1.0 - kept_rows.astype(jnp.float32) / \
+            jnp.float32(max(e_local * capacity, 1))
+    active_experts = jnp.sum((counts_l > 0).astype(jnp.int32))
 
     # Load-balance aux on the full (replicated) router distribution,
     # restricted to valid tokens so padding cannot skew the balance target.
@@ -281,30 +471,41 @@ def _moe_local(params: Dict, bank, x: jax.Array, cfg: MoEConfig,
         row_counts = jnp.zeros((n_rows, E + 1), jnp.int32).at[
             jnp.broadcast_to(rid[:, None], (T, k)), eid].add(1)[:, :E]
     return y, counts_l, full_counts.astype(jnp.int32), aux_loss, dropped, \
-        row_counts
+        row_counts, active_experts, pad_ratio
 
 
 def moe_apply(params: Dict, bank: Union[Dict, ExpertBankQ], x: jax.Array,
               cfg: MoEConfig, capacity: int,
               token_valid: Optional[jax.Array] = None,
-              n_rows: Optional[int] = None) -> tuple[jax.Array, MoEAux]:
+              n_rows: Optional[int] = None,
+              row_capacity: Optional[int] = None,
+              dispatch: Optional[str] = None,
+              gemm: Optional[str] = None) -> tuple[jax.Array, MoEAux]:
     """Single-device path. params: {'router', ['shared']}; x: (T, d).
 
     ``token_valid``/``n_rows``: see ``_moe_local`` — masked tokens are
     excluded from dispatch, capacity and every count; ``n_rows`` requests
-    per-row (R, E) counts in ``MoEAux.row_counts``.
+    per-row (R, E) counts in ``MoEAux.row_counts``. ``row_capacity``
+    normalizes the drop rule per row (batch-shape-independent drops;
+    requires ``n_rows``). ``dispatch`` ∈ {padded, ragged} picks the token
+    layout (None → ``kernels.ops.moe_dispatch_default()``); ``gemm`` ∈
+    {jnp, pallas} the quantized-GEMM backend.
     """
     dist = _get_dist()
     if dist is not None:
         return _moe_apply_sharded(params, bank, x, cfg, capacity, dist,
                                   token_valid=token_valid)
-    y, counts, _full, aux_loss, dropped, row_counts = _moe_local(
-        params, bank, x, cfg, capacity, 0, cfg.num_experts,
-        token_valid=token_valid, n_rows=n_rows)
+    if dispatch is None:
+        dispatch = kops.moe_dispatch_default()
+    y, counts, _full, aux_loss, dropped, row_counts, active, padr = \
+        _moe_local(params, bank, x, cfg, capacity, 0, cfg.num_experts,
+                   token_valid=token_valid, n_rows=n_rows,
+                   row_capacity=row_capacity, dispatch=dispatch, gemm=gemm)
     if "shared" in params:
         y = y + swiglu(params["shared"], x)
     return y, MoEAux(counts=counts, aux_loss=aux_loss, dropped=dropped,
-                     row_counts=row_counts)
+                     row_counts=row_counts, active_experts=active,
+                     dispatch_pad_ratio=padr)
 
 
 def _get_dist():
@@ -343,7 +544,7 @@ def _moe_apply_sharded(params, bank, x, cfg: MoEConfig, capacity, dist,
     E = cfg.num_experts
     if E % mn:
         # Cannot expert-shard — run replicated (noted by the planner).
-        y, counts, _f, aux, dropped, _rc = _moe_local(
+        y, counts, _f, aux, dropped, _rc, _a, _p = _moe_local(
             params, bank, x, cfg, capacity, 0, E, token_valid=token_valid)
         if "shared" in params:
             y = y + swiglu(params["shared"], x)
@@ -415,7 +616,7 @@ def _moe_apply_sharded(params, bank, x, cfg: MoEConfig, capacity, dist,
         j = jax.lax.axis_index(dist.model_axis)
         e_off = j * e_local
         slot_lo = (j * nh_local) if hi_shard else 0
-        y, counts_l, _full, aux, dropped, _rc = _moe_local(
+        y, counts_l, _full, aux, dropped, _rc, _a, _p = _moe_local(
             params_l, rebuild(flat_l), x_l, cfg, cap_local, e_off, e_local,
             slot_lo=slot_lo, n_slot_local=nh_local, ff_axis=ff_axis,
             token_valid=tv_l)

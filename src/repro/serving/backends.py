@@ -53,9 +53,14 @@ GiB = 1 << 30
 #: ``verified_tokens``/``spec_rounds``) are part of the uniform schema so
 #: every benchmark row is machine-comparable whether or not speculation ran;
 #: the engine overwrites them with live values when its SpecDecoder is on.
+#: Likewise the MoE dispatch gauges: ``active_experts`` (mean experts with
+#: ≥1 routed token per layer-step) and ``dispatch_pad_ratio`` (fraction of
+#: expert-GEMM rows that were padding under the configured layout) — the
+#: engine fills them from its per-forward router counts.
 STAT_KEYS = ("ttft_s", "tpot_s", "stall_s", "bytes_moved",
              "promotions", "demotions",
-             "accept_rate", "draft_tokens", "verified_tokens", "spec_rounds")
+             "accept_rate", "draft_tokens", "verified_tokens", "spec_rounds",
+             "active_experts", "dispatch_pad_ratio")
 
 
 def _param_bytes(tree) -> int:

@@ -77,10 +77,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.budget import UNBOUNDED, BudgetTracker
+from repro.kernels import ops as kops
 from repro.models import (attn_logical_capacity, decode_step,
                           decode_step_paged, init_caches, init_paged_caches,
                           prefill, prefill_paged)
 from repro.models.config import ArchConfig
+from repro.models.moe import RAGGED_BM, moe_capacity
 from repro.models.model import DecodeCaches
 from repro.serving.backends import ResidencyBackend
 from repro.serving.kvpool import KVBlockPool, KVLease
@@ -94,40 +96,51 @@ from repro.serving.sampler import RequestSampler
 # so every engine built for the same config shares compilations — a warm-up
 # engine genuinely warms the measured one (benchmarks rely on this).
 
-@functools.partial(jax.jit, static_argnames=("cfg", "capacity_factor"))
+@functools.partial(jax.jit, static_argnames=("cfg", "capacity_factor",
+                                             "moe_dispatch", "row_capacity"))
 def _prefill_jit(params, batch, caches, banks, lengths, *, cfg,
-                 capacity_factor):
+                 capacity_factor, moe_dispatch=None, row_capacity=None):
     return prefill(params, cfg, batch, caches, bank=banks,
                    capacity_factor=capacity_factor, lengths=lengths,
-                   per_row_counts=True)
+                   per_row_counts=True, moe_dispatch=moe_dispatch,
+                   row_capacity=row_capacity)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "capacity_factor"))
+@functools.partial(jax.jit, static_argnames=("cfg", "capacity_factor",
+                                             "moe_dispatch", "row_capacity"))
 def _decode_jit(params, token, pos, caches, banks, row_valid, *, cfg,
-                capacity_factor):
+                capacity_factor, moe_dispatch=None, row_capacity=None):
     return decode_step(params, cfg, token, pos, caches, bank=banks,
                        capacity_factor=capacity_factor, row_valid=row_valid,
-                       per_row_counts=True)
+                       per_row_counts=True, moe_dispatch=moe_dispatch,
+                       row_capacity=row_capacity)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("cfg", "capacity_factor", "has_prefix"),
+                   static_argnames=("cfg", "capacity_factor", "has_prefix",
+                                    "moe_dispatch", "row_capacity"),
                    donate_argnums=(2,))
 def _prefill_paged_jit(params, batch, caches, banks, table, start, lengths,
-                       *, cfg, capacity_factor, has_prefix):
+                       *, cfg, capacity_factor, has_prefix,
+                       moe_dispatch=None, row_capacity=None):
     return prefill_paged(params, cfg, batch, caches, table, start, lengths,
                          bank=banks, capacity_factor=capacity_factor,
-                         per_row_counts=True, has_prefix=has_prefix)
+                         per_row_counts=True, has_prefix=has_prefix,
+                         moe_dispatch=moe_dispatch, row_capacity=row_capacity)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "capacity_factor"),
+@functools.partial(jax.jit, static_argnames=("cfg", "capacity_factor",
+                                             "moe_dispatch", "row_capacity"),
                    donate_argnums=(3,))
 def _decode_paged_jit(params, token, pos, caches, banks, row_valid, table,
-                      write_blk, write_off, *, cfg, capacity_factor):
+                      write_blk, write_off, *, cfg, capacity_factor,
+                      moe_dispatch=None, row_capacity=None):
     return decode_step_paged(params, cfg, token, pos, caches, table,
                              write_blk, write_off, bank=banks,
                              capacity_factor=capacity_factor,
-                             row_valid=row_valid, per_row_counts=True)
+                             row_valid=row_valid, per_row_counts=True,
+                             moe_dispatch=moe_dispatch,
+                             row_capacity=row_capacity)
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
@@ -180,6 +193,20 @@ class EngineConfig:
     # Adapt the per-round draft depth from an acceptance-rate EMA over a
     # power-of-two ladder (False = always draft spec_k).
     spec_adaptive: bool = True
+    # ---- MoE dispatch ------------------------------------------------
+    # Token layout for every MoE layer of the serving forwards: "padded"
+    # (fixed-capacity (E, C, d) scatter, reference), "ragged" (compacted
+    # activations + fused mixed-precision kernel — only active experts'
+    # weights stream), or None → kernels.ops.moe_dispatch_default()
+    # (ragged on TPU, padded on CPU; REPRO_MOE_DISPATCH overrides).
+    # Resolved ONCE at engine construction.
+    moe_dispatch: Optional[str] = None
+    # Per-row MoE capacity normalization: the drop rule under tight
+    # capacity_factor becomes per-request-row (see moe._row_capacity_keep),
+    # so whether a token's assignment drops no longer depends on which
+    # other requests share the compute batch — prefix sharing and
+    # spec-verify token identity then hold even in drop regimes.
+    row_capacity_norm: bool = False
 
 
 class RequestState(enum.Enum):
@@ -299,19 +326,43 @@ class InferenceEngine:
 
         self.banks = backend.materialize_banks(cfg, params, kv_bytes,
                                                budget=self.budget)
+        # MoE dispatch layout + per-row capacity normalization, resolved
+        # ONCE here (env changes after construction cannot disagree with
+        # already-compiled executables). The decode row cap is static; the
+        # prefill cap depends on the length bucket and rides per call.
+        self.moe_dispatch = self.ecfg.moe_dispatch \
+            if self.ecfg.moe_dispatch is not None \
+            else kops.moe_dispatch_default()
+        if self.moe_dispatch not in ("padded", "ragged"):
+            raise ValueError(f"moe_dispatch={self.moe_dispatch!r}; "
+                             f"one of padded|ragged")
+        norm = self.ecfg.row_capacity_norm and cfg.is_moe
+        self._row_cap_decode = moe_capacity(
+            1, cfg.moe, self.ecfg.capacity_factor) if norm else None
+        self._row_cap_norm = norm
         self._jit_prefill = functools.partial(
             _prefill_jit, cfg=cfg,
-            capacity_factor=self.ecfg.capacity_factor)
+            capacity_factor=self.ecfg.capacity_factor,
+            moe_dispatch=self.moe_dispatch)
         self._jit_decode = functools.partial(
             _decode_jit, cfg=cfg,
-            capacity_factor=self.ecfg.capacity_factor)
+            capacity_factor=self.ecfg.capacity_factor,
+            moe_dispatch=self.moe_dispatch,
+            row_capacity=self._row_cap_decode)
         self._jit_prefill_paged = functools.partial(
             _prefill_paged_jit, cfg=cfg,
-            capacity_factor=self.ecfg.capacity_factor)
+            capacity_factor=self.ecfg.capacity_factor,
+            moe_dispatch=self.moe_dispatch)
         self._jit_decode_paged = functools.partial(
             _decode_paged_jit, cfg=cfg,
-            capacity_factor=self.ecfg.capacity_factor)
+            capacity_factor=self.ecfg.capacity_factor,
+            moe_dispatch=self.moe_dispatch,
+            row_capacity=self._row_cap_decode)
         self._jit_scatter = _scatter_rows
+        # Dispatch-efficiency gauges (host mirror of MoEAux telemetry).
+        self._disp_active_sum = 0.0
+        self._disp_pad_sum = 0.0
+        self._disp_layers = 0
 
         if self.pool is not None:
             self.caches = init_paged_caches(cfg, n, self.ecfg.max_len,
@@ -368,6 +419,55 @@ class InferenceEngine:
             self._spec = SpecDecoder(self)
 
     # ------------------------------------------------------------------
+    def _row_cap_prefill(self, bucket: int) -> Optional[int]:
+        """Per-row MoE capacity for a prefill at this length bucket (None
+        when normalization is off). Bucket-derived so it is a static compile
+        constant per bucket and depends only on the request's own length —
+        never on which rows share the batch."""
+        if not self._row_cap_norm:
+            return None
+        return moe_capacity(bucket, self.cfg.moe, self.ecfg.capacity_factor)
+
+    def _note_dispatch(self, counts_np: Dict) -> None:
+        """Host mirror of the MoEAux dispatch telemetry: per-layer active
+        expert counts and the pad ratio of the layout actually configured
+        (padding rows of the (E, C) buffer, or intra-tile slack of the
+        bm-aligned ragged layout) — the uniform ``active_experts`` /
+        ``dispatch_pad_ratio`` gauges in ``stats()``."""
+        if not self.cfg.is_moe or not counts_np:
+            return
+        E = self.cfg.moe.num_experts
+        if self._row_cap_decode is not None:
+            C = self.ecfg.max_slots * self._row_cap_decode
+        else:
+            C = moe_capacity(self.ecfg.max_slots, self.cfg.moe,
+                             self.ecfg.capacity_factor)
+        for v in counts_np.values():
+            v = np.asarray(v)
+            if v.ndim == 4:                       # (W, nsb, B, E) spec steps
+                per = v.sum(axis=2).reshape(-1, E)
+            elif v.ndim == 3:                     # (nsb, B, E) per-row
+                per = v.sum(axis=1).reshape(-1, E)
+            else:                                 # (nsb, E) aggregated
+                per = v.reshape(-1, E)
+            per = per.astype(np.float64)
+            routed = per.sum(axis=1)
+            live = routed > 0
+            if not live.any():
+                continue
+            per = per[live]
+            routed = routed[live]
+            active = (per > 0).sum(axis=1)
+            if self.moe_dispatch == "ragged":
+                tiles = np.ceil(per / RAGGED_BM).sum(axis=1)
+                pad = 1.0 - routed / np.maximum(tiles * RAGGED_BM, 1.0)
+            else:
+                kept = np.minimum(per, C).sum(axis=1)
+                pad = 1.0 - kept / max(E * C, 1)
+            self._disp_active_sum += float(active.sum())
+            self._disp_pad_sum += float(pad.sum())
+            self._disp_layers += int(active.shape[0])
+
     def _block_bytes(self) -> int:
         """Bytes of ONE physical block across every attention layer of the
         stack (k+v, bf16). The pool's block math is the only KV size
@@ -538,7 +638,8 @@ class InferenceEngine:
             t0 = time.perf_counter()
             logits, row_caches, counts = self._jit_prefill(
                 self.params, {"tokens": jnp.asarray(batch_toks)},
-                row_caches, self.banks, jnp.asarray(lengths))
+                row_caches, self.banks, jnp.asarray(lengths),
+                row_capacity=self._row_cap_prefill(bucket))
             logits.block_until_ready()
             dt = time.perf_counter() - t0
             self.prefill_shapes.add((R, bucket))
@@ -665,7 +766,8 @@ class InferenceEngine:
                 self.params, {"tokens": jnp.asarray(batch_toks)},
                 call_caches, self.banks, jnp.asarray(tables),
                 jnp.asarray(starts), jnp.asarray(lengths),
-                has_prefix=has_prefix)
+                has_prefix=has_prefix,
+                row_capacity=self._row_cap_prefill(bucket))
             logits.block_until_ready()
             dt = time.perf_counter() - t0
             self.prefill_shapes.add((R, bucket))
@@ -844,6 +946,7 @@ class InferenceEngine:
         self.last_row_counts = counts_np
         self.last_counts = {k: v.sum(axis=1) if v.ndim == 3 else v
                             for k, v in counts_np.items()}
+        self._note_dispatch(counts_np)
         stall = self.backend.observe(counts_np, dt, prefill=False,
                                      row_valid=row_valid)
         self._stall_clock += stall
@@ -1017,6 +1120,10 @@ class InferenceEngine:
             out["tpot_s"] = self._tpot_sum / self._tpot_tokens
         out.update({k: float(v) for k, v in self.counters.items()})
         out["prefill_compiles"] = float(len(self.prefill_shapes))
+        if self._disp_layers:
+            out["active_experts"] = self._disp_active_sum / self._disp_layers
+            out["dispatch_pad_ratio"] = self._disp_pad_sum / \
+                self._disp_layers
         if self._spec is not None:
             out.update(self._spec.stats())
         if self.pool is not None:

@@ -72,36 +72,46 @@ from repro.serving.sampler import (STREAM_ACCEPT, STREAM_BONUS,
 # ``self.caches`` still points at them until the round commits), and a
 # donated buffer dies even while referenced.
 
-@functools.partial(jax.jit, static_argnames=("cfg", "capacity_factor"))
+@functools.partial(jax.jit, static_argnames=("cfg", "capacity_factor",
+                                             "moe_dispatch", "row_capacity"))
 def _draft_jit(params, token, pos, caches, banks, row_valid, *, cfg,
-               capacity_factor):
+               capacity_factor, moe_dispatch=None, row_capacity=None):
     return spec_draft(params, cfg, token, pos, caches, row_valid, bank=banks,
-                      capacity_factor=capacity_factor)
+                      capacity_factor=capacity_factor,
+                      moe_dispatch=moe_dispatch, row_capacity=row_capacity)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "capacity_factor"))
+@functools.partial(jax.jit, static_argnames=("cfg", "capacity_factor",
+                                             "moe_dispatch", "row_capacity"))
 def _draft_paged_jit(params, token, pos, caches, banks, row_valid, table,
-                     wblk, woff, *, cfg, capacity_factor):
+                     wblk, woff, *, cfg, capacity_factor,
+                     moe_dispatch=None, row_capacity=None):
     return spec_draft(params, cfg, token, pos, caches, row_valid, bank=banks,
                       capacity_factor=capacity_factor,
                       paged={"table": table, "write_blk": wblk,
-                             "write_off": woff})
+                             "write_off": woff},
+                      moe_dispatch=moe_dispatch, row_capacity=row_capacity)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "capacity_factor"))
+@functools.partial(jax.jit, static_argnames=("cfg", "capacity_factor",
+                                             "moe_dispatch", "row_capacity"))
 def _verify_jit(params, tokens, pos, caches, banks, row_valid, *, cfg,
-                capacity_factor):
+                capacity_factor, moe_dispatch=None, row_capacity=None):
     return spec_verify(params, cfg, tokens, pos, caches, row_valid,
-                       bank=banks, capacity_factor=capacity_factor)
+                       bank=banks, capacity_factor=capacity_factor,
+                       moe_dispatch=moe_dispatch, row_capacity=row_capacity)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "capacity_factor"))
+@functools.partial(jax.jit, static_argnames=("cfg", "capacity_factor",
+                                             "moe_dispatch", "row_capacity"))
 def _verify_paged_jit(params, tokens, pos, caches, banks, row_valid, table,
-                      wblk, woff, *, cfg, capacity_factor):
+                      wblk, woff, *, cfg, capacity_factor,
+                      moe_dispatch=None, row_capacity=None):
     return spec_verify(params, cfg, tokens, pos, caches, row_valid,
                        bank=banks, capacity_factor=capacity_factor,
                        paged={"table": table, "write_blk": wblk,
-                              "write_off": woff})
+                              "write_off": woff},
+                       moe_dispatch=moe_dispatch, row_capacity=row_capacity)
 
 
 # ---- cache-slot snapshot / restore ---------------------------------------
@@ -388,19 +398,26 @@ class SpecDecoder:
         ssm_snap = {p: eng.caches.blocks[p] for p in eng._mamba_pos}
 
         # ---- draft: k chained greedy steps, all-lo banks, one dispatch --
+        # The draft rides the SAME dispatch layout as the target decode:
+        # under "ragged" every draft step streams only active experts' lo
+        # codes through the fused kernel — no separate all-lo GEMM path.
         dbanks = all_lo_banks(eng.banks, self._neg_owner_cache)
         cf = eng.ecfg.capacity_factor
+        md = eng.moe_dispatch
+        rc = eng._row_cap_decode
         if eng.pool is not None:
             drafted_dev, caches = _draft_paged_jit(
                 eng.params, jnp.asarray(eng.tokens), jnp.asarray(pos0),
                 eng.caches, dbanks, jnp.asarray(step_valid[1:]),
                 jnp.asarray(table), jnp.asarray(wblk[:k]),
-                jnp.asarray(woff[:k]), cfg=eng.cfg, capacity_factor=cf)
+                jnp.asarray(woff[:k]), cfg=eng.cfg, capacity_factor=cf,
+                moe_dispatch=md, row_capacity=rc)
         else:
             drafted_dev, caches = _draft_jit(
                 eng.params, jnp.asarray(eng.tokens), jnp.asarray(pos0),
                 eng.caches, dbanks, jnp.asarray(step_valid[1:]),
-                cfg=eng.cfg, capacity_factor=cf)
+                cfg=eng.cfg, capacity_factor=cf,
+                moe_dispatch=md, row_capacity=rc)
         drafted = np.asarray(drafted_dev)          # (k, B)
 
         # ---- rewind the draft's side effects before verify --------------
@@ -427,12 +444,12 @@ class SpecDecoder:
                 eng.params, jnp.asarray(vtoks), jnp.asarray(pos0), caches,
                 eng.banks, jnp.asarray(step_valid), jnp.asarray(table),
                 jnp.asarray(wblk), jnp.asarray(woff), cfg=eng.cfg,
-                capacity_factor=cf)
+                capacity_factor=cf, moe_dispatch=md, row_capacity=rc)
         else:
             logits_dev, caches, counts_dev, ssm_stack = _verify_jit(
                 eng.params, jnp.asarray(vtoks), jnp.asarray(pos0), caches,
                 eng.banks, jnp.asarray(step_valid), cfg=eng.cfg,
-                capacity_factor=cf)
+                capacity_factor=cf, moe_dispatch=md, row_capacity=rc)
         logits_dev.block_until_ready()
         dt = time.perf_counter() - t0
         # Greedy fast path: only the (W, B) device-side argmax crosses to
@@ -467,6 +484,7 @@ class SpecDecoder:
 
         # ---- hotness: verify-pass counts of ACCEPTED steps only ---------
         counts_np = {kk: np.asarray(v) for kk, v in counts_dev.items()}
+        eng._note_dispatch(counts_np)          # per-verify-step gauges
         accept_mask = row_valid[None, :] & \
             (np.arange(W)[:, None] <= accepts[None, :])        # (W, B)
         obs: Dict[str, np.ndarray] = {}

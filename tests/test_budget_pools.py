@@ -42,6 +42,19 @@ def test_slot_pool_constant_time_semantics():
     assert s2 == s[1] and p.owner(s2) == 42
 
 
+def test_slot_pool_allocates_lowest_index_first():
+    """Occupied hi slots stay packed toward the low end of the pool (the
+    contiguous prefix the ragged kernel's BlockSpec indexing wants)."""
+    p = SlotPool(4)
+    s = [p.alloc(e) for e in (10, 11, 12, 13)]
+    assert s == [0, 1, 2, 3]
+    p.free(2)
+    p.free(0)
+    assert p.alloc(20) == 0            # lowest free slot, not LIFO
+    assert p.alloc(21) == 2
+    assert p.slots_of() == {0: 20, 1: 11, 2: 21, 3: 13}
+
+
 def test_plan_budget_derives_n_hi():
     # 10 GB device, 2 GB fixed, 1 GB lo tier, hi expert = 50 MB, 16 layers.
     plan = plan_budget(m_total=10 << 30, m_fixed=2 << 30,

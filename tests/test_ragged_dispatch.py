@@ -1,0 +1,352 @@
+"""Ragged vs padded MoE dispatch: bit-parity at temperature 0 across every
+stack kind (full-attention / sliding-window / mamba / jamba; paged + dense
+KV), adversarial routing, masked vacant rows, mid-stream residency flips,
+spec-decode drafts through the same ragged kernel, per-row capacity
+normalization, and the dispatch telemetry gauges.
+
+All engine-level tests run the jnp GEMM backend (the CPU default) so
+"ragged vs padded" isolates the LAYOUT — the backends are bit-identical by
+the dispatcher parity tests in test_ragged_kernels.py. One end-to-end test
+pushes a decode step through the Pallas kernels in interpret mode.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import ControllerConfig
+from repro.core.ver import build_bank, publish, unpublish
+from repro.models import decode_step, init_caches, init_params
+from repro.models.config import MoEConfig
+from repro.models.moe import init_moe, moe_apply, moe_capacity
+from repro.serving import (EngineConfig, InferenceEngine, Request,
+                           make_backend, make_prompts)
+
+ARCHS = {}
+
+
+def _setup_arch(arch):
+    """Reduced config + params. ``granite-moe-1b-a400m+sw`` is the granite
+    MoE stack with a sliding-window ring cache — no stock arch combines
+    sliding-window attention with MoE FFNs outside jamba's mixed stack, and
+    the ring-slot layout is exactly what the ragged layout must not care
+    about."""
+    if arch not in ARCHS:
+        base = arch.split("+")[0]
+        cfg = get_config(base, reduced=True)
+        if arch.endswith("+sw"):
+            cfg = dataclasses.replace(
+                cfg, attn=dataclasses.replace(cfg.attn, sliding_window=32))
+        ARCHS[arch] = (cfg, init_params(jax.random.PRNGKey(0), cfg))
+    cfg, params = ARCHS[arch]
+    return cfg, jax.tree_util.tree_map(lambda x: x, params)
+
+
+# ---------------------------------------------------------------------------
+# moe_apply level: layouts agree bit for bit
+# ---------------------------------------------------------------------------
+
+def _moe_setup(E=8, d=128, f=256, T=24, k=2, n_hi=2, seed=0, published=()):
+    cfg = MoEConfig(num_experts=E, top_k=k, d_ff_expert=f,
+                    norm_topk_prob=True)
+    params = init_moe(jax.random.PRNGKey(seed), d, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (T, d), jnp.bfloat16)
+    w = {n: a[None] for n, a in params["experts"].items()}
+    bank = build_bank(w, n_hi=n_hi, lo_bits=4)
+    for slot, e in enumerate(published):
+        bank.slot_map = bank.slot_map.at[0, e].set(slot)
+        bank.slot_owner = bank.slot_owner.at[0, slot].set(e)
+        for n in bank.hi:
+            bank.hi[n] = bank.hi[n].at[0, slot].set(w[n][0, e])
+    return cfg, params, x, jax.tree_util.tree_map(lambda a: a[0], bank)
+
+
+def _both(params, bank, x, cfg, cap, **kw):
+    yp, ap = moe_apply(params, bank, x, cfg, cap, dispatch="padded", **kw)
+    yr, ar = moe_apply(params, bank, x, cfg, cap, dispatch="ragged", **kw)
+    return yp, yr, ap, ar
+
+
+def test_ragged_matches_padded_bitwise_mixed_precision():
+    cfg, params, x, bank = _moe_setup(published=(1, 5))
+    cap = moe_capacity(x.shape[0], cfg, 8.0)
+    yp, yr, ap, ar = _both(params, bank, x, cfg, cap)
+    np.testing.assert_array_equal(np.asarray(yp), np.asarray(yr))
+    np.testing.assert_array_equal(np.asarray(ap.counts),
+                                  np.asarray(ar.counts))
+    assert float(ap.dropped) == float(ar.dropped) == 0.0
+
+
+def test_ragged_matches_padded_under_capacity_drops():
+    cfg, params, x, bank = _moe_setup(T=64)
+    yp, yr, ap, ar = _both(params, bank, x, cfg, 4)
+    np.testing.assert_array_equal(np.asarray(yp), np.asarray(yr))
+    assert float(ap.dropped) == float(ar.dropped) > 0.0
+
+
+def test_ragged_adversarial_all_tokens_one_expert():
+    """Max-imbalance routing: every token's top-1 lands on one expert —
+    the layout degenerates to a single dense segment and still matches."""
+    cfg, params, x, bank = _moe_setup(k=1)
+    # All-zero router ⇒ uniform probs ⇒ top-1 deterministically picks
+    # expert 0 for EVERY token.
+    params["router"] = jnp.zeros_like(params["router"])
+    cap = moe_capacity(x.shape[0], cfg, 8.0)
+    yp, yr, _, ar = _both(params, bank, x, cfg, cap)
+    np.testing.assert_array_equal(np.asarray(yp), np.asarray(yr))
+    assert int(ar.active_experts) == 1
+
+
+def test_ragged_masked_vacant_rows():
+    """token_valid-masked rows (vacant continuous-batching slots) vanish
+    from dispatch under both layouts; real rows stay bit-identical."""
+    cfg, params, x, bank = _moe_setup(published=(2,))
+    cap = moe_capacity(x.shape[0], cfg, 8.0)
+    tv = jnp.arange(x.shape[0]) % 3 != 1
+    yp, yr, ap, ar = _both(params, bank, x, cfg, cap, token_valid=tv,
+                           n_rows=x.shape[0])
+    mask = np.asarray(tv)
+    np.testing.assert_array_equal(np.asarray(yp)[mask], np.asarray(yr)[mask])
+    np.testing.assert_array_equal(np.asarray(ap.row_counts),
+                                  np.asarray(ar.row_counts))
+    assert np.asarray(ar.row_counts)[~mask].sum() == 0
+
+
+def test_ragged_follows_promotion_demotion_flips():
+    """Mid-stream residency changes: publish/unpublish between calls; the
+    ragged slot derivation (via slot_owner, the stable handles) tracks
+    every flip bit-identically with the padded overlay."""
+    cfg, params, x, bank = _moe_setup(n_hi=2)
+    cap = moe_capacity(x.shape[0], cfg, 8.0)
+    w = {n: a[None] for n, a in params["experts"].items()}
+
+    def check():
+        yp, yr, _, _ = _both(params, bank, x, cfg, cap)
+        np.testing.assert_array_equal(np.asarray(yp), np.asarray(yr))
+        return np.asarray(yp)
+
+    y0 = check()
+    # promote expert 4 → slot 0 (write weights first, then publish)
+    for n in bank.hi:
+        bank.hi[n] = bank.hi[n].at[0].set(w[n][0, 4])
+    sm, so = publish(bank.slot_map[None], bank.slot_owner[None],
+                     jnp.int32(0), jnp.int32(4), jnp.int32(0))
+    bank.slot_map, bank.slot_owner = sm[0], so[0]
+    y1 = check()
+    assert not np.array_equal(y0, y1)          # hi weights genuinely used
+    # demote it again (unpublish: handle → lo, slot freed)
+    sm, so = unpublish(bank.slot_map[None], bank.slot_owner[None],
+                       jnp.int32(0), jnp.int32(4))
+    bank.slot_map, bank.slot_owner = sm[0], so[0]
+    y2 = check()
+    np.testing.assert_array_equal(y0, y2)      # flip is fully reversible
+
+
+def test_all_lo_draft_bank_is_all_lo_under_ragged():
+    """The spec-draft derivation (slot_owner := −1 everywhere, slot_map
+    untouched) must read as all-lo under the ragged slot derivation too —
+    the property that lets drafts reuse the same kernel with zero extra
+    weights."""
+    cfg, params, x, bank = _moe_setup(published=(1, 5))
+    cap = moe_capacity(x.shape[0], cfg, 8.0)
+    draft = dataclasses.replace(
+        bank, slot_owner=jnp.full_like(bank.slot_owner, -1))
+    nohi = dataclasses.replace(
+        draft, slot_map=jnp.full_like(bank.slot_map, -1))
+    y_draft, _ = moe_apply(params, draft, x, cfg, cap, dispatch="ragged")
+    y_nohi, _ = moe_apply(params, nohi, x, cfg, cap, dispatch="ragged")
+    np.testing.assert_array_equal(np.asarray(y_draft), np.asarray(y_nohi))
+
+
+def test_moe_aux_dispatch_telemetry():
+    cfg, params, x, bank = _moe_setup()
+    cap = moe_capacity(x.shape[0], cfg, 8.0)
+    _, _, ap, ar = _both(params, bank, x, cfg, cap)
+    n_act = int((np.asarray(ar.counts) > 0).sum())
+    assert int(ap.active_experts) == int(ar.active_experts) == n_act
+    # padded pads (E·C − kept) rows; ragged only intra-tile slack — with
+    # ample capacity the ragged ratio is strictly smaller.
+    assert 0.0 <= float(ar.dispatch_pad_ratio) < float(
+        ap.dispatch_pad_ratio) <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# Per-row capacity normalization
+# ---------------------------------------------------------------------------
+
+def test_row_capacity_makes_decode_drops_batch_shape_independent():
+    """Tight capacity at a crowded decode batch drops assignments the solo
+    run would keep (the ROADMAP caveat). With ``row_capacity`` the kept set
+    depends only on each row's own routing — row 0 computes bit-identically
+    solo and crowded — under BOTH layouts."""
+    cfg, params, x, bank = _moe_setup(E=4, T=32, k=2)
+    # Teeth: under the GLOBAL capacity rule drops hit high-rank
+    # assignments, i.e. late rows of a crowded batch — the last row
+    # computes differently crowded vs solo.
+    tight = 4
+    y_crowd, aux = moe_apply(params, bank, x, cfg, tight, dispatch="padded")
+    y_solo, _ = moe_apply(params, bank, x[-1:], cfg,
+                          moe_capacity(1, cfg, 2.0), dispatch="padded")
+    assert float(aux.dropped) > 0.0
+    assert not np.array_equal(np.asarray(y_solo[0]), np.asarray(y_crowd[-1]))
+
+    rc = moe_capacity(1, cfg, 2.0)
+    for dispatch in ("padded", "ragged"):
+        ys, _ = moe_apply(params, bank, x[-1:], cfg, 0, n_rows=1,
+                          row_capacity=rc, dispatch=dispatch)
+        yc, _ = moe_apply(params, bank, x, cfg, 0, n_rows=32,
+                          row_capacity=rc, dispatch=dispatch)
+        np.testing.assert_array_equal(np.asarray(ys[0]), np.asarray(yc[-1]))
+
+
+def test_row_capacity_drop_rule_is_per_row():
+    """A row routing more than row_capacity tokens to one expert drops the
+    excess; other rows' identical routing is untouched."""
+    cfg, params, x, bank = _moe_setup(E=4, T=16, k=2)
+    _, aux = moe_apply(params, bank, x, cfg, 0, n_rows=4, row_capacity=1,
+                       dispatch="padded")
+    # 4 tokens/row × top-2 = 8 assignments over ≤4 experts per row ⇒ at
+    # least half must drop under row_capacity=1... exactly: kept ≤ 4/row.
+    assert float(aux.dropped) > 0.0
+    _, aux2 = moe_apply(params, bank, x, cfg, 0, n_rows=4, row_capacity=8,
+                        dispatch="padded")
+    assert float(aux2.dropped) == 0.0
+
+
+def test_row_capacity_engine_solo_vs_crowded_token_identity():
+    cfg, params = _setup_arch("granite-moe-1b-a400m")
+    prompt = make_prompts("text", cfg.vocab_size, 1, 24, seed=3)[0]
+    fillers = [make_prompts("text", cfg.vocab_size, 1, 24, seed=50 + i)[0]
+               for i in range(3)]
+
+    def run(crowd):
+        _, p = _setup_arch("granite-moe-1b-a400m")
+        eng = InferenceEngine(
+            cfg, p, make_backend("static", lo_bits=4),
+            EngineConfig(max_slots=4, max_len=96, capacity_factor=1.0,
+                         paged=True, row_capacity_norm=True))
+        h = eng.submit(Request(tokens=prompt, max_new_tokens=8))
+        if crowd:
+            for f in fillers:
+                eng.submit(Request(tokens=f, max_new_tokens=8))
+        eng.drain()
+        return h.tokens
+
+    assert run(False) == run(True)
+
+
+# ---------------------------------------------------------------------------
+# Engine level: token identity across every stack kind, paged + dense
+# ---------------------------------------------------------------------------
+
+def _serve(cfg, eng, lengths=(24, 17, 21), new=8, seed=7):
+    handles = [eng.submit(Request(
+        tokens=make_prompts("text", cfg.vocab_size, 1, L, seed=seed + s)[0],
+        max_new_tokens=new))
+        for s, L in enumerate(lengths)]
+    eng.drain()
+    return [h.tokens for h in handles]
+
+
+def _tokens(arch, dispatch, paged, spec_k=0, backend=None, **ecfg_kw):
+    cfg, params = _setup_arch(arch)
+    be = make_backend("static", lo_bits=4) if backend is None else backend()
+    eng = InferenceEngine(
+        cfg, params, be,
+        EngineConfig(max_slots=2, max_len=96, capacity_factor=8.0,
+                     paged=paged, spec_k=spec_k, moe_dispatch=dispatch,
+                     **ecfg_kw))
+    toks = _serve(cfg, eng)
+    return toks, eng
+
+
+@pytest.mark.parametrize("arch,paged", [
+    ("granite-moe-1b-a400m", True),      # full attention, paged pool
+    ("granite-moe-1b-a400m", False),     # full attention, dense rows
+    ("granite-moe-1b-a400m+sw", True),   # sliding-window ring, paged
+    ("granite-moe-1b-a400m+sw", False),  # sliding-window ring, dense
+    ("jamba-v0_1-52b", True),            # mamba + sliding attn, paged
+    ("jamba-v0_1-52b", False),           # mamba + sliding attn, dense
+])
+def test_engine_token_identity_ragged_vs_padded(arch, paged):
+    tp, _ = _tokens(arch, "padded", paged)
+    tr, eng = _tokens(arch, "ragged", paged)
+    assert tp == tr
+    st = eng.stats()
+    assert st["active_experts"] > 0
+    assert 0.0 <= st["dispatch_pad_ratio"] <= 1.0
+
+
+def test_engine_token_identity_mixed_precision_target():
+    """Frozen warmed DynaExq bank (hi tier genuinely populated): ragged
+    selects hi/lo per tile in-kernel and still matches padded exactly."""
+    def backend():
+        return make_backend("dynaexq", lo_bits=4, n_hi_per_layer=2,
+                            controller=ControllerConfig(
+                                update_interval_s=0.0))
+
+    def build(dispatch):
+        cfg, params = _setup_arch("granite-moe-1b-a400m")
+        eng = InferenceEngine(
+            cfg, params, backend(),
+            EngineConfig(max_slots=2, max_len=96, capacity_factor=8.0,
+                         paged=True, moe_dispatch=dispatch))
+        warm = make_prompts("text", cfg.vocab_size, 2, 16, seed=99)
+        eng.generate({"tokens": warm}, 4)
+        eng.backend.force_update()
+        eng.backend.flush()
+        for ctl in eng.backend.controllers.values():
+            ctl.cfg = dataclasses.replace(ctl.cfg, update_interval_s=1e9)
+        assert any((np.asarray(b.slot_owner) >= 0).any()
+                   for b in eng.banks.values())    # hi tier genuinely hot
+        return cfg, eng
+
+    cfg, ep = build("padded")
+    tp = _serve(cfg, ep, lengths=(20, 13))
+    cfg, er = build("ragged")
+    tr = _serve(cfg, er, lengths=(20, 13))
+    assert tp == tr
+
+
+@pytest.mark.parametrize("arch,paged", [
+    ("granite-moe-1b-a400m", True),
+    ("granite-moe-1b-a400m+sw", False),
+    ("jamba-v0_1-52b", True),
+])
+def test_spec_decode_draft_rides_ragged_kernel(arch, paged):
+    """Speculative rounds (all-lo drafts + mixed verify) under the ragged
+    layout: token-identical to the padded spec engine AND to the
+    non-speculative engine — the draft path routes through the same ragged
+    kernel, no separate all-lo GEMM."""
+    t_plain, _ = _tokens(arch, "ragged", paged, spec_k=0)
+    t_spec_p, _ = _tokens(arch, "padded", paged, spec_k=4)
+    t_spec_r, eng = _tokens(arch, "ragged", paged, spec_k=4)
+    assert t_spec_r == t_spec_p == t_plain
+    assert eng.stats()["spec_rounds"] > 0
+
+
+def test_engine_decode_through_pallas_interpret(monkeypatch):
+    """One decode step end to end with the ragged Pallas kernels in
+    interpret mode (CI pins this: the kernel code path, not the jnp
+    fallback, under a real stack). Un-jitted direct call so the env switch
+    is read at trace time."""
+    monkeypatch.setenv("REPRO_MOE_GEMM", "pallas")
+    cfg, params = _setup_arch("granite-moe-1b-a400m")
+    sb = cfg.superblock_or_default()
+    banks = {}
+    for pos in range(len(sb)):
+        if cfg.ffn_kind(pos) == "moe":
+            experts = params["blocks"][str(pos)]["moe"]["experts"]
+            banks[str(pos)] = build_bank(experts, n_hi=1, lo_bits=4)
+    caches = init_caches(cfg, 2, 32)
+    tok = jnp.asarray([3, 5], jnp.int32)
+    logits_p, _, _ = decode_step(params, cfg, tok, jnp.int32(0), caches,
+                                 bank=banks, moe_dispatch="ragged")
+    monkeypatch.setenv("REPRO_MOE_GEMM", "jnp")
+    logits_j, _, _ = decode_step(params, cfg, tok, jnp.int32(0), caches,
+                                 bank=banks, moe_dispatch="ragged")
+    np.testing.assert_allclose(np.asarray(logits_p), np.asarray(logits_j),
+                               rtol=2e-2, atol=2e-1)

@@ -1,0 +1,147 @@
+"""Ragged mixed-precision FFN kernel + grouped-GEMM dispatcher parity.
+
+These tests run the Pallas kernels in interpret mode on CPU — the kernel
+code paths themselves, not just the jnp fallback (CI pins a dedicated step
+on this file). Parity contracts:
+
+* ``ops.grouped_lo_matmul``: the jnp and Pallas backends are the SAME
+  group-blocked decomposition (per-group partial dot, scales after) —
+  asserted bit-identical.
+* ``ops.ragged_quant_ffn_op``: jnp oracle vs Pallas kernel agree to within
+  float tolerance (the fused kernel keeps f32 accumulators across K tiles
+  where the batched-einsum oracle rounds per call — a ≤1-ulp bf16
+  difference in reduction order is expected and accepted).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops as kops
+from repro.kernels import ref
+from repro.quant import quantize
+
+
+def _mats(E=4, K=128, F=256, D=128, bits=4, seed=0):
+    lo, dense = {}, {}
+    for i, (name, kk, nn) in enumerate([("w_gate", K, F), ("w_up", K, F),
+                                        ("w_down", F, D)]):
+        w = jax.random.normal(jax.random.PRNGKey(seed + i), (E, kk, nn),
+                              jnp.float32) * kk ** -0.5
+        dense[name] = w
+        lo[name] = quantize(w, bits=bits, group_size=64)
+    return lo, dense
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("b,c,k,n", [(4, 16, 128, 256), (2, 8, 256, 128)])
+def test_grouped_lo_matmul_backend_bit_parity(bits, b, c, k, n):
+    """The satellite contract: one dispatcher, two re-expressions of the
+    same math, bit-identical results."""
+    xg = jax.random.normal(jax.random.PRNGKey(b + bits), (b, c, k),
+                           jnp.bfloat16)
+    w = jax.random.normal(jax.random.PRNGKey(1), (b, k, n), jnp.float32)
+    qt = quantize(w, bits=bits, group_size=64)
+    y_jnp = kops.grouped_lo_matmul(xg, qt.packed, qt.scales, bits, 64,
+                                   backend="jnp")
+    y_pl = kops.grouped_lo_matmul(xg, qt.packed, qt.scales, bits, 64,
+                                  backend="pallas")
+    np.testing.assert_array_equal(np.asarray(y_jnp), np.asarray(y_pl))
+
+
+def test_grouped_lo_matmul_matches_dequant_reference():
+    """Both dispatcher backends stay allclose to the dequantize-then-dot
+    oracle (the duplicated dequant math the dispatcher replaced)."""
+    xg = jax.random.normal(jax.random.PRNGKey(0), (3, 16, 256), jnp.bfloat16)
+    w = jax.random.normal(jax.random.PRNGKey(1), (3, 256, 128), jnp.float32)
+    qt = quantize(w, bits=4, group_size=64)
+    want = ref.grouped_quant_matmul_ref(xg, qt.packed, qt.scales, 4, 64)
+    for be in ("jnp", "pallas"):
+        got = kops.grouped_lo_matmul(xg, qt.packed, qt.scales, 4, 64,
+                                     backend=be)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   rtol=4e-2, atol=4e-1)
+
+
+@pytest.mark.parametrize("bits", [2, 4])
+def test_ragged_ffn_pallas_matches_oracle_mixed_precision(bits):
+    """Fused gate∥up+SiLU·mul / down kernels vs the jnp oracle, with a mix
+    of hi and lo tiles (incl. tiles of the SAME expert id appearing twice)."""
+    lo, dense = _mats(bits=bits)
+    n_hi = 2
+    hi = {n: jnp.asarray(dense[n][:n_hi], jnp.bfloat16) for n in dense}
+    bm = 8
+    tile_eid = jnp.asarray([0, 0, 2, 1, 3, 3], jnp.int32)
+    tile_slot = jnp.asarray([0, 0, -1, 1, -1, -1], jnp.int32)  # e0,e1 hi
+    xs = jax.random.normal(jax.random.PRNGKey(9),
+                           (tile_eid.shape[0] * bm, 128), jnp.bfloat16)
+    y_j = kops.ragged_quant_ffn_op(xs, tile_eid, tile_slot, lo, hi,
+                                   bits=bits, group=64, bm=bm, backend="jnp")
+    y_p = kops.ragged_quant_ffn_op(xs, tile_eid, tile_slot, lo, hi,
+                                   bits=bits, group=64, bm=bm,
+                                   backend="pallas")
+    np.testing.assert_allclose(np.asarray(y_j, np.float32),
+                               np.asarray(y_p, np.float32),
+                               rtol=2e-2, atol=2e-1)
+
+
+def test_ragged_ffn_no_hi_variant():
+    """n_hi == 0 compiles the kernel WITHOUT hi operands (the all-lo bank:
+    static-PTQ backend / speculative draft tier) and still matches."""
+    lo, _ = _mats()
+    bm = 8
+    tile_eid = jnp.asarray([1, 2, 2, 0], jnp.int32)
+    neg = jnp.full((4,), -1, jnp.int32)
+    xs = jax.random.normal(jax.random.PRNGKey(3), (4 * bm, 128), jnp.bfloat16)
+    y_j = kops.ragged_quant_ffn_op(xs, tile_eid, neg, lo, None,
+                                   bits=4, group=64, bm=bm, backend="jnp")
+    y_p = kops.ragged_quant_ffn_op(xs, tile_eid, neg, lo, None,
+                                   bits=4, group=64, bm=bm, backend="pallas")
+    np.testing.assert_allclose(np.asarray(y_j, np.float32),
+                               np.asarray(y_p, np.float32),
+                               rtol=2e-2, atol=2e-1)
+
+
+def test_ragged_ffn_matches_dense_expert_math():
+    """End math check against plain dense SwiGLU with the dequantized
+    weights (loose: int4 quantization error dominates)."""
+    lo, dense = _mats()
+    bm = 8
+    tile_eid = jnp.asarray([2, 1], jnp.int32)
+    neg = jnp.full((2,), -1, jnp.int32)
+    xs = jax.random.normal(jax.random.PRNGKey(5), (2 * bm, 128), jnp.bfloat16)
+    y = kops.ragged_quant_ffn_op(xs, tile_eid, neg, lo, None,
+                                 bits=4, group=64, bm=bm, backend="pallas")
+    for t, e in enumerate([2, 1]):
+        xt = xs[t * bm:(t + 1) * bm].astype(jnp.float32)
+        g = xt @ dense["w_gate"][e]
+        u = xt @ dense["w_up"][e]
+        want = (jax.nn.silu(g) * u) @ dense["w_down"][e]
+        np.testing.assert_allclose(
+            np.asarray(y[t * bm:(t + 1) * bm], np.float32),
+            np.asarray(want), rtol=0.3, atol=0.4)
+
+
+def test_hold_last_forward_fill():
+    v = jnp.asarray([-1, -1, 3, -1, 5, -1, -1], jnp.int32)
+    out = np.asarray(kops._hold_last(v))
+    np.testing.assert_array_equal(out, [0, 0, 3, 3, 5, 5, 5])
+
+
+def test_ragged_tile_map_skips_inactive_experts():
+    """Zero-token experts never appear in the live tile prefix — the grid
+    property that keeps their weights out of HBM traffic."""
+    from repro.models.moe import ragged_tile_map
+    counts = jnp.asarray([0, 9, 0, 1, 16, 0, 0, 3], jnp.int32)
+    astart, tile_eid, n_tiles = ragged_tile_map(counts, 8, 32)
+    live = np.asarray(tile_eid)[:int(n_tiles)]
+    assert sorted(set(live.tolist())) == [1, 3, 4, 7]
+    # per-expert tile multiplicity = ceil(count/bm)
+    assert (live == 1).sum() == 2 and (live == 4).sum() == 2
+    assert (live == 3).sum() == 1 and (live == 7).sum() == 1
+    # tail tiles hold the last active expert (repeat ⇒ no fresh DMA)
+    assert set(np.asarray(tile_eid)[int(n_tiles):].tolist()) == {7}
+    # segments are bm-aligned and disjoint
+    np.testing.assert_array_equal(np.asarray(astart)[[1, 3, 4, 7]],
+                                  [0, 16, 24, 40])
