@@ -30,7 +30,8 @@ def main() -> None:
 
     from benchmarks import (activation_ratio, demotion_curve, kernels_bench,
                             kv_reuse, prompt_scaling, quality, serving_perf,
-                            serving_sim, spec_decode, workload_shift)
+                            serving_sim, slo_serving, spec_decode,
+                            workload_shift)
     suites = [
         ("activation_ratio", activation_ratio.run),
         ("workload_shift", workload_shift.run),
@@ -38,6 +39,7 @@ def main() -> None:
         ("quality", quality.run),
         ("serving_sim", serving_sim.run),
         ("serving_perf", serving_perf.run),
+        ("slo_serving", slo_serving.run),
         ("kv_reuse", kv_reuse.run),
         ("spec_decode", spec_decode.run),
         ("prompt_scaling", prompt_scaling.run),

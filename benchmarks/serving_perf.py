@@ -163,6 +163,16 @@ def run(report):
               f"{int(st['admitted'])} admissions")
 
     os.makedirs(os.path.dirname(JSON_OUT), exist_ok=True)
+    # Read-modify-write: the file is shared with slo_serving (its "slo" key)
+    # — clobbering it would silently drop the sibling suite's artifact.
+    merged = {}
+    if os.path.exists(JSON_OUT):
+        try:
+            with open(JSON_OUT) as f:
+                merged = json.load(f)
+        except Exception:
+            merged = {}
+    merged.update(results)
     with open(JSON_OUT, "w") as f:
-        json.dump(results, f, indent=2, sort_keys=True)
+        json.dump(merged, f, indent=2, sort_keys=True)
     print(f"# wrote {os.path.normpath(JSON_OUT)}")

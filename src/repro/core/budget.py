@@ -53,6 +53,14 @@ class BudgetTracker:
     def free(self) -> int:
         return self.cap - self._used
 
+    def headroom_frac(self) -> float:
+        """Fraction of the envelope still free, as a load signal (the QoS
+        scheduler's shed policy keys on it). An unbounded tracker always
+        reports full headroom — no envelope, no byte pressure."""
+        if self.cap >= UNBOUNDED:
+            return 1.0
+        return self.free / max(1, self.cap)
+
     def used_by(self, account: str) -> int:
         return self._accounts.get(account, 0)
 

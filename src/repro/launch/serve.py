@@ -17,7 +17,7 @@ from repro.core import ControllerConfig
 from repro.models import init_params
 from repro.serving import (BACKENDS, EngineConfig, InferenceEngine,
                            OffloadConfig, Request, SamplingParams,
-                           make_backend, make_prompts)
+                           SchedulerConfig, make_backend, make_prompts)
 
 
 def build_backend(args):
@@ -85,6 +85,21 @@ def main():
     ap.add_argument("--seed", type=int, default=0,
                     help="per-request sampling seed base (request b uses "
                          "seed+b)")
+    ap.add_argument("--qos-default", default="standard",
+                    choices=["batch", "standard", "premium"],
+                    help="QoS class for requests that carry none (batch "
+                         "decodes on the all-lo banks, premium keeps the "
+                         "hi tier + speculative bursts)")
+    ap.add_argument("--shed-policy", default="none",
+                    choices=["none", "downgrade", "reject"],
+                    help="overload response: downgrade batch/standard "
+                         "execution to the lo tier, or also reject "
+                         "batch-tier submissions outright")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="split prompts longer than this many tokens into "
+                         "chunked prefills interleaved with decode "
+                         "(0 = single-shot; rounded down to a "
+                         "block-aligned prefill bucket)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=not args.full)
@@ -103,7 +118,11 @@ def main():
                      else int(args.hbm_budget_gb * (1 << 30)),
                      spec_k=spec_k,
                      moe_dispatch=args.moe_dispatch,
-                     row_capacity_norm=args.row_capacity))
+                     row_capacity_norm=args.row_capacity,
+                     scheduler=SchedulerConfig(
+                         qos_default=args.qos_default,
+                         shed_policy=args.shed_policy,
+                         prefill_chunk=args.prefill_chunk)))
     toks = make_prompts(args.workload, cfg.vocab_size,
                         args.batch, args.prompt_len)
     use_sampling = (args.temperature > 0 or args.top_k is not None or

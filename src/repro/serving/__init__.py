@@ -10,15 +10,19 @@ from repro.serving.requests import (Request, RequestStream, WORKLOADS,
                                     make_prompts, mixed_stream)
 from repro.serving.sampler import (GREEDY, RequestSampler, SamplingParams,
                                    counter_uniform, sampling_probs)
+from repro.serving.scheduler import (QOS_CLASSES, Scheduler, SchedulerConfig,
+                                     SlotSnapshot, TieredQueue, WORKLOAD_QOS,
+                                     resolve_qos)
 from repro.serving.spec import SpecDecoder, accept_burst, all_lo_banks
 
 __all__ = [
     "BACKENDS", "DynaExqBackend", "EngineConfig", "Fp16Backend", "GREEDY",
     "InferenceEngine", "KVBlockPool", "KVLease", "LRUSet", "OffloadBackend",
-    "OffloadConfig", "PrefixTrie", "Request", "RequestHandle",
+    "OffloadConfig", "PrefixTrie", "QOS_CLASSES", "Request", "RequestHandle",
     "RequestSampler", "RequestState", "RequestStream", "ResidencyBackend",
-    "STAT_KEYS", "SamplingParams", "SpecDecoder", "StaticPTQBackend",
-    "TRASH_BLOCK", "WORKLOADS", "accept_burst", "all_lo_banks",
-    "counter_uniform", "make_backend", "make_prompts", "mixed_stream",
-    "sampling_probs",
+    "STAT_KEYS", "SamplingParams", "Scheduler", "SchedulerConfig",
+    "SlotSnapshot", "SpecDecoder", "StaticPTQBackend", "TRASH_BLOCK",
+    "TieredQueue", "WORKLOADS", "WORKLOAD_QOS", "accept_burst",
+    "all_lo_banks", "counter_uniform", "make_backend", "make_prompts",
+    "mixed_stream", "resolve_qos", "sampling_probs",
 ]

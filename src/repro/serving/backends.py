@@ -57,10 +57,14 @@ GiB = 1 << 30
 #: ≥1 routed token per layer-step) and ``dispatch_pad_ratio`` (fraction of
 #: expert-GEMM rows that were padding under the configured layout) — the
 #: engine fills them from its per-forward router counts.
+#: The QoS-scheduler meters (``preemptions``/``resumes``/``shed_requests``/
+#: ``downgraded``) join the schema the same way: zeros from every backend,
+#: overwritten by the engine's live scheduler counters.
 STAT_KEYS = ("ttft_s", "tpot_s", "stall_s", "bytes_moved",
              "promotions", "demotions",
              "accept_rate", "draft_tokens", "verified_tokens", "spec_rounds",
-             "active_experts", "dispatch_pad_ratio")
+             "active_experts", "dispatch_pad_ratio",
+             "preemptions", "resumes", "shed_requests", "downgraded")
 
 
 def _param_bytes(tree) -> int:

@@ -89,6 +89,10 @@ from repro.serving.kvpool import KVBlockPool, KVLease
 from repro.serving.prefix import PrefixTrie
 from repro.serving.requests import Request
 from repro.serving.sampler import RequestSampler
+from repro.serving.spec import (_gather_paged_lanes, _restore_paged_lanes,
+                                all_lo_banks)
+from repro.serving.scheduler import (Scheduler, SchedulerConfig,
+                                     SlotSnapshot, TieredQueue)
 
 
 # Module-level jitted entry points with the (frozen, hashable) ArchConfig as
@@ -153,6 +157,23 @@ def _scatter_rows(pool, rows, slots):
         lambda m, o: m.at[:, slots].set(o[:, :n]), pool, rows)
 
 
+@jax.jit
+def _merge_rows(new_sub, old_sub, mask):
+    """Row-masked cache merge for tier-split dispatch: keep the freshly
+    computed state only for rows in ``mask`` ((B,) bool); every other row
+    keeps its pre-dispatch state. Needed for RECURRENT (mamba) leaves —
+    a decode forward advances SSM state for masked rows too, so when one
+    engine step dispatches several QoS groups, each group's forward must
+    not clobber the live state of rows belonging to the others. (Attention
+    caches need no merge: a masked row's garbage write lands at that row's
+    next-write position, which its own group overwrites before any read.)
+    Leaves are (nsb, B, ...)."""
+    def one(nv, ov):
+        m = mask.reshape((1, -1) + (1,) * (nv.ndim - 2))
+        return jnp.where(m, nv, ov)
+    return jax.tree_util.tree_map(one, new_sub, old_sub)
+
+
 @functools.partial(jax.jit, donate_argnums=(0,))
 def _copy_blocks(pools, src, dst):
     """Batched physical block copies (COW resolution): block ``src[i]`` →
@@ -207,12 +228,20 @@ class EngineConfig:
     # other requests share the compute batch — prefix sharing and
     # spec-verify token identity then hold even in drop regimes.
     row_capacity_norm: bool = False
+    # ---- SLO-tiered QoS scheduling -----------------------------------
+    # Policy knobs for the tiered scheduler (queue aging, shed policy,
+    # preemption, chunked prefill). None → SchedulerConfig() defaults,
+    # which reproduce the untiered engine exactly for default-class
+    # traffic. See repro.serving.scheduler.
+    scheduler: Optional[SchedulerConfig] = None
 
 
 class RequestState(enum.Enum):
     QUEUED = "queued"
+    PREFILLING = "prefilling"     # chunked prefill in flight (owns a slot)
     RUNNING = "running"
     FINISHED = "finished"
+    SHED = "shed"                 # refused by the load-shedding policy
 
 
 class RequestHandle:
@@ -234,10 +263,19 @@ class RequestHandle:
         # other requests share the batch — bit-reproducibility survives
         # adaptive speculation.
         self.spec_ema = 0.75
-        self.submit_s: float = 0.0       # perf_counter at submit
+        self.submit_s: float = 0.0       # engine clock at submit
         self.stall_at_submit: float = 0.0  # engine stall-clock at submit
         self.ttft_s: float = 0.0         # submit → first token (incl. queue)
+        self.first_token_s: float = 0.0  # engine clock at first token
+        self.finish_s: float = 0.0       # engine clock at finish
         self.step_times: List[float] = []
+        # ---- QoS (repro.serving.scheduler) ---------------------------
+        self.qos: str = "standard"       # resolved SLO class
+        self.exec_qos: str = "standard"  # execution tier (after downgrades)
+        self.enqueue_s: float = 0.0      # queue-aging reference time
+        self.preempts = 0                # times this request was evicted
+        self._snapshot = None            # SlotSnapshot while evicted
+        self._chunk_pos = 0              # prompt tokens prefilled so far
         self.lease: Optional[KVLease] = None   # paged-mode KV block lease
         self.prefix_hit_tokens: int = 0  # prompt tokens served from the trie
         # Per-request routing telemetry: MoE position → (nsb, E) int64
@@ -372,7 +410,16 @@ class InferenceEngine:
         self.slots: List[Optional[RequestHandle]] = [None] * n
         self.pos = np.zeros(n, np.int32)        # next write position per slot
         self.tokens = np.full(n, self.ecfg.pad_token_id, np.int32)
-        self.queue: deque[RequestHandle] = deque()
+        # ---- SLO-tiered scheduling ----------------------------------
+        # The scheduler is pure policy; the admission queue is the tiered
+        # weighted-aging queue (deque-compatible — FIFO for uniform-class
+        # traffic, so the defaults reproduce the untiered engine exactly).
+        self.sched = Scheduler(self.ecfg.scheduler)
+        self._clock: Optional[float] = None     # virtual clock (replay)
+        self.queue: TieredQueue = TieredQueue(self._now,
+                                              self.sched.cfg.aging_s)
+        self._lo_owner_cache: Dict = {}         # all-lo bank derivation memo
+        self._tpot_ema = 0.0                    # per-token latency EMA
         self.last_counts: Dict = {}             # (nsb, E) counts, last forward
         self.last_row_counts: Dict = {}         # (nsb, R, E), last forward
         self.decode_times: List[float] = []     # per-step latency incl. stall
@@ -389,7 +436,10 @@ class InferenceEngine:
         self._ids = itertools.count()
         self.counters = {"steps": 0, "prefills": 0, "admitted": 0,
                          "finished": 0, "prefill_tokens": 0,
-                         "prefix_hit_tokens": 0, "kv_cow_copies": 0}
+                         "prefix_hit_tokens": 0, "kv_cow_copies": 0,
+                         "preemptions": 0, "resumes": 0,
+                         "shed_requests": 0, "downgraded": 0,
+                         "chunk_prefills": 0}
         # ---- length-bucket ladder -----------------------------------
         # SSD prefill requires sequence length divisible by the chunk size,
         # so for stacks with mamba layers every bucket is a chunk multiple.
@@ -412,11 +462,37 @@ class InferenceEngine:
         self._prefill_rows = self.ecfg.prefill_rows \
             if self.ecfg.prefill_rows is not None else min(4, n)
         self.prefill_shapes: set = set()        # (rows, bucket) traced
+        # ---- chunked prefill ----------------------------------------
+        # Effective chunk size: the largest block-aligned ladder bucket
+        # not above the knob, so every chunk prefill hits a bucket shape
+        # the normal admission path already compiles (compile count stays
+        # O(#buckets)). Chunking needs the paged suffix-prefill path and
+        # restartable sequence state: attention-only stacks (SSD prefill
+        # takes no initial state, so mamba rows must prefill in one shot),
+        # and sliding-window prompts only while they fit the window.
+        self._chunk_tokens = 0
+        pc = self.sched.cfg.prefill_chunk
+        if pc > 0 and self.pool is not None and not self._mamba_pos:
+            fits = [b for b in self.buckets
+                    if b <= pc and b % self._bt == 0]
+            if fits:
+                self._chunk_tokens = fits[-1]
         # ---- self-speculative decoding ------------------------------
         self._spec = None
         if self.ecfg.spec_k > 0:
             from repro.serving.spec import SpecDecoder
             self._spec = SpecDecoder(self)
+
+    # ------------------------------------------------------------------
+    def _now(self) -> float:
+        """The engine's accounting clock. Wall time normally; the replay
+        loop installs a VIRTUAL clock for ``realtime=False`` runs so every
+        queue-time metric (submit_s, ttft_s, finish_s, queue aging,
+        deadlines) is computed by the same code against deterministic
+        timestamps — virtual-clock runs report the same submit-inclusive
+        accounting realtime ones do, machine speed be damned. Compute
+        latencies (decode dt, stalls) always use perf_counter."""
+        return time.perf_counter() if self._clock is None else self._clock
 
     # ------------------------------------------------------------------
     def _row_cap_prefill(self, bucket: int) -> Optional[int]:
@@ -509,7 +585,18 @@ class InferenceEngine:
         down to the engine's sequence multiple). A generation budget that
         overruns the slot is fine — common for eos-bounded requests — the
         request is truncated at the sequence capacity (finishes with fewer
-        than ``max_new_tokens`` tokens)."""
+        than ``max_new_tokens`` tokens).
+
+        QoS: the request's class (or the scheduler default) is resolved and
+        validated here — unknown classes and non-positive deadlines fail
+        loudly. Under an active shed policy an overloaded engine may return
+        the handle in state ``SHED`` (batch tier, ``reject`` policy) or
+        downgrade its execution tier to the all-lo banks — premium is never
+        touched."""
+        qos = self.sched.resolve(request.qos)
+        if request.deadline_ms is not None and request.deadline_ms <= 0:
+            raise ValueError(
+                f"deadline_ms={request.deadline_ms} must be > 0 (or None)")
         plen = int(np.asarray(request.tokens).shape[-1])
         if plen > self._max_prompt:
             raise ValueError(
@@ -532,8 +619,18 @@ class InferenceEngine:
                     f"HBM envelope caps at {self.budget.cap}; raise "
                     f"hbm_budget_bytes or shorten the request")
         handle = RequestHandle(next(self._ids), request)
-        handle.submit_s = time.perf_counter()
+        handle.qos = handle.exec_qos = qos
+        handle.submit_s = self._now()
+        handle.enqueue_s = handle.submit_s
         handle.stall_at_submit = self._stall_clock
+        action = self.sched.admit_action(qos, self.load_snapshot())
+        if action == "shed":
+            handle.state = RequestState.SHED
+            self.counters["shed_requests"] += 1
+            return handle
+        if action == "downgrade" and handle.exec_qos != "batch":
+            handle.exec_qos = "batch"
+            self.counters["downgraded"] += 1
         self.queue.append(handle)
         return handle
 
@@ -585,6 +682,54 @@ class InferenceEngine:
             cows.append((cow, phys))
         return phys, s % self._bt
 
+    def _write_span_blocks(self, start: int, end: int) -> List[int]:
+        """Logical blocks whose ring slots the position span
+        ``[start, end)`` writes (ring wrap included). O(#blocks), not
+        O(#tokens): the written ring-slot span is contiguous mod C_pad."""
+        if end - start >= self._C_pad:
+            return list(range(self._nb_per_slot))
+        s0 = start % self._C_pad
+        s1 = (end - 1) % self._C_pad
+        if s0 <= s1:
+            return list(range(s0 // self._bt, s1 // self._bt + 1))
+        return sorted(set(range(0, s1 // self._bt + 1)) |
+                      set(range(s0 // self._bt, self._nb_per_slot)))
+
+    # -- load signals (shedding / benchmark telemetry) ------------------
+    def load_snapshot(self) -> Dict[str, float]:
+        """The uniform load signals the shed policy keys on: queue depth,
+        the decode TPOT EMA, the estimated queue wait they imply (queued
+        decode tokens at the measured per-token latency, spread over the
+        slots), and the shared HBM envelope's headroom fraction."""
+        queued_tokens = sum(
+            h.request.max_new_tokens +
+            max(0, self._prompt_len(h) - h._chunk_pos)
+            for h in self.queue)
+        est_wait = (queued_tokens * self._tpot_ema /
+                    max(1, self.ecfg.max_slots))
+        return {"queue_depth": float(len(self.queue)),
+                "tpot_ema_s": float(self._tpot_ema),
+                "est_wait_s": float(est_wait),
+                "budget_headroom_frac": float(self.budget.headroom_frac())}
+
+    def _shed_expired(self) -> None:
+        """Drop queued batch-tier work whose deadline already passed —
+        serving it late burns decode steps premium traffic is waiting on.
+        Only the batch tier is dropped; standard/premium deadlines are
+        reported (SLO attainment) but never enforced by discard."""
+        if not self.sched.cfg.drop_expired_batch or not self.queue:
+            return
+        now = self._now()
+
+        def expired(h):
+            d = h.request.deadline_ms
+            return (h.qos == "batch" and d is not None and
+                    (now - h.submit_s) * 1e3 > d)
+
+        for h in self.queue.prune(expired):
+            h.state = RequestState.SHED
+            self.counters["shed_requests"] += 1
+
     # ------------------------------------------------------------------
     def _admit(self, finished: List[RequestHandle]) -> None:
         """Fill free slots from the queue with batched, length-bucketed
@@ -612,6 +757,13 @@ class InferenceEngine:
             free = [i for i, h in enumerate(self.slots) if h is None]
             if not free:
                 return
+            head_peek = self.queue.peek()
+            if head_peek is not None and head_peek._snapshot is not None:
+                # Preempted request at the queue head: resume is a direct
+                # cache-row upload, not a prefill.
+                self.queue.popleft()
+                self._resume_dense(head_peek, free[0])
+                continue
             R = self._prefill_rows
             limit = min(len(free), R)
             head = self.queue.popleft()
@@ -620,7 +772,8 @@ class InferenceEngine:
             skipped: List[RequestHandle] = []
             while self.queue and len(group) < limit:
                 h = self.queue.popleft()
-                if self._bucket_len(self._prompt_len(h)) == bucket:
+                if h._snapshot is None and \
+                        self._bucket_len(self._prompt_len(h)) == bucket:
                     group.append(h)
                 else:
                     skipped.append(h)
@@ -654,11 +807,40 @@ class InferenceEngine:
                                logits,
                                [int(x) for x in lengths[:G]], finished)
 
+    def _chunk_eligible(self, handle: RequestHandle) -> bool:
+        """Chunked prefill applies to prompts longer than the chunk size on
+        stacks where suffix prefill can restart mid-prompt (see the chunk
+        resolution in ``__init__``); sliding-window prompts only while the
+        whole prompt fits the attention window (a mid-prompt ring wrap
+        would change which positions a later chunk may overwrite)."""
+        if not self._chunk_tokens:
+            return False
+        plen = self._prompt_len(handle)
+        if plen <= self._chunk_tokens:
+            return False
+        return (self.cfg.attn.sliding_window is None or
+                plen <= self._C_attn)
+
     def _admit_paged(self, finished: List[RequestHandle]) -> None:
         while self.queue:
             free = [i for i, h in enumerate(self.slots) if h is None]
             if not free:
                 return
+            head_peek = self.queue.peek()
+            if head_peek is not None and head_peek._snapshot is not None:
+                self.queue.popleft()
+                if not self._resume_paged(head_peek, free[0]):
+                    # Blocked on quota/headroom — back to the head; a
+                    # finishing request or expert demotion unblocks it.
+                    self.queue.appendleft(head_peek)
+                    return
+                continue
+            if head_peek is not None and self._chunk_eligible(head_peek):
+                self.queue.popleft()
+                if not self._begin_chunked(head_peek, free[0]):
+                    self.queue.appendleft(head_peek)
+                    return
+                continue
             R = self._prefill_rows
             limit = min(len(free), R)
             group: List[Tuple[RequestHandle, KVLease, int]] = []
@@ -666,6 +848,12 @@ class InferenceEngine:
             bucket = None
             while self.queue and len(group) < limit:
                 h = self.queue.popleft()
+                if h._snapshot is not None or self._chunk_eligible(h):
+                    # Resumes and chunked admissions only happen from the
+                    # head position — requeue and let a later iteration
+                    # (or step) take them.
+                    skipped.append(h)
+                    continue
                 plen = self._prompt_len(h)
                 toks = np.asarray(h.request.tokens, np.int32).reshape(-1)
                 hits: List[int] = []
@@ -734,21 +922,7 @@ class InferenceEngine:
                 batch_toks[r, :plen - start] = toks[start:]
                 # Resolve every block the suffix will write (ring wrap
                 # included): fresh allocation or COW of shared blocks.
-                # O(#blocks), not O(#tokens): the written ring-slot span is
-                # contiguous modulo C_pad.
-                if plen - start >= self._C_pad:
-                    write_blocks = range(self._nb_per_slot)
-                else:
-                    s0 = start % self._C_pad
-                    s1 = (plen - 1) % self._C_pad
-                    if s0 <= s1:
-                        write_blocks = range(s0 // self._bt,
-                                             s1 // self._bt + 1)
-                    else:                    # wrapped once past the ring end
-                        write_blocks = sorted(
-                            set(range(0, s1 // self._bt + 1)) |
-                            set(range(s0 // self._bt, self._nb_per_slot)))
-                for j in write_blocks:
+                for j in self._write_span_blocks(start, plen):
                     phys, cow = lease.ensure(j)
                     if cow >= 0:
                         cows.append((cow, phys))
@@ -830,13 +1004,15 @@ class InferenceEngine:
             tok = int(amax[r]) if r not in samp else \
                 handle.sampler.next_token(samp[r], 0)
             handle.tokens.append(tok)
-            # Serving TTFT: submit → first token. Wall clock covers
-            # queue wait and the prefills admitted ahead of it; the
-            # stall-clock delta charges every MODELED stall since submit
-            # (predecessors' demand misses and this forward's own) that
-            # wall time never slept. The backend's own ttft_s tracks
-            # per-prefill latency.
-            handle.ttft_s = (time.perf_counter() - handle.submit_s +
+            # Serving TTFT: submit → first token. The engine clock covers
+            # queue wait and the prefills admitted ahead of it (virtual
+            # under replay(realtime=False) — same accounting, deterministic
+            # timestamps); the stall-clock delta charges every MODELED
+            # stall since submit (predecessors' demand misses and this
+            # forward's own) that wall time never slept. The backend's own
+            # ttft_s tracks per-prefill latency.
+            handle.first_token_s = self._now()
+            handle.ttft_s = (handle.first_token_s - handle.submit_s +
                              self._stall_clock - handle.stall_at_submit)
             self.ttfts.append(handle.ttft_s)
             handle.state = RequestState.RUNNING
@@ -887,6 +1063,7 @@ class InferenceEngine:
     def _finish(self, handle: RequestHandle,
                 finished: List[RequestHandle]) -> None:
         handle.state = RequestState.FINISHED
+        handle.finish_s = self._now()
         self.slots[handle.slot] = None
         if handle.lease is not None:
             # Release block refs + unspent quota; trie-registered blocks
@@ -900,25 +1077,415 @@ class InferenceEngine:
         finished.append(handle)
 
     # ------------------------------------------------------------------
+    # Preemption: evict-and-resume under budget pressure. Preempting a
+    # request snapshots its sequence state HOST-side and genuinely frees
+    # its HBM (the KVLease closes, blocks and quota return to the shared
+    # envelope); resume re-admits through the normal admission path,
+    # adopting prefix-trie hits where the preempted blocks survived and
+    # re-uploading only the lanes that did not. Bit-exactness needs no
+    # recompute anywhere: the cache-position invariant (cached tokens =
+    # seq[:pos], next input = tokens[-1]) plus counter-keyed per-request
+    # sampling make the resumed continuation identical to an
+    # uninterrupted run.
+    # ------------------------------------------------------------------
+    def preempt(self, handle: RequestHandle) -> None:
+        """Evict a RUNNING request and re-queue it at the front of its QoS
+        tier (original queue age preserved — it keeps climbing)."""
+        if handle.state is not RequestState.RUNNING:
+            raise ValueError(
+                f"preempt of a {handle.state.value} request (only RUNNING "
+                f"requests hold evictable slot state)")
+        slot = handle.slot
+        pos = int(self.pos[slot])
+        span_start = max(0, pos - self._C_attn) if self._attn_pos else 0
+        snap = SlotSnapshot(pos=pos, span_start=span_start)
+        if self._attn_pos:
+            if self.pool is not None:
+                # Valid lanes only: [pos - C_attn, pos) covers everything
+                # attention can still read; ring slots in that span are
+                # distinct (span <= C_attn <= C_pad), so each position maps
+                # to exactly one (block, offset) lane. Lane count pads to a
+                # power of two (trash lanes) to bound gather compiles.
+                span = np.arange(span_start, pos, dtype=np.int64)
+                s = span % self._C_pad
+                blk = np.asarray(
+                    [int(handle.lease.table[int(x) // self._bt])
+                     for x in s], np.int32)
+                off = (s % self._bt).astype(np.int32)
+                P = 1 << max(0, int(span.size) - 1).bit_length()
+                blk_p = np.zeros(P, np.int32)
+                off_p = np.zeros(P, np.int32)
+                blk_p[:span.size], off_p[:span.size] = blk, off
+                attn_now = {p: self.caches.blocks[p]
+                            for p in self._attn_pos}
+                lanes = _gather_paged_lanes(attn_now,
+                                            jnp.asarray(blk_p[None]),
+                                            jnp.asarray(off_p[None]))
+                snap.attn_lanes = jax.tree_util.tree_map(
+                    lambda v: np.asarray(v)[:, :span.size], lanes)
+            else:
+                snap.attn_rows = jax.tree_util.tree_map(
+                    lambda a: np.asarray(a[:, slot]),
+                    {p: self.caches.blocks[p] for p in self._attn_pos})
+        if self._mamba_pos:
+            snap.mamba_rows = jax.tree_util.tree_map(
+                lambda a: np.asarray(a[:, slot]),
+                {p: self.caches.blocks[p] for p in self._mamba_pos})
+        if handle.lease is not None:
+            # Register the full prompt+generated chunks before closing the
+            # lease: the trie keeps those blocks warm (its own reference),
+            # so an early resume adopts them and skips the host re-upload
+            # entirely. Correctness never depends on trie survival — the
+            # host snapshot covers every lane.
+            if self.trie is not None and pos <= self._C_attn:
+                seq = np.concatenate([
+                    np.asarray(handle.request.tokens,
+                               np.int32).reshape(-1),
+                    np.asarray(handle.tokens, np.int32)])
+                chain = [int(handle.lease.table[j])
+                         for j in range(pos // self._bt)]
+                if chain:
+                    self.trie.insert(seq[:pos], chain)
+            handle.lease.close()
+            handle.lease = None
+        self.slots[slot] = None
+        self.tokens[slot] = self.ecfg.pad_token_id
+        handle.slot = None
+        handle.state = RequestState.QUEUED
+        handle._snapshot = snap
+        handle.preempts += 1
+        self.counters["preemptions"] += 1
+        self.queue.appendleft(handle)
+
+    def _maybe_preempt(self) -> None:
+        """After admission: if a higher-class request is still queued while
+        strictly lower-class work runs, evict one victim (lowest class
+        first, most remaining work first) so the head admits next step.
+        Eviction counts are capped per request — aged batch work cannot be
+        preempted forever."""
+        if not self.sched.cfg.preemption or not self.queue:
+            return
+        head = self.queue.peek()
+        if head is None:
+            return
+        running = [(i, h) for i, h in enumerate(self.slots)
+                   if h is not None and h.state is RequestState.RUNNING]
+        victim = self.sched.pick_victim(running, head.qos)
+        if victim is not None:
+            self.preempt(victim[1])
+
+    def _finish_resume(self, handle: RequestHandle, slot: int,
+                       snap: SlotSnapshot) -> None:
+        self.slots[slot] = handle
+        handle.slot = slot
+        handle.state = RequestState.RUNNING
+        handle._snapshot = None
+        self.pos[slot] = snap.pos
+        self.tokens[slot] = handle.tokens[-1]
+        self.counters["resumes"] += 1
+
+    def _scatter_snapshot_rows(self, rows: Dict[str, np.ndarray],
+                               slot: int) -> None:
+        """Upload whole per-slot cache rows (dense attention / mamba state)
+        from a host snapshot into ``slot``'s batch row."""
+        sub_old = {p: self.caches.blocks[p] for p in rows}
+        sub_new = self._jit_scatter(
+            sub_old,
+            jax.tree_util.tree_map(lambda a: jnp.asarray(a)[:, None], rows),
+            jnp.asarray(np.asarray([slot], np.int32)))
+        self.caches = DecodeCaches(
+            blocks={**self.caches.blocks, **sub_new}, cross=None)
+
+    def _resume_dense(self, handle: RequestHandle, slot: int) -> None:
+        """Dense-mode resume: scatter the snapshot rows back (any free
+        slot — row contents are position-indexed, not slot-bound). Cannot
+        fail: dense rows are preallocated, there is no quota."""
+        snap = handle._snapshot
+        rows: Dict[str, np.ndarray] = {}
+        if snap.attn_rows:
+            rows.update(snap.attn_rows)
+        if snap.mamba_rows:
+            rows.update(snap.mamba_rows)
+        if rows:
+            self._scatter_snapshot_rows(rows, slot)
+        self._finish_resume(handle, slot, snap)
+
+    def _resume_paged(self, handle: RequestHandle, slot: int) -> bool:
+        """Paged-mode resume: the same admission discipline as a fresh
+        request (trie match → pin, physical headroom, quota gate), then
+        scatter the host lanes the trie could not cover. False = blocked
+        (quota/headroom) — the caller requeues the handle at the head."""
+        snap = handle._snapshot
+        pos = snap.pos
+        hits: List[int] = []
+        if self.trie is not None and pos <= self._C_attn:
+            seq = np.concatenate([
+                np.asarray(handle.request.tokens, np.int32).reshape(-1),
+                np.asarray(handle.tokens, np.int32)])
+            max_hit = min(pos // self._bt, self._nb_per_slot)
+            hits = self.trie.match(seq[:pos], max_blocks=max_hit)
+            for blk in hits:
+                self.pool.retain(blk)
+        start = len(hits) * self._bt
+        running = sum(s is not None for s in self.slots)
+        if (running + 1) * self._nb_per_slot > self.pool.n_blocks - 1:
+            for blk in hits:
+                self.pool.release(blk)
+            return False
+        remaining = handle.request.max_new_tokens - len(handle.tokens)
+        quota = self._quota_blocks(pos, start, remaining)
+        if not self.pool.try_reserve_quota(quota):
+            for blk in hits:
+                self.pool.release(blk)
+            return False
+        lease = KVLease(self.pool, self._nb_per_slot, quota)
+        if hits:
+            lease.adopt_prefix(hits, retained=True)
+        lo = max(start, snap.span_start)
+        span = np.arange(lo, pos, dtype=np.int64)
+        if span.size:
+            cows: List[Tuple[int, int]] = []
+            s = span % self._C_pad
+            for j in sorted({int(x) // self._bt for x in s}):
+                phys, cow = lease.ensure(j)
+                if cow >= 0:
+                    cows.append((cow, phys))
+            self._apply_copies(cows)
+            blk = np.asarray([int(lease.table[int(x) // self._bt])
+                              for x in s], np.int32)
+            off = (s % self._bt).astype(np.int32)
+            sel = (span - snap.span_start).astype(np.int64)
+            P = 1 << max(0, int(span.size) - 1).bit_length()
+            mask = np.zeros((1, P), bool)
+            mask[0, :span.size] = True
+            blk_p = np.zeros(P, np.int32)
+            off_p = np.zeros(P, np.int32)
+            blk_p[:span.size], off_p[:span.size] = blk, off
+            def _lane(v):
+                lane = v[:, sel]
+                pad = np.zeros((1, P - span.size) + lane.shape[2:],
+                               lane.dtype)
+                return jnp.asarray(np.concatenate([lane, pad], axis=1))
+
+            lanes = jax.tree_util.tree_map(_lane, snap.attn_lanes)
+            attn_sub = {p: self.caches.blocks[p] for p in self._attn_pos}
+            attn_sub = _restore_paged_lanes(attn_sub, lanes,
+                                            jnp.asarray(blk_p[None]),
+                                            jnp.asarray(off_p[None]),
+                                            jnp.asarray(mask))
+            self.caches = DecodeCaches(
+                blocks={**self.caches.blocks, **attn_sub}, cross=None)
+        if self._mamba_pos and snap.mamba_rows:
+            self._scatter_snapshot_rows(snap.mamba_rows, slot)
+        handle.lease = lease
+        self._finish_resume(handle, slot, snap)
+        return True
+
+    # ------------------------------------------------------------------
+    # Chunked prefill: long prompts admit immediately (slot + lease +
+    # full quota) but prefill one chunk per engine step, interleaved with
+    # everyone else's decode — a single long admission stops inflating
+    # neighbors' TPOT by the whole prompt's prefill latency. Each chunk is
+    # a suffix prefill through the PR-3 paged path (cached prefix ⊕
+    # suffix), at an existing ladder-bucket shape.
+    # ------------------------------------------------------------------
+    def _begin_chunked(self, handle: RequestHandle, slot: int) -> bool:
+        """Admit a long prompt for chunked prefill: trie match + quota
+        gate exactly like normal admission, but no forward yet — the
+        handle enters PREFILLING and ``_advance_chunk_prefills`` feeds it
+        chunk by chunk. False = blocked on quota/headroom."""
+        toks = np.asarray(handle.request.tokens, np.int32).reshape(-1)
+        plen = toks.shape[0]
+        hits: List[int] = []
+        if self.trie is not None:
+            max_hit = min((plen - 1) // self._bt, self._nb_per_slot)
+            hits = self.trie.match(toks, max_blocks=max_hit)
+            for blk in hits:
+                self.pool.retain(blk)
+        start = len(hits) * self._bt
+        running = sum(s is not None for s in self.slots)
+        if (running + 1) * self._nb_per_slot > self.pool.n_blocks - 1:
+            for blk in hits:
+                self.pool.release(blk)
+            return False
+        quota = self._quota_blocks(plen, start,
+                                   handle.request.max_new_tokens)
+        if not self.pool.try_reserve_quota(quota):
+            for blk in hits:
+                self.pool.release(blk)
+            return False
+        lease = KVLease(self.pool, self._nb_per_slot, quota)
+        if hits:
+            lease.adopt_prefix(hits, retained=True)
+            handle.prefix_hit_tokens = start
+        handle.lease = lease
+        handle._chunk_pos = start
+        handle.state = RequestState.PREFILLING
+        handle.slot = slot
+        self.slots[slot] = handle
+        self.pos[slot] = 0
+        self.tokens[slot] = self.ecfg.pad_token_id
+        self.counters["admitted"] += 1
+        self.counters["prefix_hit_tokens"] += start
+        return True
+
+    def _advance_chunk_prefills(self, finished: List[RequestHandle]) -> None:
+        """Advance chunked prefills by ONE chunk this step (one batched
+        suffix-prefill forward over same-bucket chunk rows — per-step cost
+        stays bounded by one prefill dispatch). The final chunk emits the
+        request's first token and flips it to RUNNING, so it decodes with
+        everyone else from this very step."""
+        chunking = [(i, h) for i, h in enumerate(self.slots)
+                    if h is not None and
+                    h.state is RequestState.PREFILLING]
+        if not chunking:
+            return
+
+        def next_chunk(h: RequestHandle) -> int:
+            return min(self._chunk_tokens,
+                       self._prompt_len(h) - h._chunk_pos)
+
+        R = self._prefill_rows
+        bucket = self._bucket_len(next_chunk(chunking[0][1]))
+        group = [(i, h) for i, h in chunking
+                 if self._bucket_len(next_chunk(h)) == bucket][:R]
+        G = len(group)
+        nb = max(1, self._nb_per_slot)
+        lengths = np.zeros(R, np.int32)      # prefix + chunk (total so far)
+        starts = np.zeros(R, np.int32)
+        tables = np.full((R, nb), -1, np.int32)
+        batch_toks = np.full((R, bucket), self.ecfg.pad_token_id, np.int32)
+        cows: List[Tuple[int, int]] = []
+        for r, (i, h) in enumerate(group):
+            toks = np.asarray(h.request.tokens, np.int32).reshape(-1)
+            cpos = h._chunk_pos
+            clen = next_chunk(h)
+            starts[r], lengths[r] = cpos, cpos + clen
+            batch_toks[r, :clen] = toks[cpos:cpos + clen]
+            for j in self._write_span_blocks(cpos, cpos + clen):
+                phys, cow = h.lease.ensure(j)
+                if cow >= 0:
+                    cows.append((cow, phys))
+            tables[r] = h.lease.table
+        self._apply_copies(cows)
+        call_caches = DecodeCaches(
+            blocks={p: self.caches.blocks[p] for p in self._attn_pos},
+            cross=None)
+        t0 = time.perf_counter()
+        logits, new_caches, counts = self._jit_prefill_paged(
+            self.params, {"tokens": jnp.asarray(batch_toks)},
+            call_caches, self.banks, jnp.asarray(tables),
+            jnp.asarray(starts), jnp.asarray(lengths),
+            has_prefix=True, row_capacity=self._row_cap_prefill(bucket))
+        logits.block_until_ready()
+        dt = time.perf_counter() - t0
+        self.prefill_shapes.add((R, bucket))
+        self.caches = DecodeCaches(
+            blocks={**self.caches.blocks,
+                    **{p: new_caches.blocks[p] for p in self._attn_pos}},
+            cross=None)
+        counts_np = {k: np.asarray(v) for k, v in counts.items()}
+        self.last_row_counts = counts_np
+        self.last_counts = {k: v.sum(axis=1) if v.ndim == 3 else v
+                            for k, v in counts_np.items()}
+        row_valid = np.zeros(R, bool)
+        row_valid[:G] = True
+        stall = self.backend.observe(counts_np, dt, prefill=True,
+                                     row_valid=row_valid)
+        self._stall_clock += stall
+        amax = np.asarray(jnp.argmax(logits, -1), np.int32)
+        samp = self._gather_sampling_rows(
+            logits, [r for r, (i, h) in enumerate(group)
+                     if not h.sampler.greedy and
+                     int(lengths[r]) == self._prompt_len(h)])
+        for r, (i, h) in enumerate(group):
+            clen = int(lengths[r] - starts[r])
+            h._chunk_pos = int(lengths[r])
+            self.counters["prefill_tokens"] += clen
+            sub = {k: v[:, r].astype(np.int64)
+                   for k, v in counts_np.items() if v.ndim == 3}
+            if h.expert_counts is None:
+                h.expert_counts = sub
+            else:
+                for k, v in sub.items():
+                    if k in h.expert_counts:
+                        h.expert_counts[k] += v
+            plen = self._prompt_len(h)
+            if h._chunk_pos < plen:
+                continue                     # more chunks to go
+            # Final chunk: register the whole prompt for sharing, emit the
+            # first token, flip to RUNNING.
+            if self.trie is not None and plen <= self._C_attn:
+                toks = np.asarray(h.request.tokens, np.int32).reshape(-1)
+                chain = [int(h.lease.table[j])
+                         for j in range(plen // self._bt)]
+                self.trie.insert(toks, chain)
+            tok = int(amax[r]) if r not in samp else \
+                h.sampler.next_token(samp[r], 0)
+            h.tokens.append(tok)
+            h.first_token_s = self._now()
+            h.ttft_s = (h.first_token_s - h.submit_s +
+                        self._stall_clock - h.stall_at_submit)
+            self.ttfts.append(h.ttft_s)
+            h.state = RequestState.RUNNING
+            self.pos[i] = plen
+            self.tokens[i] = tok
+            if self._done(h):
+                self._finish(h, finished)
+        self.counters["prefills"] += 1
+        self.counters["chunk_prefills"] += 1
+
+    # ------------------------------------------------------------------
     def step(self) -> List[RequestHandle]:
-        """One engine step: admit queued requests into free slots, then
-        advance every running request — by one token on the plain path, by
-        a whole accepted burst (1..spec_k+1 tokens) when speculative
-        decoding is on. Returns the handles that finished this step."""
+        """One engine step: drop expired batch work, admit queued requests
+        into free slots (resumes and chunked admissions included), preempt
+        for a blocked higher class, advance chunked prefills by one chunk,
+        then advance every running request grouped by execution tier —
+        premium/standard on the mixed-precision banks (with speculative
+        bursts when enabled), batch tier on the all-lo banks. One group —
+        uniform-class traffic — is exactly the untiered engine. Returns
+        the handles that finished this step."""
         finished: List[RequestHandle] = []
+        self._shed_expired()
         self._admit(finished)
-        active = [(i, h) for i, h in enumerate(self.slots) if h is not None]
+        self._maybe_preempt()
+        self._advance_chunk_prefills(finished)
+        active = [(i, h) for i, h in enumerate(self.slots)
+                  if h is not None and h.state is RequestState.RUNNING]
         if active:
-            # The speculative round falls back to the single-token step
-            # when no row has draft headroom (e.g. one token remaining).
-            if self._spec is None or not self._spec.round(active, finished):
-                self._decode_one(active, finished)
+            groups = self.sched.decode_groups(active,
+                                              self._spec is not None)
+            guard = len(groups) > 1 and bool(self._mamba_pos)
+            for kind, rows in groups:
+                # The speculative round falls back to the single-token
+                # step when no row has draft headroom (e.g. one token
+                # remaining).
+                if kind == "spec" and self._spec.round(rows, finished):
+                    continue
+                self._decode_one(rows, finished, lo=(kind == "lo"),
+                                 guard_ssm=guard)
         self.backend.tick()
         return finished
 
-    def _decode_one(self, active, finished: List[RequestHandle]) -> None:
-        """Advance every active row by exactly one sampled token."""
-        row_valid = np.asarray([h is not None for h in self.slots], bool)
+    def _decode_one(self, active, finished: List[RequestHandle],
+                    lo: bool = False, guard_ssm: bool = False) -> None:
+        """Advance the given active rows by exactly one sampled token.
+        ``lo=True`` dispatches on the all-lo expert banks (batch tier):
+        the same buffers with every hi slot disowned — same pytree, so the
+        already-compiled decode executables serve both tiers. Rows of
+        other groups ride along masked out of dispatch and counts;
+        ``guard_ssm`` protects their recurrent state (see _merge_rows)."""
+        row_valid = np.zeros(self.ecfg.max_slots, bool)
+        for i, _ in active:
+            row_valid[i] = True
+        banks = all_lo_banks(self.banks, self._lo_owner_cache) if lo \
+            else self.banks
+        # The decode dispatch advances recurrent (SSM/conv) state for every
+        # row, valid or not — copy the pre-step leaves so rows belonging to
+        # *other* tier groups can be merged back afterwards. (Copy, not
+        # alias: the decode jits donate the cache argument.)
+        ssm_old = {p: jnp.array(self.caches.blocks[p])
+                   for p in self._mamba_pos} if guard_ssm else None
         t0 = time.perf_counter()
         if self.pool is not None:
             n = self.ecfg.max_slots
@@ -931,17 +1498,22 @@ class InferenceEngine:
             self._apply_copies(cows)
             logits, self.caches, counts = self._jit_decode_paged(
                 self.params, jnp.asarray(self.tokens),
-                jnp.asarray(self.pos), self.caches, self.banks,
+                jnp.asarray(self.pos), self.caches, banks,
                 jnp.asarray(row_valid),
                 jnp.asarray(self._block_tables()),
                 jnp.asarray(wblk), jnp.asarray(woff))
         else:
             logits, self.caches, counts = self._jit_decode(
                 self.params, jnp.asarray(self.tokens),
-                jnp.asarray(self.pos), self.caches, self.banks,
+                jnp.asarray(self.pos), self.caches, banks,
                 jnp.asarray(row_valid))
         logits.block_until_ready()
         dt = time.perf_counter() - t0
+        if ssm_old is not None:
+            sub_new = {p: self.caches.blocks[p] for p in self._mamba_pos}
+            merged = _merge_rows(sub_new, ssm_old, jnp.asarray(row_valid))
+            self.caches = DecodeCaches(
+                blocks={**self.caches.blocks, **merged}, cross=None)
         counts_np = {k: np.asarray(v) for k, v in counts.items()}
         self.last_row_counts = counts_np
         self.last_counts = {k: v.sum(axis=1) if v.ndim == 3 else v
@@ -954,6 +1526,8 @@ class InferenceEngine:
         self.decode_times.append(latency)
         self._tpot_sum += latency * len(active)
         self._tpot_tokens += len(active)
+        self._tpot_ema = latency if self._tpot_ema == 0.0 else \
+            0.9 * self._tpot_ema + 0.1 * latency
         # Greedy fast path: only the (B,) device argmax crosses to host;
         # full (·, V) logits rows ship only for requests that sample
         # (device-gathered, so greedy neighbors stay off the transfer).
@@ -1032,29 +1606,40 @@ class InferenceEngine:
         now = 0.0
         stalled = 0
         t0 = time.perf_counter()
-        while i < len(requests) or self.queue or \
-                any(h is not None for h in self.slots):
-            if realtime:
-                now = time.perf_counter() - t0
-            while i < len(requests) and requests[i].arrival_s <= now:
-                handles.append(self.submit(requests[i]))
-                i += 1
-            if i < len(requests) and not self.queue and \
-                    all(h is None for h in self.slots):
-                # Idle gap until the next arrival — fast-forward.
-                if not realtime:
-                    now = requests[i].arrival_s
-                handles.append(self.submit(requests[i]))
-                i += 1
-            before = len(self.queue)
-            self.step()
-            if i >= len(requests):
-                # All arrivals in: the same dead-admission detection as
-                # drain() (a permanently envelope-blocked head would
-                # otherwise spin this loop forever).
-                stalled = self._check_admission_stall(stalled, before)
+        try:
             if not realtime:
-                now += virtual_step_s
+                # Route ALL engine time accounting (submit/enqueue stamps,
+                # ttft, finish, queue aging, deadline expiry) through the
+                # virtual clock, so virtual-clock runs report the same
+                # accounting semantics realtime ones do.
+                self._clock = now
+            while i < len(requests) or self.queue or \
+                    any(h is not None for h in self.slots):
+                if realtime:
+                    now = time.perf_counter() - t0
+                while i < len(requests) and requests[i].arrival_s <= now:
+                    handles.append(self.submit(requests[i]))
+                    i += 1
+                if i < len(requests) and not self.queue and \
+                        all(h is None for h in self.slots):
+                    # Idle gap until the next arrival — fast-forward.
+                    if not realtime:
+                        now = requests[i].arrival_s
+                        self._clock = now
+                    handles.append(self.submit(requests[i]))
+                    i += 1
+                before = len(self.queue)
+                self.step()
+                if i >= len(requests):
+                    # All arrivals in: the same dead-admission detection as
+                    # drain() (a permanently envelope-blocked head would
+                    # otherwise spin this loop forever).
+                    stalled = self._check_admission_stall(stalled, before)
+                if not realtime:
+                    now += virtual_step_s
+                    self._clock = now
+        finally:
+            self._clock = None
         return handles
 
     def flush(self) -> None:
@@ -1062,7 +1647,8 @@ class InferenceEngine:
         self.backend.flush()
 
     # ------------------------------------------------------------------
-    def generate(self, batch: Dict, n_tokens: int, sampling=None):
+    def generate(self, batch: Dict, n_tokens: int, sampling=None,
+                 qos=None, deadline_ms=None):
         """Whole-batch compat shim over submit + drain.
 
         ``batch``: ``{"tokens": (B, S)}`` with B ≤ ``max_slots``.
@@ -1092,7 +1678,8 @@ class InferenceEngine:
                 f"exceed max_len={self.ecfg.max_len}")
         handles = [self.submit(Request(tokens=toks[i],
                                        max_new_tokens=n_tokens,
-                                       sampling=sampling))
+                                       sampling=sampling, qos=qos,
+                                       deadline_ms=deadline_ms))
                    for i in range(B)]
         n_before = len(self.decode_times)
         self.drain()

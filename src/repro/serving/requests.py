@@ -34,13 +34,22 @@ class Request:
 
     ``sampling``: per-request ``SamplingParams`` (temperature / top-k /
     top-p / seed). ``None`` means greedy — bit-identical to pre-sampler
-    engines. Validated at ``InferenceEngine.submit``."""
+    engines. Validated at ``InferenceEngine.submit``.
+
+    ``qos``: SLO tier (``repro.serving.scheduler.QOS_CLASSES``); ``None``
+    resolves to the engine's ``SchedulerConfig.qos_default`` at submit.
+    ``deadline_ms``: optional per-request latency target (submit →
+    finish) — drives SLO-attainment reporting, and expired *batch*-tier
+    requests are dropped from the admission queue instead of served late.
+    Both validated loudly at ``InferenceEngine.submit``."""
     tokens: np.ndarray                   # (prompt_len,) int32
     max_new_tokens: int = 16
     workload: str = "text"               # which traffic phase produced it
     arrival_s: float = 0.0               # offset from stream start
     eos_token_id: Optional[int] = None
     sampling: Optional[SamplingParams] = None
+    qos: Optional[str] = None            # batch | standard | premium
+    deadline_ms: Optional[float] = None  # submit→finish SLO target
 
 
 class RequestStream:
@@ -49,9 +58,16 @@ class RequestStream:
     ``phases``: sequence of ``(workload, n_requests)`` — the same shifting
     serving mix ``mixed_stream`` yields batch-wise, one ``Request`` at a
     time. Arrivals are Poisson at ``arrival_rate_rps`` (or back-to-back when
-    ``None``); prompt lengths jitter uniformly within
+    ``None``), with optional extra per-arrival jitter uniform in
+    ``[0, arrival_jitter_s]``; prompt lengths jitter uniformly within
     ``prompt_len ± prompt_len_jitter`` so continuous batching sees genuinely
     variable-length work.
+
+    ``qos``: ``None`` (requests carry no class — the engine default
+    applies), a fixed class name, or the string ``"workload"`` to map each
+    request's workload tag through ``scheduler.WORKLOAD_QOS`` (code →
+    premium, text → standard, math → batch). ``deadline_ms`` attaches the
+    same submit→finish SLO target to every request.
     """
 
     def __init__(self, vocab_size: int,
@@ -60,19 +76,28 @@ class RequestStream:
                  prompt_len_jitter: int = 0,
                  max_new_tokens: int = 8,
                  arrival_rate_rps: Optional[float] = None,
+                 arrival_jitter_s: float = 0.0,
                  seed: int = 0,
-                 sampling: Optional[SamplingParams] = None):
+                 sampling: Optional[SamplingParams] = None,
+                 qos: Optional[str] = None,
+                 deadline_ms: Optional[float] = None):
         self.vocab_size = vocab_size
         self.phases = list(phases)
         self.prompt_len = prompt_len
         self.prompt_len_jitter = prompt_len_jitter
         self.max_new_tokens = max_new_tokens
         self.arrival_rate_rps = arrival_rate_rps
+        self.arrival_jitter_s = float(arrival_jitter_s)
         self.seed = seed
         # Per-request sampling params: every request in the stream carries
         # its own seed (base seed + request ordinal) so replaying the
         # stream is reproducible while rows stay decorrelated.
         self.sampling = sampling
+        if qos is not None and qos != "workload":
+            from repro.serving.scheduler import resolve_qos
+            resolve_qos(qos, qos)        # loud validation at construction
+        self.qos = qos
+        self.deadline_ms = deadline_ms
 
     def __len__(self) -> int:
         return sum(n for _, n in self.phases)
@@ -90,13 +115,23 @@ class RequestStream:
                                     seed=self.seed + 1009 * pi + j)[0]
                 if self.arrival_rate_rps:
                     now += float(rng.exponential(1.0 / self.arrival_rate_rps))
+                if self.arrival_jitter_s:
+                    # Monotone jitter: arrivals stay in submit order so the
+                    # replay loop never head-of-line blocks on timestamps.
+                    now += float(rng.uniform(0.0, self.arrival_jitter_s))
                 sampling = None
                 if self.sampling is not None:
                     sampling = dataclasses.replace(
                         self.sampling, seed=self.sampling.seed + ordinal)
+                if self.qos == "workload":
+                    from repro.serving.scheduler import WORKLOAD_QOS
+                    qos = WORKLOAD_QOS[workload]
+                else:
+                    qos = self.qos
                 yield Request(tokens=toks, max_new_tokens=self.max_new_tokens,
                               workload=workload, arrival_s=now,
-                              sampling=sampling)
+                              sampling=sampling, qos=qos,
+                              deadline_ms=self.deadline_ms)
                 ordinal += 1
 
 

@@ -343,7 +343,16 @@ class SpecDecoder:
         # admission bucketing pads prompts.
         k = next(v for v in self.ladder if v >= k)
         W = k + 1
-        row_valid = np.asarray([h is not None for h in eng.slots], bool)
+        # The round may cover a SUBSET of occupied rows (the scheduler's
+        # spec tier): row_valid masks dispatch/counts to the rows this
+        # round advances, while ``occupied`` — every slot holding a request,
+        # active in this round or not — drives the snapshot/restore masks:
+        # a burst lane that wraps the ring can clobber ANOTHER group's live
+        # slot, so non-active occupied rows restore all their lanes.
+        row_valid = np.zeros(B, bool)
+        for i, _ in active:
+            row_valid[i] = True
+        occupied = np.asarray([h is not None for h in eng.slots], bool)
         # Step j of the burst is real for row i iff j <= depth[i]; rows past
         # their depth (and vacant rows) ride along masked out of MoE
         # dispatch and every count.
@@ -426,7 +435,7 @@ class SpecDecoder:
         caches = DecodeCaches(blocks=blocks, cross=None)
         if restore:
             all_mask = jnp.asarray(
-                np.broadcast_to(row_valid[:, None], (B, W)).copy())
+                np.broadcast_to(occupied[:, None], (B, W)).copy())
             attn_sub = {p: caches.blocks[p] for p in eng._attn_pos}
             if eng.pool is not None:
                 attn_sub = _restore_paged_lanes(attn_sub, snap, blk_bw,
@@ -465,7 +474,9 @@ class SpecDecoder:
             samp_logits = {i: sub[:, j] for j, i in enumerate(samp_rows)}
 
         # ---- rejection sampling per row ---------------------------------
-        accepts = np.zeros(B, np.int32)
+        # -1 for rows outside this round: the occupied-row restore mask
+        # (lane j restored iff j > accepts) then covers ALL their lanes.
+        accepts = np.full(B, -1, np.int32)
         emitted: Dict[int, List[int]] = {}
         n_draft = 0
         n_accept = 0
@@ -498,6 +509,8 @@ class SpecDecoder:
         eng._stall_clock += stall
         latency = dt + stall
         eng.decode_times.append(latency)
+        eng._tpot_ema = latency if eng._tpot_ema == 0.0 else \
+            0.9 * eng._tpot_ema + 0.1 * latency
         eng.last_row_counts = obs
         eng.last_counts = {kk: v.sum(axis=1) if v.ndim == 3 else v
                            for kk, v in obs.items()}
@@ -505,13 +518,23 @@ class SpecDecoder:
         # ---- roll recurrent state back to the last accepted step --------
         if eng._mamba_pos:
             sub = _select_ssm({p: ssm_stack[p] for p in eng._mamba_pos},
-                              jnp.asarray(accepts))
+                              jnp.asarray(np.maximum(accepts, 0)))
+            if bool(np.any(occupied & ~row_valid)):
+                # Rows outside this round rode through the verify scan
+                # masked — their recurrent state must come back from the
+                # pre-round snapshot, not from any scan step.
+                act = jnp.asarray(row_valid)
+                sub = {
+                    p: jnp.where(
+                        act.reshape((1, -1) + (1,) * (sub[p].ndim - 2)),
+                        sub[p], ssm_snap[p])
+                    for p in eng._mamba_pos}
             caches = DecodeCaches(blocks={**caches.blocks, **sub},
                                   cross=None)
 
         # ---- restore non-accepted lanes ---------------------------------
         if restore:
-            rej = jnp.asarray(row_valid[:, None] &
+            rej = jnp.asarray(occupied[:, None] &
                               (np.arange(W)[None, :] > accepts[:, None]))
             attn_sub = {p: caches.blocks[p] for p in eng._attn_pos}
             if eng.pool is not None:

@@ -1,0 +1,165 @@
+"""Preemption correctness: a preempted-then-resumed request is
+token-identical (temp=0) to an uninterrupted run — across full-attention,
+sliding-window, and jamba (mamba+attention) stacks, paged and dense — and
+evict-and-resume leaves the KV pool's block/refcount accounting invariant."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.serving import (EngineConfig, InferenceEngine, Request,
+                           make_backend, make_prompts)
+
+
+def _run(cfg, params, *, paged, sharing, preempt_at=None, plen=12,
+         max_new=12, max_len=64, qos=None):
+    clone = jax.tree_util.tree_map(lambda x: x, params)
+    eng = InferenceEngine(
+        cfg, clone, make_backend("fp16"),
+        EngineConfig(max_slots=2, max_len=max_len, paged=paged,
+                     prefix_sharing=sharing))
+    h = eng.submit(Request(
+        tokens=make_prompts("text", cfg.vocab_size, 1, plen, seed=3)[0],
+        max_new_tokens=max_new, qos=qos))
+    steps = 0
+    while h.state.value != "finished":
+        eng.step()
+        steps += 1
+        if steps == preempt_at and h.state.value == "running":
+            eng.preempt(h)
+        assert steps < 500
+    if eng.pool is not None:
+        eng.pool.check_invariants()
+    return h, eng
+
+
+@pytest.fixture(scope="module")
+def sw_setup():
+    """Sliding-window variant of the reduced granite MoE."""
+    from repro.configs import get_config
+    from repro.models import init_params
+    cfg = get_config("granite-moe-1b-a400m", reduced=True)
+    cfg = dataclasses.replace(
+        cfg, name="granite-sw32",
+        attn=dataclasses.replace(cfg.attn, sliding_window=32))
+    return cfg, init_params(jax.random.PRNGKey(0), cfg)
+
+
+@pytest.fixture(scope="module")
+def jamba_setup():
+    from repro.configs import get_config
+    from repro.models import init_params
+    cfg = get_config("jamba-v0_1-52b", reduced=True)
+    return cfg, init_params(jax.random.PRNGKey(0), cfg)
+
+
+@pytest.mark.parametrize("paged,sharing", [(True, True), (True, False),
+                                           (False, False)])
+def test_full_attn_preempt_parity(serving_setup, paged, sharing):
+    cfg, params = serving_setup
+    base, _ = _run(cfg, params, paged=paged, sharing=sharing)
+    for at in (2, 5, 9):
+        pre, eng = _run(cfg, params, paged=paged, sharing=sharing,
+                        preempt_at=at)
+        assert pre.tokens == base.tokens, f"preempt@{at}"
+        assert eng.counters["preemptions"] == 1
+        assert eng.counters["resumes"] == 1
+        assert pre.preempts == 1
+
+
+@pytest.mark.parametrize("paged", [True, False])
+def test_sliding_window_preempt_parity(sw_setup, paged):
+    cfg, params = sw_setup
+    # max_new rides the position past the 32-token window, so late
+    # preemptions snapshot a WRAPPED ring (span = last window only).
+    base, _ = _run(cfg, params, paged=paged, sharing=False, max_new=40)
+    for at in (4, 30):
+        pre, _ = _run(cfg, params, paged=paged, sharing=False, max_new=40,
+                      preempt_at=at)
+        assert pre.tokens == base.tokens, f"preempt@{at}"
+
+
+@pytest.mark.parametrize("paged", [True, False])
+def test_jamba_preempt_parity(jamba_setup, paged):
+    cfg, params = jamba_setup
+    base, _ = _run(cfg, params, paged=paged, sharing=False)
+    for at in (3, 7):
+        pre, _ = _run(cfg, params, paged=paged, sharing=False, preempt_at=at)
+        assert pre.tokens == base.tokens, f"preempt@{at}"
+
+
+def test_preempt_frees_and_restores_pool_state(serving_setup):
+    """Trie off (registration would intentionally retain generated chunks):
+    preemption must genuinely free every block + its quota, and the drained
+    engine must return the pool to its pristine state."""
+    cfg, params = serving_setup
+    clone = jax.tree_util.tree_map(lambda x: x, params)
+    eng = InferenceEngine(cfg, clone, make_backend("fp16"),
+                          EngineConfig(max_slots=2, max_len=64,
+                                       prefix_sharing=False))
+    pool = eng.pool
+    free0, used0 = pool.n_free, eng.budget.used
+    h = eng.submit(Request(
+        tokens=make_prompts("text", cfg.vocab_size, 1, 12, seed=1)[0],
+        max_new_tokens=10))
+    for _ in range(3):
+        eng.step()
+    assert h.state.value == "running"
+    assert pool.n_free < free0                     # blocks genuinely held
+    eng.preempt(h)
+    pool.check_invariants()
+    # Eviction returns EVERY block and every reserved quota byte.
+    assert pool.n_free == free0
+    assert eng.budget.used == used0
+    assert h.lease is None and h.slot is None
+    eng.drain()
+    pool.check_invariants()
+    assert h.state.value == "finished" and len(h.tokens) == 10
+    assert pool.n_free == free0
+    assert eng.budget.used == used0
+
+
+def test_automatic_preemption_for_blocked_premium(serving_setup):
+    """A premium arrival behind a slot-hogging batch request evicts it;
+    both finish, and the batch request's tokens still match an
+    uninterrupted run (fp16 banks: lo tier == mixed tier)."""
+    cfg, params = serving_setup
+    base, _ = _run(cfg, params, paged=True, sharing=True, max_new=16,
+                   qos="batch")
+
+    clone = jax.tree_util.tree_map(lambda x: x, params)
+    eng = InferenceEngine(cfg, clone, make_backend("fp16"),
+                          EngineConfig(max_slots=1, max_len=64))
+    batch = eng.submit(Request(
+        tokens=make_prompts("text", cfg.vocab_size, 1, 12, seed=3)[0],
+        max_new_tokens=16, qos="batch"))
+    for _ in range(3):
+        eng.step()
+    assert batch.state.value == "running"
+    prem = eng.submit(Request(
+        tokens=make_prompts("text", cfg.vocab_size, 1, 8, seed=4)[0],
+        max_new_tokens=4, qos="premium"))
+    done = eng.drain()
+    assert eng.counters["preemptions"] >= 1
+    assert eng.counters["resumes"] >= 1
+    # Premium jumped the line: it finished before the preempted batch row.
+    assert done.index(prem) < done.index(batch)
+    assert prem.tokens and len(prem.tokens) == 4
+    assert batch.tokens == base.tokens
+    eng.pool.check_invariants()
+
+
+def test_preempt_non_running_rejected(serving_setup):
+    cfg, params = serving_setup
+    clone = jax.tree_util.tree_map(lambda x: x, params)
+    eng = InferenceEngine(cfg, clone, make_backend("fp16"),
+                          EngineConfig(max_slots=1, max_len=64))
+    h = eng.submit(Request(
+        tokens=make_prompts("text", cfg.vocab_size, 1, 8, seed=0)[0],
+        max_new_tokens=2))
+    with pytest.raises(ValueError, match="preempt"):
+        eng.preempt(h)                    # still QUEUED
+    eng.drain()
+    with pytest.raises(ValueError, match="preempt"):
+        eng.preempt(h)                    # FINISHED

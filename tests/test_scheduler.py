@@ -1,0 +1,286 @@
+"""QoS scheduler policy tests: tiered queue ordering + weighted aging,
+submit-time validation, workload→QoS mapping, shed policies, deadline
+expiry, and virtual-clock accounting determinism."""
+import types
+
+import numpy as np
+import pytest
+
+from repro.serving import (EngineConfig, InferenceEngine, Request,
+                           RequestState, RequestStream, SchedulerConfig,
+                           TieredQueue, WORKLOAD_QOS, make_backend,
+                           make_prompts, resolve_qos)
+from repro.serving.scheduler import Scheduler
+
+
+def _h(qos, enqueue_s=0.0, preempts=0, max_new=8, done=0):
+    return types.SimpleNamespace(
+        qos=qos, exec_qos=qos, enqueue_s=enqueue_s, preempts=preempts,
+        request=types.SimpleNamespace(max_new_tokens=max_new),
+        tokens=[0] * done)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+# ---------------------------------------------------------------------------
+# TieredQueue
+# ---------------------------------------------------------------------------
+
+def test_tiered_queue_class_order_and_fifo():
+    clk = FakeClock()
+    q = TieredQueue(clk, aging_s=5.0)
+    b1, b2 = _h("batch"), _h("batch")
+    s1, p1 = _h("standard"), _h("premium")
+    for h in (b1, s1, b2, p1):
+        q.append(h)
+    assert len(q) == 4 and bool(q)
+    # Premium first, then standard, then batch in FIFO order.
+    assert q.peek() is p1
+    assert [q.popleft() for _ in range(4)] == [p1, s1, b1, b2]
+    assert not q
+    with pytest.raises(IndexError):
+        q.popleft()
+
+
+def test_tiered_queue_weighted_aging_no_starvation():
+    clk = FakeClock()
+    q = TieredQueue(clk, aging_s=5.0)
+    old_batch = _h("batch", enqueue_s=0.0)
+    q.append(old_batch)
+    clk.t = 11.0                      # age 11s → priority 0 + 11/5 = 2.2
+    fresh_premium = _h("premium", enqueue_s=11.0)   # priority 2.0
+    q.append(fresh_premium)
+    assert q.popleft() is old_batch   # aged batch outranks fresh premium
+    assert q.popleft() is fresh_premium
+
+
+def test_tiered_queue_ties_break_to_higher_class():
+    clk = FakeClock()
+    q = TieredQueue(clk, aging_s=5.0)
+    s = _h("standard", enqueue_s=0.0)     # priority 1.0 at t=0
+    p = _h("premium", enqueue_s=0.0)      # priority 2.0 at t=0
+    q.append(s)
+    q.append(p)
+    assert q.popleft() is p
+
+
+def test_tiered_queue_requeue_keeps_age():
+    clk = FakeClock()
+    q = TieredQueue(clk, aging_s=1.0)
+    old = _h("batch", enqueue_s=0.0)
+    clk.t = 10.0
+    q.append(old)                       # age survives append
+    q.appendleft(q.popleft())           # requeue must not reset the age
+    q.append(_h("premium", enqueue_s=10.0))
+    assert q.popleft() is old           # 10s/1s aging beats premium's 2.0
+
+
+def test_tiered_queue_prune():
+    clk = FakeClock()
+    q = TieredQueue(clk, aging_s=5.0)
+    hs = [_h("batch", max_new=i) for i in range(4)]
+    for h in hs:
+        q.append(h)
+    dropped = q.prune(lambda h: h.request.max_new_tokens % 2 == 0)
+    assert sorted(h.request.max_new_tokens for h in dropped) == [0, 2]
+    assert len(q) == 2
+
+
+# ---------------------------------------------------------------------------
+# Pure policy: resolution, shedding, victim selection
+# ---------------------------------------------------------------------------
+
+def test_resolve_qos_loud():
+    assert resolve_qos(None, "standard") == "standard"
+    assert resolve_qos("premium", "standard") == "premium"
+    with pytest.raises(ValueError, match="unknown QoS"):
+        resolve_qos("gold", "standard")
+    with pytest.raises(ValueError):
+        SchedulerConfig(qos_default="gold").validate()
+    with pytest.raises(ValueError):
+        SchedulerConfig(shed_policy="maybe").validate()
+    with pytest.raises(ValueError):
+        SchedulerConfig(aging_s=0.0).validate()
+
+
+def test_admit_action_policies():
+    calm = {"queue_depth": 0.0, "est_wait_s": 0.0}
+    hot = {"queue_depth": 99.0, "est_wait_s": 99.0}
+    none_ = Scheduler(SchedulerConfig(shed_policy="none"))
+    rej = Scheduler(SchedulerConfig(shed_policy="reject"))
+    down = Scheduler(SchedulerConfig(shed_policy="downgrade"))
+    for qos in ("batch", "standard", "premium"):
+        assert none_.admit_action(qos, hot) == "admit"
+        assert rej.admit_action(qos, calm) == "admit"
+    assert rej.admit_action("batch", hot) == "shed"
+    assert rej.admit_action("standard", hot) == "downgrade"
+    assert rej.admit_action("premium", hot) == "admit"   # never touched
+    assert down.admit_action("batch", hot) == "downgrade"
+    assert down.admit_action("premium", hot) == "admit"
+
+
+def test_pick_victim_rules():
+    sched = Scheduler(SchedulerConfig(max_preempts=2))
+    b_near = (0, _h("batch", max_new=8, done=7))
+    b_far = (1, _h("batch", max_new=8, done=1))
+    s = (2, _h("standard", max_new=8))
+    # Strictly lower class only; most remaining work first.
+    assert sched.pick_victim([b_near, b_far, s], "premium") == b_far
+    assert sched.pick_victim([s], "standard") is None
+    # Batch before standard even with less remaining work.
+    assert sched.pick_victim([b_near, s], "premium") == b_near
+    # Eviction cap protects liveness.
+    capped = (3, _h("batch", preempts=2))
+    assert sched.pick_victim([capped], "premium") is None
+    assert Scheduler(SchedulerConfig(preemption=False)).pick_victim(
+        [b_far], "premium") is None
+
+
+def test_decode_groups_partition():
+    sched = Scheduler(SchedulerConfig())
+    rows = [(0, _h("premium")), (1, _h("standard")), (2, _h("batch"))]
+    groups = sched.decode_groups(rows, spec_on=True)
+    assert [k for k, _ in groups] == ["spec", "mixed", "lo"] or \
+        [k for k, _ in groups] == ["spec", "lo"]
+    # spec off: premium+standard share the mixed group.
+    groups = sched.decode_groups(rows, spec_on=False)
+    assert [k for k, _ in groups] == ["mixed", "lo"]
+    assert len(groups[0][1]) == 2
+    # Uniform default traffic is ONE group — the untiered engine.
+    uni = [(i, _h("standard")) for i in range(3)]
+    assert len(sched.decode_groups(uni, spec_on=False)) == 1
+
+
+# ---------------------------------------------------------------------------
+# Request / RequestStream plumbing
+# ---------------------------------------------------------------------------
+
+def test_request_stream_workload_qos_and_jitter():
+    stream = RequestStream(
+        vocab_size=512, phases=[("text", 2), ("math", 2), ("code", 2)],
+        prompt_len=8, arrival_rate_rps=100.0, arrival_jitter_s=0.01,
+        seed=3, qos="workload")
+    reqs = list(stream)
+    assert [r.qos for r in reqs] == [WORKLOAD_QOS[r.workload] for r in reqs]
+    arrivals = [r.arrival_s for r in reqs]
+    assert arrivals == sorted(arrivals)          # jitter stays monotone
+    # Jitter actually perturbs the bare Poisson process.
+    bare = [r.arrival_s for r in RequestStream(
+        vocab_size=512, phases=[("text", 2), ("math", 2), ("code", 2)],
+        prompt_len=8, arrival_rate_rps=100.0, seed=3)]
+    assert arrivals != bare
+    with pytest.raises(ValueError, match="unknown QoS"):
+        RequestStream(vocab_size=512, phases=[("text", 1)], qos="gold")
+    # No class on the stream → requests carry none (engine default applies).
+    assert all(r.qos is None for r in RequestStream(
+        vocab_size=512, phases=[("text", 2)], prompt_len=8))
+
+
+# ---------------------------------------------------------------------------
+# Engine integration (reduced MoE)
+# ---------------------------------------------------------------------------
+
+def _prompt(cfg, ln, seed):
+    return make_prompts("text", cfg.vocab_size, 1, ln, seed=seed)[0]
+
+
+def test_submit_validation_loud(engine_factory, serving_setup):
+    cfg, _ = serving_setup
+    eng = engine_factory("fp16")
+    with pytest.raises(ValueError, match="unknown QoS"):
+        eng.submit(Request(tokens=_prompt(cfg, 8, 0), qos="gold"))
+    with pytest.raises(ValueError, match="deadline_ms"):
+        eng.submit(Request(tokens=_prompt(cfg, 8, 0), deadline_ms=0.0))
+    h = eng.submit(Request(tokens=_prompt(cfg, 8, 0), max_new_tokens=2,
+                           qos="premium", deadline_ms=5000.0))
+    assert h.qos == "premium"
+    eng.drain()
+    assert len(h.tokens) == 2
+
+
+def test_shed_reject_policy(serving_setup):
+    from repro.configs import get_config  # noqa: F401  (fixture provides cfg)
+    import jax
+    cfg, params = serving_setup
+    clone = jax.tree_util.tree_map(lambda x: x, params)
+    eng = InferenceEngine(
+        cfg, clone, make_backend("fp16"),
+        EngineConfig(max_slots=2, max_len=64,
+                     scheduler=SchedulerConfig(shed_policy="reject",
+                                               shed_queue_depth=1)))
+    # Overload the queue without stepping: depth climbs past the knob.
+    keep = [eng.submit(Request(tokens=_prompt(cfg, 8, i), max_new_tokens=2,
+                               qos="standard")) for i in range(3)]
+    shed = eng.submit(Request(tokens=_prompt(cfg, 8, 9), max_new_tokens=2,
+                              qos="batch"))
+    assert shed.state is RequestState.SHED
+    late_std = eng.submit(Request(tokens=_prompt(cfg, 8, 10),
+                                  max_new_tokens=2, qos="standard"))
+    assert late_std.exec_qos == "batch"          # downgraded, not dropped
+    prem = eng.submit(Request(tokens=_prompt(cfg, 8, 11), max_new_tokens=2,
+                              qos="premium"))
+    assert prem.exec_qos == "premium"            # premium never touched
+    eng.drain()
+    st = eng.stats()
+    assert st["shed_requests"] >= 1 and st["downgraded"] >= 1
+    assert all(len(h.tokens) == 2 for h in keep + [late_std, prem])
+    assert shed.tokens == []                     # never served
+
+
+def test_expired_batch_deadline_dropped(serving_setup):
+    import jax
+    cfg, params = serving_setup
+    clone = jax.tree_util.tree_map(lambda x: x, params)
+    eng = InferenceEngine(cfg, clone, make_backend("fp16"),
+                          EngineConfig(max_slots=1, max_len=64))
+    first = eng.submit(Request(tokens=_prompt(cfg, 8, 0), max_new_tokens=4))
+    # Queued behind `first` with an already-hopeless deadline.
+    doomed = eng.submit(Request(tokens=_prompt(cfg, 8, 1), max_new_tokens=4,
+                                qos="batch", deadline_ms=1e-6))
+    eng.drain()
+    assert first.state is RequestState.FINISHED
+    assert doomed.state is RequestState.SHED
+    assert eng.stats()["shed_requests"] == 1.0
+
+
+def test_virtual_replay_accounting_deterministic(serving_setup):
+    import jax
+    cfg, params = serving_setup
+
+    def run():
+        clone = jax.tree_util.tree_map(lambda x: x, params)
+        eng = InferenceEngine(cfg, clone, make_backend("fp16"),
+                              EngineConfig(max_slots=2, max_len=64))
+        stream = RequestStream(
+            vocab_size=cfg.vocab_size, phases=[("text", 4), ("code", 2)],
+            prompt_len=8, max_new_tokens=4, arrival_rate_rps=200.0,
+            arrival_jitter_s=0.002, seed=7, qos="workload")
+        handles = eng.replay(stream, realtime=False)
+        assert eng._clock is None                # clock uninstalled on exit
+        return handles
+
+    a, b = run(), run()
+    assert [h.tokens for h in a] == [h.tokens for h in b]
+    # Virtual-clock accounting is bit-deterministic across runs and
+    # submit-inclusive (first token can never precede submit).
+    assert [h.ttft_s for h in a] == [h.ttft_s for h in b]
+    assert [h.finish_s for h in a] == [h.finish_s for h in b]
+    for h in a:
+        assert h.first_token_s >= h.submit_s
+        assert h.finish_s >= h.first_token_s
+        assert np.isfinite(h.ttft_s) and h.ttft_s >= 0.0
+
+
+def test_generate_qos_kwarg(engine_factory, serving_setup):
+    cfg, _ = serving_setup
+    eng = engine_factory("fp16", max_slots=2)
+    toks = np.stack([_prompt(cfg, 8, i) for i in range(2)], 0)
+    out, ttft, _ = eng.generate({"tokens": toks}, 3, qos="premium",
+                                deadline_ms=10_000.0)
+    assert out.shape == (2, 3) and ttft >= 0.0
