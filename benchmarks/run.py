@@ -28,10 +28,10 @@ def main() -> None:
         rows.append((name, us_per_call, derived))
         print(f"{name},{us_per_call:.1f},{derived}")
 
-    from benchmarks import (activation_ratio, demotion_curve, kernels_bench,
-                            kv_reuse, prompt_scaling, quality, serving_perf,
-                            serving_sim, slo_serving, spec_decode,
-                            workload_shift)
+    from benchmarks import (activation_ratio, demotion_curve, ep_scaling,
+                            kernels_bench, kv_reuse, prompt_scaling, quality,
+                            serving_perf, serving_sim, slo_serving,
+                            spec_decode, workload_shift)
     suites = [
         ("activation_ratio", activation_ratio.run),
         ("workload_shift", workload_shift.run),
@@ -41,6 +41,7 @@ def main() -> None:
         ("serving_perf", serving_perf.run),
         ("slo_serving", slo_serving.run),
         ("kv_reuse", kv_reuse.run),
+        ("ep_scaling", ep_scaling.run),
         ("spec_decode", spec_decode.run),
         ("prompt_scaling", prompt_scaling.run),
         ("kernels", kernels_bench.run),

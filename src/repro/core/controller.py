@@ -18,7 +18,9 @@ from repro.core.budget import BudgetTracker, plan_budget
 from repro.core.hotness import HotnessEstimator
 from repro.core.policy import PolicyConfig, select_hi_set
 from repro.core.transitions import TransitionManager
-from repro.core.ver import ExpertBankQ, build_bank, expert_hi_nbytes
+from repro.core.ver import (ExpertBankQ, Residency, build_bank,
+                            expert_hi_nbytes, swap_expert_rows,
+                            swap_router_cols)
 
 
 @dataclasses.dataclass
@@ -30,14 +32,26 @@ class ControllerConfig:
     max_transitions_per_layer: int = 0
 
 
+@dataclasses.dataclass
+class RebalanceConfig:
+    """Cadence/thresholds for the EP expert-ownership rebalancer."""
+    interval_s: float = 2.0             # coordinator window
+    skew_threshold: float = 1.5         # max/min shard hotness ratio trigger
+    max_migrations_per_window: int = 2  # per MoE position
+
+
 class DynaExqController:
     def __init__(self, bank: ExpertBankQ, host_hi: Dict[str, np.ndarray],
                  n_hi_per_layer: int, hi_bytes_per_expert: int,
-                 cfg: Optional[ControllerConfig] = None, tracker=None):
+                 cfg: Optional[ControllerConfig] = None, tracker=None,
+                 ep_shards: int = 1, shard_trackers=None):
         """``tracker``: optional byte-reservation ledger (e.g. an
         account-scoped ``BudgetView`` of a serving engine's shared HBM
         envelope, so promotions contend with KV-cache admission); defaults
-        to a private tracker capped at the hi pool's own size."""
+        to a private tracker capped at the hi pool's own size.
+        ``ep_shards``/``shard_trackers``: expert-parallel serving — the hi
+        pool's slots are owned per shard and each shard's promotions bill
+        its own local-HBM tracker (see ``TransitionManager``)."""
         # A dataclass default instance would be shared (and mutated) across
         # every controller; each controller gets its own config.
         cfg = cfg if cfg is not None else ControllerConfig()
@@ -51,7 +65,8 @@ class DynaExqController:
             BudgetTracker(n_hi_per_layer * L * hi_bytes_per_expert)
         self.tm = TransitionManager(
             bank, host_hi, self.tracker, hi_bytes_per_expert,
-            migration_bytes_per_window=cfg.migration_bytes_per_window)
+            migration_bytes_per_window=cfg.migration_bytes_per_window,
+            n_shards=ep_shards, shard_trackers=shard_trackers)
         self._last_update = time.monotonic()
 
     @property
@@ -93,3 +108,139 @@ class DynaExqController:
         # Anything still deferred (budget) is retried once after publish.
         self.tm.drain()
         self.tm.publish_ready(wait=True)
+
+
+class EPCoordinator:
+    """Hotness-aware expert-ownership rebalancer for expert-parallel serving.
+
+    Shard ``j`` of the model axis owns expert positions
+    ``[j·E/n, (j+1)·E/n)`` — the bank's lo/hi leaves are sharded along the
+    expert/slot dims, so position IS placement. When traffic skews hot onto
+    one shard, that shard's local hi-slot budget saturates while others idle.
+    The coordinator periodically reads the folded per-shard hotness (the
+    per-expert counts are psum'd across every token shard inside the MoE
+    body — that psum is the "all-gather" of per-shard counters; the
+    host-side fold here sees the global view each shard would) and migrates
+    expert *ownership* by relabeling: swap the hottest expert on the
+    most-loaded shard with the coldest on the least-loaded one. A relabel
+    swaps the pair's router columns, lo rows, host-hi rows and hotness
+    history; the forward function is invariant under it (the router swap
+    compensates the weight swap), so it applies between engine steps through
+    the existing stable handles with no forward-pass glitch. Both experts
+    must be RESIDENT_LO — hi residents are demoted (and their slots drained)
+    first, since their hi slots live in shard-local HBM and cannot move.
+    """
+
+    def __init__(self, n_shards: int, cfg: Optional[RebalanceConfig] = None):
+        if n_shards < 1:
+            raise ValueError("n_shards must be >= 1")
+        self.n_shards = n_shards
+        self.cfg = cfg if cfg is not None else RebalanceConfig()
+        self._entries = []   # (controller, moe_params dict, placement (L,E))
+        self.stats = {"migrations": 0, "windows": 0, "bytes_moved": 0}
+        self._last = time.monotonic()
+
+    def register(self, ctl: DynaExqController, moe_params: Dict) -> None:
+        """Track one MoE position: its controller and the live params dict
+        holding the ``router`` leaf (mutated in place on migration)."""
+        L, E = ctl.tm.state.shape
+        if E % self.n_shards:
+            raise ValueError(f"E={E} not divisible by n_shards={self.n_shards}")
+        placement = np.tile(np.arange(E), (L, 1))   # position → original expert
+        self._entries.append((ctl, moe_params, placement))
+
+    # -- policy ----------------------------------------------------------
+    def shard_loads(self, scores_row: np.ndarray) -> np.ndarray:
+        """(E,) per-expert hotness → (n_shards,) per-shard load."""
+        return scores_row.reshape(self.n_shards, -1).sum(axis=1)
+
+    def maybe_rebalance(self, now: Optional[float] = None,
+                        force: bool = False) -> int:
+        now = now if now is not None else time.monotonic()
+        if not force and now - self._last < self.cfg.interval_s:
+            return 0
+        self._last = now
+        return self.rebalance()
+
+    def rebalance(self) -> int:
+        """One coordinator window: per layer, swap hottest-on-max-shard with
+        coldest-on-min-shard while the skew ratio exceeds the threshold."""
+        self.stats["windows"] += 1
+        if self.n_shards < 2:
+            return 0
+        total = 0
+        for ctl, moe_params, placement in self._entries:
+            # Unfolded EMA + counts accumulated since the last fold: the
+            # freshest global view without perturbing the fold cadence.
+            hot = ctl.hotness.scores + ctl.hotness.counts
+            L, E = hot.shape
+            e_per = E // self.n_shards
+            moved = 0
+            for l in range(L):
+                while moved < self.cfg.max_migrations_per_window:
+                    loads = self.shard_loads(hot[l])
+                    donor = int(loads.argmax())
+                    recv = int(loads.argmin())
+                    if donor == recv or loads[donor] <= \
+                            self.cfg.skew_threshold * max(loads[recv], 1e-9):
+                        break
+                    d0, r0 = donor * e_per, recv * e_per
+                    e = d0 + int(hot[l, d0:d0 + e_per].argmax())
+                    f = r0 + int(hot[l, r0:r0 + e_per].argmin())
+                    if hot[l, e] <= hot[l, f]:
+                        break
+                    # Admit the swap only if it strictly shrinks the max
+                    # shard load: monotone descent terminates, and a single
+                    # red-hot expert can never ping-pong between shards
+                    # within one window (donor→recv then straight back).
+                    delta = hot[l, e] - hot[l, f]
+                    if max(loads[donor] - delta, loads[recv] + delta) >= \
+                            loads[donor]:
+                        break
+                    if not self._migrate(ctl, moe_params, placement, l, e, f):
+                        break
+                    hot[l, [e, f]] = hot[l, [f, e]]
+                    moved += 1
+                    total += 1
+        self.stats["migrations"] += total
+        return total
+
+    # -- mechanism -------------------------------------------------------
+    def _migrate(self, ctl: DynaExqController, moe_params: Dict,
+                 placement: np.ndarray, l: int, e: int, f: int) -> bool:
+        """Relabel experts ``e`` and ``f`` at layer ``l``. Returns False if
+        either side could not be brought to RESIDENT_LO (in-flight
+        promotion) — the pair is retried at the next window."""
+        tm = ctl.tm
+        lo_val = Residency.RESIDENT_LO.value
+        if tm.state[l, e] != lo_val or tm.state[l, f] != lo_val:
+            tm.request_demotion(l, e)
+            tm.request_demotion(l, f)
+            tm.drain()
+            tm.publish_ready(wait=True)
+        if tm.state[l, e] != lo_val or tm.state[l, f] != lo_val:
+            return False
+        bank = ctl.bank
+        li, ei, fi = np.int32(l), np.int32(e), np.int32(f)
+        moved = 0
+        for name, qt in bank.lo.items():
+            packed = swap_expert_rows(qt.packed, li, ei, fi)
+            scales = swap_expert_rows(qt.scales, li, ei, fi)
+            bank.lo[name] = dataclasses.replace(qt, packed=packed,
+                                                scales=scales)
+            moved += (packed.nbytes + scales.nbytes) // (packed.shape[0] *
+                                                         packed.shape[1])
+        moe_params["router"] = swap_router_cols(moe_params["router"],
+                                                li, ei, fi)
+        for name, arr in tm.host_hi.items():
+            if not arr.flags.writeable:
+                # np.asarray over a device array yields a read-only view;
+                # the first migration takes the one-time writable copy.
+                arr = arr.copy()
+                tm.host_hi[name] = arr
+            arr[l, [e, f]] = arr[l, [f, e]]
+        ctl.hotness.swap(l, e, f)
+        placement[l, [e, f]] = placement[l, [f, e]]
+        # Both directions of the pairwise exchange cross the interconnect.
+        self.stats["bytes_moved"] += 2 * moved
+        return True

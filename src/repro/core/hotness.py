@@ -52,3 +52,9 @@ class HotnessEstimator:
         self.counts[:] = 0
         self.intervals += 1
         return self.scores
+
+    def swap(self, layer: int, e: int, f: int) -> None:
+        """Relabel two experts at ``layer`` (EP ownership migration swaps
+        positions everywhere — the EMA history must follow its expert)."""
+        self.scores[layer, [e, f]] = self.scores[layer, [f, e]]
+        self.counts[layer, [e, f]] = self.counts[layer, [f, e]]

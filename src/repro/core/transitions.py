@@ -22,14 +22,14 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Dict, List
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.budget import BudgetTracker
-from repro.core.pools import SlotPool
+from repro.core.pools import ShardedSlotPool
 from repro.core.ver import ExpertBankQ, Residency, write_hi_slot
 
 
@@ -51,17 +51,31 @@ class TransitionManager:
                  host_hi: Dict[str, np.ndarray],
                  tracker: BudgetTracker,
                  hi_bytes_per_expert: int,
-                 migration_bytes_per_window: int = 0):
+                 migration_bytes_per_window: int = 0,
+                 n_shards: int = 1,
+                 shard_trackers: Optional[Sequence[BudgetTracker]] = None):
         """``host_hi``: name → (L, E, K, N) host copies of the hi tier (the
         paper's pre-packed pinned-host source). ``migration_bytes_per_window``
-        0 = unlimited."""
+        0 = unlimited. Under expert parallelism (``n_shards > 1``) the hi
+        pool's slot dim is sharded: expert ``e`` lives on shard
+        ``e // (E/n_shards)`` and may only occupy that shard's slots;
+        ``shard_trackers`` (one per shard) price each shard's hi slots
+        against its LOCAL HBM — without them all shards bill ``tracker``."""
         self.bank = bank
         self.host_hi = host_hi
         self.tracker = tracker
         self.hi_bytes = hi_bytes_per_expert
         self.rate_limit = migration_bytes_per_window
         L, n_hi = bank.slot_owner.shape
-        self.pools = [SlotPool(n_hi) for _ in range(L)]
+        E = bank.num_experts
+        if n_shards > 1 and E % n_shards:
+            raise ValueError(f"num_experts={E} not divisible by n_shards={n_shards}")
+        if shard_trackers is not None and len(shard_trackers) != n_shards:
+            raise ValueError("need one shard tracker per shard")
+        self.n_shards = n_shards
+        self.e_per_shard = E // n_shards
+        self.shard_trackers = list(shard_trackers) if shard_trackers else None
+        self.pools = [ShardedSlotPool(n_hi, n_shards) for _ in range(L)]
         self.state = np.full((L, bank.num_experts), Residency.RESIDENT_LO.value,
                              np.int8)
         self.update_q: deque[tuple[int, int]] = deque()
@@ -73,6 +87,13 @@ class TransitionManager:
         self.slot_owner_h = np.asarray(bank.slot_owner).copy()
         self.stats = {"promoted": 0, "demoted": 0, "deferred": 0,
                       "bytes_moved": 0}
+
+    # -- shard plumbing ---------------------------------------------------
+    def shard_of_expert(self, expert: int) -> int:
+        return expert // self.e_per_shard
+
+    def _tracker_for(self, shard: int) -> BudgetTracker:
+        return self.shard_trackers[shard] if self.shard_trackers else self.tracker
 
     # -- queue side ------------------------------------------------------
     def request_promotion(self, layer: int, expert: int) -> None:
@@ -102,11 +123,13 @@ class TransitionManager:
             if self.rate_limit and window_bytes + self.hi_bytes > self.rate_limit:
                 deferred.append((l, e))
                 continue
-            if self.pools[l].n_free == 0 or not self.tracker.try_reserve(self.hi_bytes):
+            shard = self.shard_of_expert(e)
+            if (self.pools[l].n_free_in(shard) == 0
+                    or not self._tracker_for(shard).try_reserve(self.hi_bytes)):
                 deferred.append((l, e))   # backpressure: stay queued
                 self.stats["deferred"] += 1
                 continue
-            slot = self.pools[l].alloc(e)
+            slot = self.pools[l].alloc(e, shard)
             self._issue_copy(l, e, slot)
             window_bytes += self.hi_bytes
         self.update_q = deferred
@@ -131,7 +154,8 @@ class TransitionManager:
         if slot >= 0:
             self.slot_owner_h[layer, slot] = -1
             self.pools[layer].free(slot)
-            self.tracker.release(self.hi_bytes)
+            self._tracker_for(self.pools[layer].shard_of(slot)).release(
+                self.hi_bytes)
         self.state[layer, expert] = Residency.RESIDENT_LO.value
         self.stats["demoted"] += 1
 
@@ -163,7 +187,8 @@ class TransitionManager:
             else:
                 # Demoted while promoting — reclaim without publishing.
                 self.pools[p.layer].free(p.slot)
-                self.tracker.release(p.nbytes)
+                self._tracker_for(self.pools[p.layer].shard_of(p.slot)).release(
+                    p.nbytes)
                 self.state[p.layer, p.expert] = Residency.RESIDENT_LO.value
         self._pending = still
         self._flush_maps()
@@ -188,17 +213,29 @@ class TransitionManager:
         resolves to a slot owned by that expert; budget counts match."""
         L, E = self.slot_map_h.shape
         n_used = 0
+        used_shard = np.zeros(self.n_shards, np.int64)
         for l in range(L):
             for e in range(E):
                 s = self.slot_map_h[l, e]
                 if s >= 0:
                     assert self.slot_owner_h[l, s] == e, (l, e, s)
+                    # sharded placement: expert's slot lives on its shard
+                    assert self.pools[l].shard_of(s) == self.shard_of_expert(e), \
+                        (l, e, s)
                     n_used += 1
+                    used_shard[self.shard_of_expert(e)] += 1
         owners = (self.slot_owner_h >= 0).sum()
         assert owners == n_used, (owners, n_used)
         in_flight = len(self._pending)
-        assert self.tracker.used == (n_used + in_flight) * self.hi_bytes, \
-            (self.tracker.used, n_used, in_flight)
+        for p in self._pending:
+            used_shard[self.pools[p.layer].shard_of(p.slot)] += 1
+        if self.shard_trackers:
+            for j, trk in enumerate(self.shard_trackers):
+                assert trk.used == used_shard[j] * self.hi_bytes, \
+                    (j, trk.used, used_shard[j])
+        else:
+            assert self.tracker.used == (n_used + in_flight) * self.hi_bytes, \
+                (self.tracker.used, n_used, in_flight)
 
 
 def _is_ready(arr) -> bool:

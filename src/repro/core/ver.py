@@ -162,6 +162,30 @@ def write_hi_slot(hi_leaf: jax.Array, layer: jax.Array, slot: jax.Array,
 
 
 @jax.jit
+def swap_expert_rows(leaf: jax.Array, layer: jax.Array, e: jax.Array,
+                     f: jax.Array) -> jax.Array:
+    """Swap experts ``e`` and ``f`` at one layer of an (L, E, ...) leaf.
+
+    This is the device half of expert-ownership migration under expert
+    parallelism: "expert id" IS the position in every bank/router array, so
+    moving an expert to another shard relabels the pair — swap the lo rows
+    (this helper), the router columns (``swap_router_cols``), and the host
+    mirrors; the forward pass is invariant and needs no changes."""
+    a, b = leaf[layer, e], leaf[layer, f]
+    return leaf.at[layer, e].set(b).at[layer, f].set(a)
+
+
+@jax.jit
+def swap_router_cols(router: jax.Array, layer: jax.Array, e: jax.Array,
+                     f: jax.Array) -> jax.Array:
+    """Swap two expert columns of an (L, d_model, E) router at ``layer`` —
+    the compensating half of relabeling migration: tokens that routed to
+    position ``e`` now route to ``f`` (which holds the same weights)."""
+    a, b = router[layer, :, e], router[layer, :, f]
+    return router.at[layer, :, e].set(b).at[layer, :, f].set(a)
+
+
+@jax.jit
 def publish(slot_map: jax.Array, slot_owner: jax.Array, layer: jax.Array,
             expert: jax.Array, slot: jax.Array):
     """Atomically publish expert→slot (promotion). slot = −1 demotes: the

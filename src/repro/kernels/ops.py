@@ -27,6 +27,7 @@ callers that need a pinned backend pass ``backend=``/``gemm=`` explicitly.
 """
 from __future__ import annotations
 
+import math
 import os
 from functools import partial
 
@@ -125,6 +126,39 @@ def ragged_quant_ffn_op(xs: jax.Array, tile_eid: jax.Array,
         None if n_hi == 0 else hi["w_down"],
         bits=bits, group=group, bm=bm,
         interpret=_interpret_default())
+
+
+def ragged_dense_ffn_op(xs: jax.Array, tile_eid: jax.Array, bank: dict,
+                        *, bm: int, backend: str | None = None) -> jax.Array:
+    """Ragged DENSE expert FFN dispatcher (fp16/offload banks — no
+    quantized tier to fall back on, so inactive experts are skipped by the
+    tile map alone). ``bank``: {'w_gate','w_up','w_down'} → (E, K, N).
+    The Pallas backend reuses the fused mixed-precision kernel in all-hi
+    mode — every tile reads its expert's dense weights through the hi-pool
+    operand while a placeholder lo tier holds one zero expert and is never
+    streamed (the per-tile DMA hold maps pin it to block 0). Falls back to
+    the jnp oracle when the kernel's tiling constraints reject the shapes.
+    Returns (Tt·bm, D)."""
+    be = backend if backend is not None else moe_gemm_backend()
+    w_gate, w_up, w_down = bank["w_gate"], bank["w_up"], bank["w_down"]
+    if be == "pallas":
+        K, F = w_gate.shape[1], w_gate.shape[2]
+        group = math.gcd(math.gcd(K, F), 64)
+        zero_lo = lambda k, n: (jnp.zeros((1, k, n), jnp.uint8),
+                                jnp.zeros((1, k // group, n), w_gate.dtype))
+        gp, gs = zero_lo(K, F)
+        dp_, ds = zero_lo(F, K)
+        ones = jnp.ones_like(tile_eid)
+        try:
+            return ragged_quant_ffn(
+                xs, jnp.zeros_like(tile_eid), tile_eid, ones,
+                gp, gs, gp, gs, dp_, ds,
+                w_gate, w_up, w_down,
+                bits=8, group=group, bm=bm, interpret=_interpret_default())
+        except ValueError:   # tiling constraints — oracle is always valid
+            pass
+    return _ref.ragged_dense_ffn_ref(xs, tile_eid, w_gate, w_up, w_down,
+                                     bm=bm)
 
 
 @partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))

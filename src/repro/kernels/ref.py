@@ -98,6 +98,25 @@ def ragged_quant_ffn_ref(xs: jax.Array, tile_eid: jax.Array,
     return y.reshape(Tt * bm, y.shape[-1])
 
 
+def ragged_dense_ffn_ref(xs: jax.Array, tile_eid: jax.Array,
+                         w_gate: jax.Array, w_up: jax.Array,
+                         w_down: jax.Array, *, bm: int) -> jax.Array:
+    """jnp oracle for the ragged DENSE expert FFN (fp16/offload banks with
+    no quantized tier): same bm-aligned layout and tile→expert map as
+    ``ragged_quant_ffn_ref``, but every tile reads its expert's dense
+    weights — inactive experts still never stream. Per-tile math matches
+    the padded dense body (and the quant path's hi overlay) einsum for
+    einsum, so the two layouts stay bit-identical per token."""
+    Tt = tile_eid.shape[0]
+    K = xs.shape[1]
+    xt = xs.reshape(Tt, bm, K)
+    h = jax.nn.silu(jnp.einsum("tbd,tdf->tbf", xt, w_gate[tile_eid])
+                    .astype(jnp.float32)).astype(xt.dtype)
+    h = h * jnp.einsum("tbd,tdf->tbf", xt, w_up[tile_eid])
+    y = jnp.einsum("tbf,tfd->tbd", h, w_down[tile_eid])
+    return y.reshape(Tt * bm, y.shape[-1])
+
+
 def flash_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                      valid: jax.Array) -> jax.Array:
     """q: (B, H, hd); k/v: (B, S, Hkv, hd); valid: (B, S) bool → (B, H, hd)."""

@@ -26,10 +26,38 @@ class DistContext:
     dp_axes: Tuple[str, ...]      # ('pod', 'data') or ('data',)
     model_axis: str = "model"
     tokens_dp_sharded: bool = True   # False for batch-1 long-context decode
+    # Expert-parallel serving mode: tokens shard over dp_axes AND the model
+    # axis (every device owns T/n_token_shards tokens plus E/model_size
+    # experts), and the MoE layer runs the ragged all-to-all pipeline —
+    # route locally, exchange compacted rows to the owning expert shard,
+    # compute with the shard's resident tier, exchange results back. See
+    # ``models.moe._moe_local_ep``.
+    tokens_ep_sharded: bool = False
 
     @property
     def model_size(self) -> int:
         return self.mesh.shape[self.model_axis]
+
+    @property
+    def dp_size(self) -> int:
+        n = 1
+        for a in self.dp_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    @property
+    def n_token_shards(self) -> int:
+        """Shards the token dim splits over (EP: data × model; else data)."""
+        return self.dp_size * (self.model_size if self.tokens_ep_sharded
+                               else 1)
+
+
+def ep_context(mesh, model_axis: str = "model") -> DistContext:
+    """Expert-parallel serving context over ``mesh``: every non-model axis
+    data-shards tokens, the model axis owns experts AND a token slice."""
+    dp = tuple(a for a in mesh.axis_names if a != model_axis)
+    return DistContext(mesh=mesh, dp_axes=dp, model_axis=model_axis,
+                       tokens_dp_sharded=True, tokens_ep_sharded=True)
 
 
 def get_dist() -> Optional[DistContext]:

@@ -19,6 +19,13 @@ def make_debug_mesh(n_data: int = 2, n_model: int = 2):
     return jax.make_mesh((n_data, n_model), ("data", "model"))
 
 
+def make_ep_mesh(n_shards: int, n_data: int = 1):
+    """Expert-parallel serving mesh: ``n_shards`` devices on the model axis
+    each own E/n_shards experts (and, under ``DistContext.tokens_ep_sharded``,
+    a token slice); an optional data axis replicates the expert layout."""
+    return jax.make_mesh((n_data, n_shards), ("data", "model"))
+
+
 def data_axes(mesh) -> tuple:
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
 

@@ -14,6 +14,8 @@ import jax
 
 from repro.configs import ARCH_IDS, get_config
 from repro.core import ControllerConfig
+from repro.launch.dist import ep_context
+from repro.launch.mesh import make_ep_mesh
 from repro.models import init_params
 from repro.serving import (BACKENDS, EngineConfig, InferenceEngine,
                            OffloadConfig, Request, SamplingParams,
@@ -28,7 +30,8 @@ def build_backend(args):
             "dynaexq", lo_bits=args.lo_bits,
             n_hi_per_layer=None if args.hbm_gb else args.n_hi,
             hbm_gb=args.hbm_gb,
-            controller=ControllerConfig(update_interval_s=0.25))
+            controller=ControllerConfig(update_interval_s=0.25),
+            ep_shards=args.ep_shards)
     if args.backend == "static":
         return make_backend("static", lo_bits=args.lo_bits)
     if args.backend == "offload":
@@ -100,12 +103,29 @@ def main():
                          "chunked prefills interleaved with decode "
                          "(0 = single-shot; rounded down to a "
                          "block-aligned prefill bucket)")
+    ap.add_argument("--ep-shards", type=int, default=1,
+                    help="expert-parallel serving over this many devices: "
+                         "tokens and experts shard over the model axis, MoE "
+                         "layers run the ragged all-to-all pipeline, and "
+                         "the dynaexq hi pool splits into per-shard slot "
+                         "ranges with per-shard budgets (requires "
+                         "num_experts and --n-hi divisible by the shard "
+                         "count; 1 = single-device)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=not args.full)
     spec_k = 0 if args.no_spec else max(0, args.spec_k)
+    dist = None
+    if args.ep_shards > 1:
+        if args.ep_shards > jax.device_count():
+            raise SystemExit(
+                f"--ep-shards {args.ep_shards} > visible devices "
+                f"{jax.device_count()} (set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count=N to emulate)")
+        dist = ep_context(make_ep_mesh(args.ep_shards))
     print(f"[serve] {cfg.name} backend={args.backend} "
-          f"devices={jax.device_count()} spec_k={spec_k}")
+          f"devices={jax.device_count()} spec_k={spec_k} "
+          f"ep_shards={args.ep_shards}")
     params = init_params(jax.random.PRNGKey(0), cfg)
     engine = InferenceEngine(
         cfg, params, build_backend(args),
@@ -122,7 +142,8 @@ def main():
                      scheduler=SchedulerConfig(
                          qos_default=args.qos_default,
                          shed_policy=args.shed_policy,
-                         prefill_chunk=args.prefill_chunk)))
+                         prefill_chunk=args.prefill_chunk)),
+        dist=dist)
     toks = make_prompts(args.workload, cfg.vocab_size,
                         args.batch, args.prompt_len)
     use_sampling = (args.temperature > 0 or args.top_k is not None or

@@ -20,14 +20,19 @@ Two dispatch layouts, selected per call (``dispatch=``, default from
 Execution regimes:
 
 * Single device (tests, CPU serving, benchmarks): both layouts available.
-* Distributed (dry-run / launcher, via ``repro.launch.dist``): the padded
-  body runs inside ``shard_map`` — each data shard routes its own tokens,
-  each model shard computes only its local E/n experts
-  (``e_offset``/``e_local``), and the partial token outputs reduce with a
-  single psum over the model axis. This is the formulation GSPMD cannot
-  derive on its own (data-dependent sort/scatter) and the reason dispatch is
-  explicit here. (Ragged is single-device for now; the sharded mesh keeps
-  the padded body.)
+* Distributed (via ``repro.launch.dist``): inside ``shard_map``, two
+  regimes. The padded body — each data shard routes its own tokens, each
+  model shard computes only its local E/n experts
+  (``e_offset``/``e_local``), partial token outputs reduce with a single
+  psum over the model axis. And the first-class expert-parallel serving
+  path (``DistContext.tokens_ep_sharded`` + ragged dispatch): tokens shard
+  over data AND model axes, each shard compacts its kept assignments per
+  destination expert-shard and exchanges a statically-bounded bm-aligned
+  payload with one ``lax.all_to_all`` each way, so per-MoE-layer
+  interconnect bytes scale with the payload budget ``ep_payload_rows``
+  instead of the full activation psum. Both are formulations GSPMD cannot
+  derive on its own (data-dependent sort/scatter) and the reason dispatch
+  is explicit here.
 
 Per-(layer, expert) selection counts — the hotness signal the DynaExq
 scheduler consumes (paper §3.5) — fall out of dispatch for free, as do the
@@ -325,9 +330,9 @@ def ragged_tile_map(counts: jax.Array, bm: int, n_assign: int):
     return astart, tile_eid, n_tiles
 
 
-def _dispatch_ragged(bank: ExpertBankQ, x: jax.Array, idx: jax.Array,
-                     gates: jax.Array, e_local: int, capacity: int,
-                     row_capacity: Optional[int] = None,
+def _dispatch_ragged(bank: Union[Dict, ExpertBankQ], x: jax.Array,
+                     idx: jax.Array, gates: jax.Array, e_local: int,
+                     capacity: int, row_capacity: Optional[int] = None,
                      n_rows: Optional[int] = None,
                      gemm: Optional[str] = None):
     """Padding-free ragged dispatch + ONE fused mixed-precision kernel.
@@ -341,9 +346,11 @@ def _dispatch_ragged(bank: ExpertBankQ, x: jax.Array, idx: jax.Array,
     step; per tile the kernel streams the expert's resident tier only (hi
     slot derived from ``slot_owner`` — the same stable handles the padded
     overlay scatters through, so an all-lo draft bank stays all-lo here
-    too). Dropped-by-capacity assignments still occupy compact rows (the
-    layout depends only on routing) but are zeroed at combine, exactly
-    like the padded path never computing them.
+    too). A dense dict bank (fp16/offload serving, which has no quantized
+    tier) takes the same layout through ``ragged_dense_ffn_op``: inactive
+    experts still skip their weight reads. Dropped-by-capacity assignments
+    still occupy compact rows (the layout depends only on routing) but are
+    zeroed at combine, exactly like the padded path never computing them.
 
     Returns (y (T, D), counts (E,), dropped, pad_ratio)."""
     T, d = x.shape
@@ -359,23 +366,27 @@ def _dispatch_ragged(bank: ExpertBankQ, x: jax.Array, idx: jax.Array,
                        astart[safe_e] + pos_in_e, R)        # sentinel → drop
     xs = jnp.zeros((R, d), x.dtype).at[rowpos].set(x[tok], mode="drop")
 
-    # Stable handles: expert → hi slot derived from slot_owner (NOT
-    # slot_map), matching the padded overlay's semantics — a draft bank
-    # that disowns every slot is all-lo under both layouts.
-    owner = bank.slot_owner                                  # (n_hi,)
-    n_hi = owner.shape[0]
-    if n_hi > 0:
-        eff_map = jnp.full((e_local + 1,), -1, jnp.int32).at[
-            jnp.where(owner >= 0, owner, e_local)].set(
-            jnp.arange(n_hi, dtype=jnp.int32), mode="drop")[:e_local]
-        tile_slot = eff_map[tile_eid]
-    else:
-        tile_slot = jnp.full_like(tile_eid, -1)
+    if isinstance(bank, ExpertBankQ):
+        # Stable handles: expert → hi slot derived from slot_owner (NOT
+        # slot_map), matching the padded overlay's semantics — a draft bank
+        # that disowns every slot is all-lo under both layouts.
+        owner = bank.slot_owner                              # (n_hi,)
+        n_hi = owner.shape[0]
+        if n_hi > 0:
+            eff_map = jnp.full((e_local + 1,), -1, jnp.int32).at[
+                jnp.where(owner >= 0, owner, e_local)].set(
+                jnp.arange(n_hi, dtype=jnp.int32), mode="drop")[:e_local]
+            tile_slot = eff_map[tile_eid]
+        else:
+            tile_slot = jnp.full_like(tile_eid, -1)
 
-    y_rows = kops.ragged_quant_ffn_op(
-        xs, tile_eid, tile_slot, bank.lo, bank.hi if n_hi else None,
-        bits=bank.lo["w_gate"].bits, group=bank.lo["w_gate"].group_size,
-        bm=bm, backend=gemm)
+        y_rows = kops.ragged_quant_ffn_op(
+            xs, tile_eid, tile_slot, bank.lo, bank.hi if n_hi else None,
+            bits=bank.lo["w_gate"].bits, group=bank.lo["w_gate"].group_size,
+            bm=bm, backend=gemm)
+    else:
+        y_rows = kops.ragged_dense_ffn_op(xs, tile_eid, bank, bm=bm,
+                                          backend=gemm)
 
     y_asn = y_rows[jnp.minimum(rowpos, R - 1)]
     gate_sorted = gates.reshape(-1)[order].astype(x.dtype)
@@ -422,10 +433,11 @@ def _moe_local(params: Dict, bank, x: jax.Array, cfg: MoEConfig,
         # surviving assignments on one expert) — overflow-free, so drops
         # come from the row rule alone.
         capacity = n_rows * row_capacity
-    # Ragged layout: single-device quantized serving path only — sharded
-    # meshes (traced e_offset / sliced slots / FF-split experts) and the
-    # dense training bank keep the padded reference body.
-    use_ragged = (dispatch == "ragged" and isinstance(bank, ExpertBankQ)
+    # Ragged layout: full-expert-range bodies only — shifted expert windows
+    # (traced e_offset), sliced slot pools, and FF-split experts keep the
+    # padded reference body. Quantized AND dense dict banks both qualify
+    # (the dense variant routes through ``ragged_dense_ffn_op``).
+    use_ragged = (dispatch == "ragged"
                   and isinstance(e_offset, int) and e_offset == 0
                   and n_slot_local is None and ff_axis is None)
     if use_ragged:
@@ -494,7 +506,9 @@ def moe_apply(params: Dict, bank: Union[Dict, ExpertBankQ], x: jax.Array,
     dist = _get_dist()
     if dist is not None:
         return _moe_apply_sharded(params, bank, x, cfg, capacity, dist,
-                                  token_valid=token_valid)
+                                  token_valid=token_valid, n_rows=n_rows,
+                                  row_capacity=row_capacity,
+                                  dispatch=dispatch, gemm=gemm)
     if dispatch is None:
         dispatch = kops.moe_dispatch_default()
     y, counts, _full, aux_loss, dropped, row_counts, active, padr = \
@@ -517,13 +531,39 @@ def _get_dist():
 
 
 def _moe_apply_sharded(params, bank, x, cfg: MoEConfig, capacity, dist,
-                       token_valid=None):
+                       token_valid=None, n_rows=None, row_capacity=None,
+                       dispatch=None, gemm=None):
     """shard_map expert parallelism (see module docstring).
 
+    Two sharded regimes, chosen statically at trace time:
+
+    * **EP ragged** (``dist.tokens_ep_sharded`` + ragged dispatch): tokens
+      shard over the data AND model axes (every device owns a token slice
+      plus its E/n experts). Each shard routes its local tokens, compacts
+      the kept assignments per destination expert-shard (the stable
+      sort-by-expert already groups destinations contiguously), exchanges a
+      statically-bounded bm-aligned payload with ONE ``all_to_all`` each
+      way (per-(dest, expert) counts ride a second tiny one), runs the
+      grouped ragged kernel on its local experts at their resident tier
+      (local hi-slot slice), and combines with the router gates back on the
+      sender — the same per-token scatter-add order and dtype as the
+      single-device ragged path, so drop-free regimes (decode, and any
+      ``row_capacity`` run) are bit-identical per token. When the global
+      per-expert ``capacity`` binds, drops apply per (expert, sender) at
+      ``ep_cap_shard`` — the same 1/n slicing the padded dp body already
+      does — so heavy prefill overflow degrades the same way it always has.
+    * **padded** (everything else): each data shard routes its own tokens,
+      each model shard computes its local experts into the fixed (E, C, d)
+      buffer, partial outputs psum over the model axis. The reference — and
+      the fallback whenever the EP layout can't hold statically (tokens not
+      divisible over the token shards, unsharded hi pool, padded dispatch).
+
     ``token_valid`` shards alongside ``x`` and masks dispatch exactly like
-    the single-device path. Per-row counts are not produced here (rows are
-    dp-sharded; the serving engine is single-device) — ``row_counts`` stays
-    ``None``.
+    the single-device path. ``n_rows`` produces ``MoEAux.row_counts`` with
+    the row dim sharded like the tokens (EP: data×model; padded: data when
+    the rows divide, else replicated) — the engine's hotness/telemetry
+    signal no longer goes dark under a mesh. ``row_capacity`` keeps its
+    per-row drop rule exactly: rows never straddle a token shard.
 
     The bank is decomposed into plain dicts around the shard_map boundary
     (PartitionSpec trees must structurally match the args; custom pytree
@@ -542,13 +582,20 @@ def _moe_apply_sharded(params, bank, x, cfg: MoEConfig, capacity, dist,
     mesh = dist.mesh
     mn = dist.model_size
     E = cfg.num_experts
+    k = cfg.top_k
+    T = x.shape[0]
+    if dispatch is None:
+        dispatch = kops.moe_dispatch_default()
     if E % mn:
         # Cannot expert-shard — run replicated (noted by the planner).
-        y, counts, _f, aux, dropped, _rc, _a, _p = _moe_local(
-            params, bank, x, cfg, capacity, 0, E, token_valid=token_valid)
+        y, counts, _f, aux, dropped, rc, act, padr = _moe_local(
+            params, bank, x, cfg, capacity, 0, E, token_valid=token_valid,
+            n_rows=n_rows, row_capacity=row_capacity, dispatch=dispatch,
+            gemm=gemm)
         if "shared" in params:
             y = y + swiglu(params["shared"], x)
-        return y, MoEAux(counts, aux, dropped)
+        return y, MoEAux(counts, aux, dropped, row_counts=rc,
+                         active_experts=act, dispatch_pad_ratio=padr)
     e_local = E // mn
     is_q = isinstance(bank, ExpertBankQ)
     n_hi = bank.n_hi if is_q else 0
@@ -558,6 +605,20 @@ def _moe_apply_sharded(params, bank, x, cfg: MoEConfig, capacity, dist,
     dp_n = 1
     for a in dist.dp_axes:
         dp_n *= mesh.shape[a]
+    n_tok = dp_n * mn if dist.tokens_ep_sharded else dp_n
+
+    # ---- EP ragged eligibility (static) ---------------------------------
+    use_ep = (dist.tokens_ep_sharded and dispatch == "ragged"
+              and T % n_tok == 0 and (T // n_tok) > 0
+              and (n_hi == 0 or hi_shard))
+    if row_capacity is not None and n_rows is None:
+        raise ValueError("row_capacity needs n_rows")
+    if use_ep and n_rows is not None:
+        # Rows must tile exactly over the token shards for the per-row
+        # drop rule / row_counts to stay local.
+        use_ep = (T % n_rows == 0 and n_rows % n_tok == 0
+                  and (T // n_tok) % (T // n_rows) == 0)
+
     # capacity was computed for global T and global E; the local shard keeps
     # the same per-expert expectation: T_loc·k·cf / E = capacity / dp_n.
     cap_local = max(8, (capacity // dp_n + 7) // 8 * 8) \
@@ -565,9 +626,10 @@ def _moe_apply_sharded(params, bank, x, cfg: MoEConfig, capacity, dist,
 
     # FF-slice over the idle data axis when tokens are replicated (batch-1
     # long-context decode) and every sliced dim divides: 2-D expert sharding.
-    dp1 = dist.dp_axes if len(dist.dp_axes) > 1 else dist.dp_axes[0]
+    dp1 = None if not dist.dp_axes else \
+        (dist.dp_axes if len(dist.dp_axes) > 1 else dist.dp_axes[0])
     ff_axis = None
-    if is_q and not dist.tokens_dp_sharded and dp_n > 1:
+    if is_q and not dist.tokens_dp_sharded and dp_n > 1 and not use_ep:
         f_dim = bank.lo["w_gate"].packed.shape[-1]
         d_dim = bank.lo["w_down"].packed.shape[-1]
         if f_dim % dp_n == 0 and d_dim % dp_n == 0:
@@ -584,19 +646,19 @@ def _moe_apply_sharded(params, bank, x, cfg: MoEConfig, capacity, dist,
         flat["slot_map"] = bank.slot_map
         meta = {n: (qt.bits, qt.group_size) for n, qt in bank.lo.items()}
 
-        def spec_of(k):
+        def spec_of(kk):
             he = eshard if hi_shard else repl
-            if k.startswith("slot"):
+            if kk.startswith("slot"):
                 return repl
-            base = eshard if k.startswith("lo_") else he
+            base = eshard if kk.startswith("lo_") else he
             if ff_axis is not None:   # slice the last (F or D-out) dim
                 return P(*(tuple(base) + (None,) * (2 - len(tuple(base))) + (dp1,)))
             return base
-        bank_spec = {k: spec_of(k) for k in flat}
+        bank_spec = {kk: spec_of(kk) for kk in flat}
     else:
         flat = dict(bank)
         meta = None
-        bank_spec = {k: eshard for k in flat}
+        bank_spec = {kk: eshard for kk in flat}
 
     def rebuild(flat_l):
         if not is_q:
@@ -609,17 +671,42 @@ def _moe_apply_sharded(params, bank, x, cfg: MoEConfig, capacity, dist,
                            slot_map=flat_l["slot_map"])
 
     params_spec = jax.tree_util.tree_map(lambda _: repl, params)
+
+    if use_ep:
+        return _moe_local_ep(params, flat, rebuild, x, cfg, capacity, dist,
+                             token_valid, n_rows, row_capacity, gemm, mesh,
+                             mn, n_tok, e_local, nh_local, is_q, params_spec,
+                             bank_spec, shard_map, check_kw)
+
     x_spec = P(dist.dp_axes) if dist.tokens_dp_sharded else repl
     tv_spec = None if token_valid is None else x_spec
+
+    # Row split for row_counts / row_capacity: rows follow the tokens, so
+    # they only shard when they tile exactly over the dp shards.
+    rows_split = dist.tokens_dp_sharded and dp_n > 1
+    n_rows_loc = None
+    if n_rows is not None:
+        if not rows_split:
+            n_rows_loc = n_rows
+        elif (T % n_rows == 0 and n_rows % dp_n == 0
+                and (T // dp_n) % (T // n_rows) == 0):
+            n_rows_loc = n_rows // dp_n
+        elif row_capacity is not None:
+            raise ValueError(
+                f"row_capacity requires rows to tile over the {dp_n} data "
+                f"shards (T={T}, n_rows={n_rows})")
+    want_rc = n_rows_loc is not None
+    rc_spec = P(dist.dp_axes, None) if (want_rc and rows_split) else repl
 
     def body(params_l, flat_l, x_l, tv_l):
         j = jax.lax.axis_index(dist.model_axis)
         e_off = j * e_local
         slot_lo = (j * nh_local) if hi_shard else 0
-        y, counts_l, _full, aux, dropped, _rc, _a, _p = _moe_local(
+        y, counts_l, _full, aux, dropped, rc, _a, padr = _moe_local(
             params_l, rebuild(flat_l), x_l, cfg, cap_local, e_off, e_local,
             slot_lo=slot_lo, n_slot_local=nh_local, ff_axis=ff_axis,
-            token_valid=tv_l)
+            token_valid=tv_l, n_rows=n_rows_loc, row_capacity=row_capacity,
+            dispatch=dispatch, gemm=gemm)
         y = jax.lax.psum(y, dist.model_axis)
         if ff_axis is not None:   # y is D-sliced over data: gather (tiny)
             y = jax.lax.all_gather(y, ff_axis, axis=1, tiled=True)
@@ -634,16 +721,207 @@ def _moe_apply_sharded(params, bank, x, cfg: MoEConfig, capacity, dist,
             counts = jax.lax.psum(counts, dist.dp_axes)
             aux = jax.lax.pmean(aux, dist.dp_axes)
             dropped = jax.lax.pmean(dropped, dist.dp_axes)
+            padr = jax.lax.pmean(padr, dist.dp_axes)
         dropped = jax.lax.pmean(dropped, dist.model_axis)
-        return y, counts, aux, dropped
+        padr = jax.lax.pmean(padr, dist.model_axis)
+        if not want_rc:
+            return y, counts, aux, dropped, padr
+        # Each model shard only sees its own experts' assignments — the
+        # psum fills in the rest; rows stay local to their dp shard.
+        rc = jax.lax.psum(rc, dist.model_axis)
+        if not rows_split and dist.dp_axes and dist.tokens_dp_sharded:
+            rc = jax.lax.psum(rc, dist.dp_axes)
+        return y, counts, aux, dropped, padr, rc
 
-    y, counts, aux, dropped = shard_map(
+    out_specs = (x_spec, repl, repl, repl, repl) + \
+        ((rc_spec,) if want_rc else ())
+    res = shard_map(
         body, mesh=mesh,
         in_specs=(params_spec, bank_spec, x_spec, tv_spec),
-        out_specs=(x_spec, repl, repl, repl),
+        out_specs=out_specs,
         **{check_kw: False},
     )(params, flat, x, token_valid)
-    return y, MoEAux(counts=counts, aux_loss=aux, dropped=dropped)
+    y, counts, aux, dropped, padr = res[:5]
+    rc = res[5] if want_rc else None
+    active = jnp.sum((counts > 0).astype(jnp.int32))
+    return y, MoEAux(counts=counts, aux_loss=aux, dropped=dropped,
+                     row_counts=rc, active_experts=active,
+                     dispatch_pad_ratio=padr)
+
+
+def _moe_local_ep(params, flat, rebuild, x, cfg: MoEConfig, capacity, dist,
+                  token_valid, n_rows, row_capacity, gemm, mesh, mn, n_tok,
+                  e_local, nh_local, is_q, params_spec, bank_spec, shard_map,
+                  check_kw):
+    """The EP ragged all-to-all pipeline (see ``_moe_apply_sharded``).
+
+    Wire protocol per shard pair: a (mn·S, d) row payload — block ``s`` of
+    the send buffer holds the rows destined for shard ``s``, bm-aligned
+    budget ``S`` rows each (``ep_payload_rows``) — and an (mn, e_local)
+    count matrix whose row ``s`` says how many of those rows belong to each
+    of shard ``s``'s experts, in expert order. After the exchange the
+    receiver rebuilds per-expert segments with the SAME ``_sort_routing``
+    contract the single-device path compiles (stable by (expert, source,
+    send order)), feeds the grouped kernel, and the result rows ride the
+    inverse route home."""
+    from jax.sharding import PartitionSpec as P
+
+    E, kk = cfg.num_experts, cfg.top_k
+    T, _d = x.shape
+    bm = RAGGED_BM
+    T_l = T // n_tok
+    n_rows_l = None if n_rows is None else n_rows // n_tok
+    cap_shard = None if row_capacity is not None else ep_cap_shard(capacity,
+                                                                   n_tok)
+    S = ep_payload_rows(T, kk, e_local, capacity, n_tok, bm=bm,
+                        n_rows=n_rows, row_capacity=row_capacity)
+    tok_axes = tuple(dist.dp_axes) + (dist.model_axis,)
+    x_spec = P(tok_axes)
+    tv_spec = None if token_valid is None else x_spec
+    want_rc = n_rows is not None
+    repl = P()
+
+    def body(params_l, flat_l, x_l, tv_l):
+        bank_l = rebuild(flat_l)
+        j = jax.lax.axis_index(dist.model_axis)
+        d = x_l.shape[1]
+        gates, idx, probs = route(params_l["router"], x_l, cfg)
+        if tv_l is not None:
+            idx_v = jnp.where(tv_l[:, None], idx, E)
+            gates_v = jnp.where(tv_l[:, None], gates, 0.0)
+        else:
+            idx_v, gates_v = idx, gates
+
+        # -- sender: sort by GLOBAL expert id (= grouped by destination
+        # shard, experts ascending within each destination) and compact the
+        # kept assignments into the per-destination payload blocks.
+        order, sorted_eid, counts_l, pos_in_e, tok = _sort_routing(idx_v, E)
+        kept = _keep_mask(sorted_eid, pos_in_e, tok, E,
+                          cap_shard if cap_shard is not None else 0,
+                          row_capacity, n_rows_l, T_l)
+        dest = jnp.where(sorted_eid < E, sorted_eid // e_local, mn)
+        kept_i = kept.astype(jnp.int32)
+        inc = jnp.cumsum(kept_i)
+        kept_d = jnp.zeros((mn + 1,), jnp.int32).at[dest].add(kept_i)
+        dstart = jnp.cumsum(kept_d) - kept_d
+        offs = inc - 1 - dstart[dest]          # rank among kept, within dest
+        send_row = jnp.where(kept, dest * S + offs, mn * S)  # OOB ⇒ dropped
+        send = jnp.zeros((mn * S, d), x_l.dtype).at[send_row].set(
+            x_l[tok], mode="drop")
+        cnt_send = jnp.zeros((E + 1,), jnp.int32).at[
+            jnp.where(kept, sorted_eid, E)].add(1)[:E].reshape(mn, e_local)
+
+        def a2a(v):
+            return jax.lax.all_to_all(v, dist.model_axis, 0, 0, tiled=True)
+
+        recv = a2a(send)          # (mn·S, d): block s ← source shard s
+        cnt_recv = a2a(cnt_send)  # (mn, e_local): row s ← source shard s
+
+        # -- receiver: per-row local expert id from the count boundaries
+        # (payload rows past a block's total → e_local sentinel), then the
+        # standard ragged compaction over the local experts.
+        r = jnp.arange(mn * S, dtype=jnp.int32)
+        src = r // S
+        cum = jnp.cumsum(cnt_recv, axis=1)
+        eid_r = jnp.sum(((r % S)[:, None] >= cum[src]).astype(jnp.int32),
+                        axis=1)
+        order_r, sorted_re, cnt_e, pos_re, rrow = _sort_routing(
+            eid_r[:, None], e_local)
+        astart, tile_eid, n_tiles = ragged_tile_map(cnt_e, bm, mn * S)
+        R = tile_eid.shape[0] * bm
+        safe_e = jnp.minimum(sorted_re, e_local - 1)
+        rowpos = jnp.where(sorted_re < e_local, astart[safe_e] + pos_re, R)
+        xs = jnp.zeros((R, d), x_l.dtype).at[rowpos].set(recv[rrow],
+                                                         mode="drop")
+        if is_q:
+            if nh_local:
+                # Local hi-slot slice: slot g = j·nh_local + s lives here;
+                # owners are global expert positions.
+                owner = jax.lax.dynamic_slice_in_dim(
+                    bank_l.slot_owner, j * nh_local, nh_local)
+                owner_l = owner - j * e_local
+                eff = jnp.full((e_local + 1,), -1, jnp.int32).at[
+                    jnp.where((owner_l >= 0) & (owner_l < e_local),
+                              owner_l, e_local)].set(
+                    jnp.arange(nh_local, dtype=jnp.int32),
+                    mode="drop")[:e_local]
+                tile_slot = eff[tile_eid]
+                hi_l = bank_l.hi
+            else:
+                tile_slot = jnp.full_like(tile_eid, -1)
+                hi_l = None
+            y_rows = kops.ragged_quant_ffn_op(
+                xs, tile_eid, tile_slot, bank_l.lo, hi_l,
+                bits=bank_l.lo["w_gate"].bits,
+                group=bank_l.lo["w_gate"].group_size, bm=bm, backend=gemm)
+        else:
+            y_rows = kops.ragged_dense_ffn_op(xs, tile_eid, bank_l, bm=bm,
+                                              backend=gemm)
+        D = y_rows.shape[-1]
+        back = jnp.where((sorted_re < e_local)[:, None],
+                         y_rows[jnp.minimum(rowpos, R - 1)], 0)
+        y_recv = jnp.zeros((mn * S, D), x_l.dtype).at[rrow].set(back)
+
+        # -- home: block d of the return exchange is MY rows' results from
+        # shard d, at the offsets I sent them at.
+        y_ret = a2a(y_recv)
+        y_asn = y_ret[jnp.minimum(send_row, mn * S - 1)]
+        gate_sorted = gates_v.reshape(-1)[order].astype(x_l.dtype)
+        contrib = jnp.where(kept[:, None], y_asn * gate_sorted[:, None], 0)
+        y = jnp.zeros((T_l, D), x_l.dtype).at[tok].add(contrib)
+        if "shared" in params_l:
+            y = y + swiglu(params_l["shared"], x_l)
+
+        # -- exact global telemetry (counts keyed by global expert already)
+        counts = jax.lax.psum(counts_l.astype(jnp.int32), tok_axes)
+        routed = jax.lax.psum(
+            jnp.sum((sorted_eid < E).astype(jnp.float32)), tok_axes)
+        kept_g = jax.lax.psum(jnp.sum(kept.astype(jnp.float32)), tok_axes)
+        dropped = 1.0 - kept_g / jnp.maximum(routed, 1.0)
+        padr = jax.lax.pmean(
+            1.0 - jnp.sum(cnt_e).astype(jnp.float32)
+            / jnp.maximum(n_tiles * bm, 1).astype(jnp.float32), tok_axes)
+        # Load-balance aux from globally psum'd routing stats — same value
+        # the single-device formula produces.
+        if tv_l is None:
+            full_idx = jnp.clip(idx.reshape(-1), 0, E)
+            n_val = jnp.float32(T_l)
+            sum_prob = jnp.sum(probs, axis=0)
+        else:
+            full_idx = jnp.where(tv_l[:, None], jnp.clip(idx, 0, E),
+                                 E).reshape(-1)
+            n_val = jnp.sum(tv_l).astype(jnp.float32)
+            sum_prob = jnp.sum(probs * tv_l[:, None].astype(jnp.float32),
+                               axis=0)
+        full_counts = jax.lax.psum(
+            jnp.zeros((E + 1,), jnp.int32).at[full_idx].add(1)[:E], tok_axes)
+        n_val = jax.lax.psum(n_val, tok_axes)
+        sum_prob = jax.lax.psum(sum_prob, tok_axes)
+        mean_prob = sum_prob / jnp.maximum(n_val, 1.0)
+        frac = full_counts.astype(jnp.float32) / jnp.maximum(n_val * kk, 1.0)
+        aux = cfg.router_aux_coef * E * jnp.sum(frac * mean_prob)
+        if not want_rc:
+            return y, counts, aux, dropped, padr
+        tpr = T // n_rows
+        rid = jnp.arange(T_l, dtype=jnp.int32) // tpr
+        rc = jnp.zeros((n_rows_l, E + 1), jnp.int32).at[
+            jnp.broadcast_to(rid[:, None], (T_l, kk)), idx_v].add(1)[:, :E]
+        return y, counts, aux, dropped, padr, rc
+
+    out_specs = (x_spec, repl, repl, repl, repl) + \
+        ((P(tok_axes, None),) if want_rc else ())
+    res = shard_map(
+        body, mesh=mesh,
+        in_specs=(params_spec, bank_spec, x_spec, tv_spec),
+        out_specs=out_specs,
+        **{check_kw: False},
+    )(params, flat, x, token_valid)
+    y, counts, aux, dropped, padr = res[:5]
+    rc = res[5] if want_rc else None
+    active = jnp.sum((counts > 0).astype(jnp.int32))
+    return y, MoEAux(counts=counts, aux_loss=aux, dropped=dropped,
+                     row_counts=rc, active_experts=active,
+                     dispatch_pad_ratio=padr)
 
 
 class QuantizedTensorLike(NamedTuple):
@@ -660,3 +938,36 @@ def moe_capacity(n_tokens: int, cfg: MoEConfig, factor: float | None = None) -> 
     cap = int(n_tokens * cfg.top_k * f / cfg.num_experts) + 1
     # Round up to a multiple of 8 for friendlier tiling/sharding.
     return max(8, (cap + 7) // 8 * 8)
+
+
+def ep_cap_shard(capacity: int, n_token_shards: int) -> int:
+    """Per-(expert, sender) capacity slice under EP token sharding: the
+    global per-expert ``capacity`` split evenly over the senders, floored
+    at 8 so small-batch decode (where a sender holds ≤ a handful of tokens)
+    is always drop-free — the same 1/n scaling (and floor) the padded dp
+    body applies to its local capacity."""
+    return max(8, (-(-capacity // n_token_shards) + 7) // 8 * 8)
+
+
+def ep_payload_rows(n_tokens: int, top_k: int, e_local: int, capacity: int,
+                    n_token_shards: int, bm: int = RAGGED_BM,
+                    n_rows: Optional[int] = None,
+                    row_capacity: Optional[int] = None) -> int:
+    """Static per-destination row budget ``S`` of the EP all-to-all payload.
+
+    A sender can forward at most min(its local assignments, what one
+    destination can keep) rows to any one shard: ``T_l·k`` assignments
+    total, and per destination ``e_local`` experts × the per-sender keep
+    bound (``ep_cap_shard``, or ``rows_l·row_capacity`` under the per-row
+    rule). The bm round-up keeps the exchanged buffer tile-aligned for the
+    grouped kernel on the receiver. This is also the bytes-moved model the
+    ``ep_scaling`` benchmark reports: each shard moves ``2·(mn−1)·S·d``
+    payload elements per MoE layer (out and back), independent of the
+    global batch — vs. the replicated baseline's ``2·(mn−1)/mn·T·d`` psum."""
+    t_l = n_tokens // n_token_shards
+    if row_capacity is not None:
+        per_dest = e_local * (n_rows // n_token_shards) * row_capacity
+    else:
+        per_dest = e_local * ep_cap_shard(capacity, n_token_shards)
+    s = min(t_l * top_k, per_dest)
+    return max(bm, -(-s // bm) * bm)

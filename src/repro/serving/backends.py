@@ -43,6 +43,8 @@ import numpy as np
 
 from repro.core import (ControllerConfig, DynaExqController, build_bank,
                         expert_hi_nbytes, expert_lo_nbytes, plan_budget)
+from repro.core.budget import BudgetTracker
+from repro.core.controller import EPCoordinator, RebalanceConfig
 from repro.core.hotness import mask_row_counts
 from repro.models.config import ArchConfig
 
@@ -273,7 +275,14 @@ class DynaExqBackend(_BackendBase):
     """The paper's system: lo tier always resident + a budget-derived hi
     pool whose occupancy the online controller re-allocates from router
     traces. Promotions ride the migration stream (off the critical path) —
-    ``observe`` only feeds hotness; ``tick`` runs the policy window."""
+    ``observe`` only feeds hotness; ``tick`` runs the policy window.
+
+    Expert parallelism (``ep_shards > 1``): every MoE position's hi-slot
+    pool is split into per-shard slot ranges with per-shard budget accounts
+    (shard j's promotions bill shard j's local HBM, never a neighbour's),
+    and an ``EPCoordinator`` periodically rebalances expert *ownership*
+    across shards from the globally-psum'd hotness (``tick`` drives its
+    window alongside the per-position controllers)."""
 
     name = "dynaexq"
 
@@ -282,8 +291,12 @@ class DynaExqBackend(_BackendBase):
                  n_hi_per_layer: Optional[int] = None,
                  hbm_gb: Optional[float] = None,
                  activation_slack_bytes: int = 64 << 20,
-                 controller: Optional[ControllerConfig] = None):
+                 controller: Optional[ControllerConfig] = None,
+                 ep_shards: int = 1,
+                 rebalance: Optional[RebalanceConfig] = None):
         super().__init__()
+        if ep_shards < 1:
+            raise ValueError("ep_shards must be >= 1")
         self.lo_bits = lo_bits
         self.hi_bits = hi_bits
         self.group_size = group_size
@@ -291,6 +304,9 @@ class DynaExqBackend(_BackendBase):
         self.hbm_gb = hbm_gb
         self.activation_slack_bytes = activation_slack_bytes
         self.controller_cfg = controller
+        self.ep_shards = int(ep_shards)
+        self.coordinator: Optional[EPCoordinator] = \
+            EPCoordinator(self.ep_shards, rebalance) if ep_shards > 1 else None
         self.controllers: Dict[str, DynaExqController] = {}
         self.banks: Dict = {}
 
@@ -302,8 +318,16 @@ class DynaExqBackend(_BackendBase):
                                     group_size=self.group_size)
             lo_b = expert_lo_nbytes(shapes, self.lo_bits, self.group_size)
             L, E = experts["w_gate"].shape[:2]
+            ep = self.ep_shards
+            if ep > 1 and E % ep:
+                raise ValueError(
+                    f"num_experts={E} not divisible by ep_shards={ep}")
             if self.n_hi_per_layer is not None:
                 n_hi = self.n_hi_per_layer
+                if ep > 1 and n_hi % ep:
+                    raise ValueError(
+                        f"n_hi_per_layer={n_hi} not divisible by "
+                        f"ep_shards={ep} (each shard owns n_hi/ep slots)")
             elif self.hbm_gb is not None:
                 nonexp = _param_bytes({k: v for k, v in params.items()
                                        if k != "blocks"})
@@ -312,10 +336,13 @@ class DynaExqBackend(_BackendBase):
                     m_fixed=nonexp + kv_bytes + self.activation_slack_bytes,
                     lo_bytes_total=lo_b * L * E,
                     hi_bytes_per_expert_layer=hi_b,
-                    n_layers=L, num_experts=E)
+                    n_layers=L, num_experts=E, align=ep)
                 n_hi = plan.n_hi_per_layer
             else:
                 n_hi = max(1, E // 8)
+                if ep > 1:
+                    # round to a shard-divisible count (≥ one slot per shard)
+                    n_hi = max(ep, n_hi // ep * ep)
             host_hi = {k: np.asarray(v) for k, v in experts.items()}
             bank = build_bank(experts, n_hi=n_hi, lo_bits=self.lo_bits,
                               group_size=self.group_size,
@@ -330,10 +357,32 @@ class DynaExqBackend(_BackendBase):
                 # headroom.
                 tracker = None if self.budget is None else \
                     self.budget.view(f"hi:{pos}", cap=n_hi * L * hi_b)
-                self.controllers[str(pos)] = DynaExqController(
+                shard_trackers = None
+                if ep > 1:
+                    # One account per shard: a shard's promotions reserve
+                    # against ITS slice of the pool (its local HBM), so a
+                    # hot shard saturating its slots cannot starve — or
+                    # borrow from — a neighbour's budget.
+                    per_cap = (n_hi // ep) * L * hi_b
+                    if self.budget is not None:
+                        shard_trackers = [
+                            self.budget.view(f"hi:{pos}:s{j}", cap=per_cap)
+                            for j in range(ep)]
+                    else:
+                        shard_trackers = [BudgetTracker(per_cap)
+                                          for _ in range(ep)]
+                ctl = DynaExqController(
                     bank, host_hi, n_hi_per_layer=n_hi,
                     hi_bytes_per_expert=hi_b, cfg=self.controller_cfg,
-                    tracker=tracker)
+                    tracker=tracker, ep_shards=ep,
+                    shard_trackers=shard_trackers)
+                self.controllers[str(pos)] = ctl
+                if self.coordinator is not None:
+                    # The moe params dict outlives the experts=None free
+                    # below — the coordinator swaps its router leaf in
+                    # place on migration.
+                    self.coordinator.register(
+                        ctl, params["blocks"][str(pos)]["moe"])
             params["blocks"][str(pos)]["moe"]["experts"] = None
         return self.banks
 
@@ -347,6 +396,8 @@ class DynaExqBackend(_BackendBase):
     def tick(self) -> None:
         for ctl in self.controllers.values():
             ctl.maybe_update()
+        if self.coordinator is not None:
+            self.coordinator.maybe_rebalance()
 
     def force_update(self) -> None:
         for ctl in self.controllers.values():
@@ -383,6 +434,9 @@ class DynaExqBackend(_BackendBase):
             agg["promotions"] += ctl.tm.stats["promoted"]
             agg["demotions"] += ctl.tm.stats["demoted"]
             agg["deferred"] += ctl.tm.stats["deferred"]
+        if self.coordinator is not None:
+            agg["migrations"] = float(self.coordinator.stats["migrations"])
+            agg["bytes_moved"] += self.coordinator.stats["bytes_moved"]
         return agg
 
 

@@ -78,6 +78,7 @@ import numpy as np
 
 from repro.core.budget import UNBOUNDED, BudgetTracker
 from repro.kernels import ops as kops
+from repro.launch.dist import dist_ctx
 from repro.models import (attn_logical_capacity, decode_step,
                           decode_step_paged, init_caches, init_paged_caches,
                           prefill, prefill_paged)
@@ -99,11 +100,19 @@ from repro.serving.scheduler import (Scheduler, SchedulerConfig,
 # a static argument: the XLA compile cache is keyed on the function identity,
 # so every engine built for the same config shares compilations — a warm-up
 # engine genuinely warms the measured one (benchmarks rely on this).
+#
+# ``ep`` is an unused static cache key: the ambient DistContext is read at
+# TRACE time (``moe_apply`` → ``get_dist()``), so an engine serving under an
+# expert-parallel mesh must not share a cache entry with a single-device
+# engine of identical shapes — the engine passes its token-shard count (0
+# when no mesh) to force distinct compilations per distribution regime.
 
 @functools.partial(jax.jit, static_argnames=("cfg", "capacity_factor",
-                                             "moe_dispatch", "row_capacity"))
+                                             "moe_dispatch", "row_capacity",
+                                             "ep"))
 def _prefill_jit(params, batch, caches, banks, lengths, *, cfg,
-                 capacity_factor, moe_dispatch=None, row_capacity=None):
+                 capacity_factor, moe_dispatch=None, row_capacity=None,
+                 ep=0):
     return prefill(params, cfg, batch, caches, bank=banks,
                    capacity_factor=capacity_factor, lengths=lengths,
                    per_row_counts=True, moe_dispatch=moe_dispatch,
@@ -111,9 +120,11 @@ def _prefill_jit(params, batch, caches, banks, lengths, *, cfg,
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "capacity_factor",
-                                             "moe_dispatch", "row_capacity"))
+                                             "moe_dispatch", "row_capacity",
+                                             "ep"))
 def _decode_jit(params, token, pos, caches, banks, row_valid, *, cfg,
-                capacity_factor, moe_dispatch=None, row_capacity=None):
+                capacity_factor, moe_dispatch=None, row_capacity=None,
+                ep=0):
     return decode_step(params, cfg, token, pos, caches, bank=banks,
                        capacity_factor=capacity_factor, row_valid=row_valid,
                        per_row_counts=True, moe_dispatch=moe_dispatch,
@@ -122,11 +133,11 @@ def _decode_jit(params, token, pos, caches, banks, row_valid, *, cfg,
 
 @functools.partial(jax.jit,
                    static_argnames=("cfg", "capacity_factor", "has_prefix",
-                                    "moe_dispatch", "row_capacity"),
+                                    "moe_dispatch", "row_capacity", "ep"),
                    donate_argnums=(2,))
 def _prefill_paged_jit(params, batch, caches, banks, table, start, lengths,
                        *, cfg, capacity_factor, has_prefix,
-                       moe_dispatch=None, row_capacity=None):
+                       moe_dispatch=None, row_capacity=None, ep=0):
     return prefill_paged(params, cfg, batch, caches, table, start, lengths,
                          bank=banks, capacity_factor=capacity_factor,
                          per_row_counts=True, has_prefix=has_prefix,
@@ -134,11 +145,12 @@ def _prefill_paged_jit(params, batch, caches, banks, table, start, lengths,
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "capacity_factor",
-                                             "moe_dispatch", "row_capacity"),
+                                             "moe_dispatch", "row_capacity",
+                                             "ep"),
                    donate_argnums=(3,))
 def _decode_paged_jit(params, token, pos, caches, banks, row_valid, table,
                       write_blk, write_off, *, cfg, capacity_factor,
-                      moe_dispatch=None, row_capacity=None):
+                      moe_dispatch=None, row_capacity=None, ep=0):
     return decode_step_paged(params, cfg, token, pos, caches, table,
                              write_blk, write_off, bank=banks,
                              capacity_factor=capacity_factor,
@@ -300,7 +312,7 @@ class InferenceEngine:
 
     def __init__(self, cfg: ArchConfig, params: Dict,
                  backend: ResidencyBackend,
-                 ecfg: Optional[EngineConfig] = None):
+                 ecfg: Optional[EngineConfig] = None, dist=None):
         if cfg.is_encoder_decoder:
             raise NotImplementedError(
                 "InferenceEngine serves decoder-only stacks; encoder-decoder "
@@ -310,6 +322,9 @@ class InferenceEngine:
         self.params = params
         self.backend = backend
         self.ecfg = ecfg if ecfg is not None else EngineConfig()
+        # Optional DistContext (expert-parallel / data-parallel serving):
+        # every jitted forward traces under it — see ``_dist_wrap``.
+        self.dist = dist
 
         n = self.ecfg.max_slots
         sb = cfg.superblock_or_default()
@@ -378,24 +393,25 @@ class InferenceEngine:
         self._row_cap_decode = moe_capacity(
             1, cfg.moe, self.ecfg.capacity_factor) if norm else None
         self._row_cap_norm = norm
-        self._jit_prefill = functools.partial(
+        ep_key = 0 if self.dist is None else self.dist.n_token_shards
+        self._jit_prefill = self._dist_wrap(functools.partial(
             _prefill_jit, cfg=cfg,
             capacity_factor=self.ecfg.capacity_factor,
-            moe_dispatch=self.moe_dispatch)
-        self._jit_decode = functools.partial(
+            moe_dispatch=self.moe_dispatch, ep=ep_key))
+        self._jit_decode = self._dist_wrap(functools.partial(
             _decode_jit, cfg=cfg,
             capacity_factor=self.ecfg.capacity_factor,
             moe_dispatch=self.moe_dispatch,
-            row_capacity=self._row_cap_decode)
-        self._jit_prefill_paged = functools.partial(
+            row_capacity=self._row_cap_decode, ep=ep_key))
+        self._jit_prefill_paged = self._dist_wrap(functools.partial(
             _prefill_paged_jit, cfg=cfg,
             capacity_factor=self.ecfg.capacity_factor,
-            moe_dispatch=self.moe_dispatch)
-        self._jit_decode_paged = functools.partial(
+            moe_dispatch=self.moe_dispatch, ep=ep_key))
+        self._jit_decode_paged = self._dist_wrap(functools.partial(
             _decode_paged_jit, cfg=cfg,
             capacity_factor=self.ecfg.capacity_factor,
             moe_dispatch=self.moe_dispatch,
-            row_capacity=self._row_cap_decode)
+            row_capacity=self._row_cap_decode, ep=ep_key))
         self._jit_scatter = _scatter_rows
         # Dispatch-efficiency gauges (host mirror of MoEAux telemetry).
         self._disp_active_sum = 0.0
@@ -493,6 +509,23 @@ class InferenceEngine:
         accounting realtime ones do, machine speed be damned. Compute
         latencies (decode dt, stalls) always use perf_counter."""
         return time.perf_counter() if self._clock is None else self._clock
+
+    # ------------------------------------------------------------------
+    def _dist_wrap(self, fn):
+        """Run a jitted forward under the engine's DistContext: the MoE
+        layer reads the ambient context at trace time to decide its
+        sharding regime (single-device / dp shard_map / expert-parallel
+        all-to-all), so every trace — including the speculative decoder's,
+        which calls through these same partials — happens inside it. The
+        ``ep`` static passed alongside keeps distribution regimes from
+        sharing a compile-cache entry."""
+        if self.dist is None:
+            return fn
+
+        def wrapped(*a, **kw):
+            with dist_ctx(self.dist):
+                return fn(*a, **kw)
+        return wrapped
 
     # ------------------------------------------------------------------
     def _row_cap_prefill(self, bucket: int) -> Optional[int]:

@@ -84,6 +84,11 @@ class SchedulerConfig:
     shed_policy: str = "none"
     shed_queue_depth: int = 8        # queued requests that mean "overload"
     shed_wait_s: float = 2.0         # est. queue wait that means "overload"
+    # HBM headroom fraction below which the engine counts as overloaded —
+    # byte pressure on the shared envelope (KV blocks + expert hi tier) is
+    # an overload signal even with an empty queue: admitting more work
+    # would stall on block reclaim / defer every promotion. 0 disables.
+    shed_headroom_frac: float = 0.05
     # Queued batch-tier requests whose deadline already passed are dropped
     # at admission time (state SHED) instead of burning decode steps.
     drop_expired_batch: bool = True
@@ -110,6 +115,10 @@ class SchedulerConfig:
                     f"spec_tiers entry {t!r}; one of {QOS_CLASSES}")
         if self.aging_s <= 0:
             raise ValueError("aging_s must be > 0")
+        if not 0.0 <= self.shed_headroom_frac < 1.0:
+            raise ValueError(
+                f"shed_headroom_frac={self.shed_headroom_frac} must be in "
+                f"[0, 1)")
         if self.prefill_chunk < 0:
             raise ValueError("prefill_chunk must be >= 0")
 
@@ -268,12 +277,18 @@ class Scheduler:
     # -- overload / shedding --------------------------------------------
     def overloaded(self, load: Dict[str, float]) -> bool:
         """Overload = the uniform stats say queued work cannot clear in
-        time: queue depth past the knob, or estimated queue wait (queued
+        time — queue depth past the knob, or estimated queue wait (queued
         decode tokens at the measured TPOT, spread over the slots) past the
-        wait knob."""
+        wait knob — OR the shared HBM envelope is nearly exhausted
+        (``budget_headroom_frac`` below the headroom knob): byte pressure
+        sheds even with an empty queue, since the next admission would
+        stall on reclaim and every promotion already defers."""
         if load.get("queue_depth", 0.0) > self.cfg.shed_queue_depth:
             return True
-        return load.get("est_wait_s", 0.0) > self.cfg.shed_wait_s
+        if load.get("est_wait_s", 0.0) > self.cfg.shed_wait_s:
+            return True
+        return (load.get("budget_headroom_frac", 1.0) <
+                self.cfg.shed_headroom_frac)
 
     def admit_action(self, qos: str, load: Dict[str, float]) -> str:
         """Submit-time decision: "admit", "downgrade" (execute on the lo

@@ -1,0 +1,416 @@
+"""Expert-parallel serving correctness.
+
+Tentpole contract (ISSUE: sharded ragged dispatch with all-to-all): on a
+forced 8-host-device mesh the EP pipeline — local routing, per-destination
+compaction, all-to-all row exchange, shard-local mixed-precision FFN,
+all-to-all return, gated combine — must be TOKEN-IDENTICAL to the
+single-device path, with router counts, drop counts, aux loss and
+per-request row_counts round-tripping exactly. On top: per-shard hi-slot
+pools with per-shard budget isolation, and hotness-aware expert-ownership
+rebalancing that provably moves an expert without perturbing the forward.
+
+Mesh tests run in subprocesses (jax pins the device count at first init;
+the rest of the suite is single-device). Host-side accounting tests
+(ShardedSlotPool / per-shard TransitionManager budgets / coordinator
+policy) run in-process.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import (ControllerConfig, DynaExqController, build_bank,
+                        expert_hi_nbytes)
+from repro.core.budget import BudgetTracker
+from repro.core.controller import EPCoordinator, RebalanceConfig
+from repro.core.pools import ShardedSlotPool
+
+
+def _run(script):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", script], env=env,
+                       capture_output=True, text=True, timeout=560,
+                       cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert r.returncode == 0, (r.stdout[-2000:], r.stderr[-3000:])
+    line = [ln for ln in r.stdout.splitlines() if ln.startswith("RESULT ")][-1]
+    return json.loads(line[len("RESULT "):])
+
+
+# ---------------------------------------------------------------------------
+# Layer-level: moe_apply under ep_context vs single device, bit-for-bit.
+# ---------------------------------------------------------------------------
+
+SCRIPT_LAYER = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np, json
+from repro.models.config import MoEConfig
+from repro.models import moe as M
+from repro.launch.dist import DistContext, dist_ctx, ep_context
+from repro.launch.mesh import make_ep_mesh
+from repro.core.ver import ExpertBankQ, build_bank
+from repro.quant.qtensor import QuantizedTensor
+
+cfg = MoEConfig(num_experts=8, top_k=2, d_ff_expert=128, n_shared_experts=0,
+                router_aux_coef=0.01, capacity_factor=2.0,
+                norm_topk_prob=True)
+d, T = 64, 64
+key = jax.random.PRNGKey(0)
+params = M.init_moe(key, d, cfg)
+
+# Quantized bank with hi slots PUBLISHED ON SHARD-CORRECT SLOTS: n_hi=8 over
+# 8 shards -> 1 slot per shard, expert e's shard is e (e_local=1), so expert
+# 1 -> slot 1 and expert 6 -> slot 6.
+ew = {k: v[None] for k, v in params["experts"].items()}
+bank_full = build_bank(ew, n_hi=8, lo_bits=4, group_size=32)
+lo = {k: QuantizedTensor(q.packed[0], q.scales[0], q.bits, q.group_size,
+                         q.shape[1:]) for k, q in bank_full.lo.items()}
+hi = {k: v[0].at[1].set(ew[k][0, 1].astype(v.dtype))
+           .at[6].set(ew[k][0, 6].astype(v.dtype))
+      for k, v in bank_full.hi.items()}
+so = np.full(8, -1); so[1] = 1; so[6] = 6
+bank = ExpertBankQ(lo=lo, hi=hi, slot_owner=jnp.asarray(so, jnp.int32),
+                   slot_map=jnp.asarray(so, jnp.int32))
+
+x = jax.random.normal(jax.random.PRNGKey(1), (T, d), jnp.bfloat16)
+cap = M.moe_capacity(T, cfg)
+tv = jnp.asarray(np.arange(T) % 16 != 3)
+ctx = ep_context(make_ep_mesh(8))
+
+def run(dispatch, dist, bnk, n_rows=None, row_capacity=None,
+        token_valid=None):
+    def f(p, b, xx, tvv):
+        return M.moe_apply(p, b, xx, cfg, cap, token_valid=tvv,
+                           n_rows=n_rows, row_capacity=row_capacity,
+                           dispatch=dispatch, gemm="jnp")
+    if dist is None:
+        return jax.jit(f)(params, bnk, x, token_valid)
+    with dist_ctx(dist):
+        return jax.jit(f)(params, bnk, x, token_valid)
+
+out = {}
+# ragged EP parity across token_valid x row-count x row-capacity configs
+for tvv, tag_tv in ((None, "all"), (tv, "tv")):
+    for n_rows, rc in ((None, None), (16, None), (16, 2)):
+        y0, a0 = run("ragged", None, bank, n_rows, rc, tvv)
+        y1, a1 = run("ragged", ctx, bank, n_rows, rc, tvv)
+        tag = f"{tag_tv}_r{n_rows}_c{rc}"
+        out["bit_" + tag] = bool(jnp.all(y0 == y1))
+        out["counts_" + tag] = bool(jnp.all(a0.counts == a1.counts))
+        out["dropped_" + tag] = float(a1.dropped) == float(a0.dropped)
+        out["aux_" + tag] = abs(float(a1.aux_loss) - float(a0.aux_loss)) < 1e-6
+        if n_rows:
+            out["rc_" + tag] = a1.row_counts is not None and \
+                bool(jnp.all(a0.row_counts == a1.row_counts))
+
+# padded sharded path (dp mesh) still round-trips row_counts
+mesh2 = jax.make_mesh((2, 4), ("data", "model"))
+ctx2 = DistContext(mesh=mesh2, dp_axes=("data",), model_axis="model")
+y0, a0 = run("padded", None, bank, 16, None, tv)
+y2, a2 = run("padded", ctx2, bank, 16, None, tv)
+out["padded_dp_err"] = float(jnp.max(jnp.abs(
+    y0.astype(jnp.float32) - y2.astype(jnp.float32))))
+out["padded_dp_rc"] = bool(jnp.all(a0.row_counts == a2.row_counts))
+
+# dense (bf16 dict) banks: ragged == padded bit-for-bit, and under EP
+dense = dict(params["experts"])
+yd0, ad0 = run("padded", None, dense)
+yd1, ad1 = run("ragged", None, dense)
+yd2, ad2 = run("ragged", ctx, dense)
+out["dense_ragged_bit"] = bool(jnp.all(yd0 == yd1))
+out["dense_ep_bit"] = bool(jnp.all(yd1 == yd2))
+out["dense_counts"] = bool(jnp.all(ad0.counts == ad2.counts))
+print("RESULT " + json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_ep_moe_apply_matches_single_device():
+    out = _run(SCRIPT_LAYER)
+    bad = {k: v for k, v in out.items()
+           if k != "padded_dp_err" and v is not True}
+    assert not bad, (bad, out)
+    assert out["padded_dp_err"] == 0.0, out
+
+
+# ---------------------------------------------------------------------------
+# Engine-level: token parity through the full serving loop, per-shard hi
+# publication, and glitch-free hotness rebalancing.
+# ---------------------------------------------------------------------------
+
+SCRIPT_ENGINE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np, json
+from repro.configs import get_config
+from repro.core import ControllerConfig
+from repro.core.controller import RebalanceConfig
+from repro.models import init_params
+from repro.models import moe as M
+from repro.serving import (EngineConfig, InferenceEngine, Request,
+                           make_backend)
+from repro.launch.dist import dist_ctx, ep_context
+from repro.launch.mesh import make_ep_mesh
+from repro.core.ver import ExpertBankQ
+from repro.quant.qtensor import QuantizedTensor
+
+cfg = get_config("granite-moe-1b-a400m", reduced=True)
+params = init_params(jax.random.PRNGKey(0), cfg)
+
+def deep(d):
+    return {k: deep(v) for k, v in d.items()} if isinstance(d, dict) else d
+
+# Frozen policy timers: residency transitions and rebalances fire only when
+# forced, so the parity comparison cannot depend on wall-clock noise.
+FROZEN = ControllerConfig(update_interval_s=1e9)
+RB = RebalanceConfig(interval_s=1e9)
+
+def run(dist, ep_shards):
+    be = make_backend("dynaexq", n_hi_per_layer=4, ep_shards=ep_shards,
+                      controller=FROZEN, rebalance=RB)
+    ec = EngineConfig(max_slots=4, max_len=64, prefill_rows=4,
+                      moe_dispatch="ragged", spec_k=0)
+    eng = InferenceEngine(cfg, deep(params), be, ec, dist=dist)
+    rng = np.random.default_rng(0)
+    toks = rng.integers(1, cfg.vocab_size, (4, 24), dtype=np.int64)
+    hs = [eng.submit(Request(tokens=toks[b], max_new_tokens=8))
+          for b in range(4)]
+    eng.drain(); eng.flush()
+    return [h.tokens for h in hs], eng
+
+out = {}
+t_ref, e_ref = run(None, 1)
+t_ep, e_ep = run(ep_context(make_ep_mesh(4)), 4)
+out["token_parity_ep4"] = t_ref == t_ep
+
+# forced promotions publish on shard-correct slots under per-shard budgets
+be = e_ep.backend
+be.force_update(); be.flush()
+ok_place = True
+for ctl in be.controllers.values():
+    ctl.tm.check_invariants()
+    for l in range(ctl.tm.state.shape[0]):
+        for e, s in enumerate(ctl.tm.slot_map_h[l]):
+            if s >= 0 and ctl.tm.pools[l].shard_of(int(s)) != \
+                    ctl.tm.shard_of_expert(e):
+                ok_place = False
+out["shard_correct_slots"] = ok_place
+out["promoted_something"] = any(
+    ctl.tm.stats["promoted"] > 0 for ctl in be.controllers.values())
+
+# ---- hotness rebalance: provably moves an expert, forward-invariant ----
+# e_local must be >= 2 for a swap to be able to improve balance (with one
+# expert per shard a swap only relabels shards), so this runs at 2 shards.
+t2, e2 = run(ep_context(make_ep_mesh(2)), 2)
+out["token_parity_ep2"] = t_ref == t2
+be2 = e2.backend
+pos = be2.moe_positions[0]
+ctl = be2.controllers[str(pos)]
+moe_params = e2.params["blocks"][str(pos)]["moe"]
+bank = ctl.bank
+x = jax.random.normal(jax.random.PRNGKey(7), (8, cfg.d_model), jnp.bfloat16)
+cap = M.moe_capacity(8, cfg.moe, e2.ecfg.capacity_factor)
+
+def fwd():
+    lo = {k: QuantizedTensor(q.packed[0], q.scales[0], q.bits, q.group_size,
+                             q.shape[1:]) for k, q in bank.lo.items()}
+    b0 = ExpertBankQ(lo=lo, hi={k: v[0] for k, v in bank.hi.items()},
+                     slot_owner=bank.slot_owner[0], slot_map=bank.slot_map[0])
+    p0 = {"router": moe_params["router"][0]}
+    with dist_ctx(e2.dist):
+        y, aux = jax.jit(lambda p, b, xx: M.moe_apply(
+            p, b, xx, cfg.moe, cap, dispatch="ragged", gemm="jnp"))(p0, b0, x)
+    return np.asarray(y.astype(jnp.float32)), np.asarray(aux.counts)
+
+y_before, c_before = fwd()
+# Moderate skew on shard 0 (experts {0, 1}): hot enough that moving ONE of
+# them strictly improves the max shard load, not so hot it dominates
+# wherever it lands.
+ctl.hotness.counts[:, 0] += 100
+ctl.hotness.counts[:, 1] += 100
+placement = be2.coordinator._entries[0][2]
+pl_before = placement.copy()
+n = be2.coordinator.maybe_rebalance(force=True)
+out["migrated"] = n > 0
+out["placement_changed"] = not np.array_equal(pl_before, placement)
+y_after, c_after = fwd()
+out["forward_invariant"] = bool(np.array_equal(y_before, y_after))
+# A relabel permutes expert POSITIONS, so per-position router counts
+# permute with the placement; counts per ORIGINAL expert are invariant.
+perm = np.argsort(pl_before[0])[placement[0]]
+out["counts_invariant"] = bool(np.array_equal(c_after, c_before[..., perm]))
+for c2 in be2.controllers.values():
+    c2.tm.check_invariants()
+out["invariants_after_migration"] = True
+out["stats_migrations"] = be2.coordinator.stats["migrations"]
+out["stats_bytes_moved_pos"] = be2.coordinator.stats["bytes_moved"] > 0
+print("RESULT " + json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_ep_engine_token_parity_and_rebalance():
+    out = _run(SCRIPT_ENGINE)
+    for k in ("token_parity_ep4", "token_parity_ep2", "shard_correct_slots",
+              "promoted_something", "migrated", "placement_changed",
+              "forward_invariant", "counts_invariant",
+              "invariants_after_migration", "stats_bytes_moved_pos"):
+        assert out[k] is True, (k, out)
+    assert out["stats_migrations"] >= 1, out
+
+
+# ---------------------------------------------------------------------------
+# Host-side accounting (no mesh needed).
+# ---------------------------------------------------------------------------
+
+def test_sharded_slot_pool():
+    p = ShardedSlotPool(8, 4)          # 2 slots per shard
+    assert p.per_shard == 2 and p.n_free == 8
+    s0 = p.alloc(0, shard=0)
+    s1 = p.alloc(1, shard=0)
+    assert {s0, s1} == {0, 1}          # shard 0 owns global slots [0, 2)
+    assert p.n_free_in(0) == 0 and p.n_free_in(3) == 2
+    with pytest.raises(RuntimeError):
+        p.alloc(2, shard=0)            # shard-local exhaustion, not global
+    s2 = p.alloc(9, shard=3)
+    assert p.shard_of(s2) == 3 and s2 == 6
+    p.free(s0)
+    assert p.n_free_in(0) == 1
+    assert p.alloc(4, shard=0) == s0   # lowest-index-first within the shard
+    with pytest.raises(ValueError):
+        ShardedSlotPool(6, 4)          # must divide evenly
+
+
+def _make_ep_controller(L=1, E=8, n_hi=4, n_shards=4, shared_budget=False):
+    import jax
+    import jax.numpy as jnp
+    key = jax.random.PRNGKey(0)
+    w = {"w": jax.random.normal(key, (L, E, 64, 32), jnp.float32)
+         .astype(jnp.bfloat16)}
+    bank = build_bank(w, n_hi=n_hi, lo_bits=4)
+    host = {k: np.asarray(v) for k, v in w.items()}
+    hib = expert_hi_nbytes({k: v.shape for k, v in w.items()})
+    per_cap = (n_hi // n_shards) * L * hib
+    if shared_budget:
+        parent = BudgetTracker(n_hi * L * hib)
+        trackers = [parent.view(f"s{j}", cap=per_cap)
+                    for j in range(n_shards)]
+    else:
+        trackers = [BudgetTracker(per_cap) for _ in range(n_shards)]
+    ctl = DynaExqController(
+        bank, host, n_hi_per_layer=n_hi, hi_bytes_per_expert=hib,
+        cfg=ControllerConfig(update_interval_s=1e9),
+        ep_shards=n_shards, shard_trackers=trackers)
+    return ctl, trackers, hib
+
+
+@pytest.mark.parametrize("shared_budget", [False, True])
+def test_per_shard_budget_isolation(shared_budget):
+    """A hot shard saturating its hi slots defers ITS promotions only —
+    sibling shards still admit — and after a full
+    promotion/demotion/migration cycle every shard tracker balances to
+    exactly zero bytes."""
+    ctl, trackers, hib = _make_ep_controller(shared_budget=shared_budget)
+    tm = ctl.tm
+    # E=8 over 4 shards -> experts {0,1} on shard 0; n_hi=4 -> 1 slot/shard.
+    tm.request_promotion(0, 0)
+    tm.request_promotion(0, 1)        # same shard: over its 1-slot budget
+    tm.request_promotion(0, 2)        # shard 1: must admit regardless
+    tm.drain()
+    tm.publish_ready(wait=True)
+    assert tm.hi_set(0) == {0, 2}
+    assert tm.stats["deferred"] >= 1
+    assert trackers[0].used == hib and trackers[1].used == hib
+    assert trackers[2].used == 0 and trackers[3].used == 0
+    tm.check_invariants()
+    # expert 1 stays queued; freeing shard 0 admits it on a later drain
+    # (two cycles: queue order may retry the promotion before the demotion
+    # releases the slot)
+    tm.request_demotion(0, 0)
+    tm.drain()
+    tm.publish_ready(wait=True)
+    tm.drain()
+    tm.publish_ready(wait=True)
+    assert tm.hi_set(0) == {1, 2}
+    tm.check_invariants()
+
+    # migration (relabel 1 <-> 7 across shards 0/3) via the coordinator
+    coord = EPCoordinator(4, RebalanceConfig(interval_s=1e9))
+    import jax
+    import jax.numpy as jnp
+    moe_params = {"router": jax.random.normal(jax.random.PRNGKey(1),
+                                              (1, 16, 8), jnp.float32)}
+    coord.register(ctl, moe_params)
+    r_before = np.asarray(moe_params["router"]).copy()
+    lo_before = np.asarray(ctl.bank.lo["w"].packed).copy()
+    assert coord._migrate(ctl, moe_params, coord._entries[0][2], 0, 1, 7)
+    r_after = np.asarray(moe_params["router"])
+    lo_after = np.asarray(ctl.bank.lo["w"].packed)
+    np.testing.assert_array_equal(r_after[0, :, 1], r_before[0, :, 7])
+    np.testing.assert_array_equal(r_after[0, :, 7], r_before[0, :, 1])
+    np.testing.assert_array_equal(lo_after[0, 1], lo_before[0, 7])
+    np.testing.assert_array_equal(lo_after[0, 7], lo_before[0, 1])
+    # migration demoted expert 1 first (its hi slot is shard-local)
+    assert tm.hi_set(0) == {2}
+    tm.check_invariants()
+
+    # full demotion: every shard account returns to zero
+    for e in sorted(tm.hi_set(0)):
+        tm.request_demotion(0, e)
+    tm.drain()
+    tm.publish_ready(wait=True)
+    tm.check_invariants()
+    assert all(t.used == 0 for t in trackers)
+
+
+def test_rebalance_improvement_guard():
+    """The coordinator only migrates when the swap strictly shrinks the max
+    shard load: with one expert per shard a swap is a pure relabel and must
+    be refused; with two it must fire exactly once for a moderate skew (no
+    same-window ping-pong)."""
+    # e_local == 1: never migrates, however large the skew
+    ctl, _, _ = _make_ep_controller(E=4, n_hi=4, n_shards=4)
+    coord = EPCoordinator(4, RebalanceConfig(interval_s=1e9,
+                                             max_migrations_per_window=4))
+    import jax
+    import jax.numpy as jnp
+    mp = {"router": jnp.zeros((1, 16, 4), jnp.float32)}
+    coord.register(ctl, mp)
+    ctl.hotness.counts[:, 0] += 1000
+    assert coord.maybe_rebalance(force=True) == 0
+
+    # e_local == 2: one improving swap, then the guard stops the window
+    ctl2, _, _ = _make_ep_controller(E=8, n_hi=4, n_shards=2)
+    coord2 = EPCoordinator(2, RebalanceConfig(interval_s=1e9,
+                                              max_migrations_per_window=4))
+    mp2 = {"router": jnp.zeros((1, 16, 8), jnp.float32)}
+    coord2.register(ctl2, mp2)
+    ctl2.hotness.counts[:, 0] += 100
+    ctl2.hotness.counts[:, 1] += 100
+    n = coord2.maybe_rebalance(force=True)
+    assert n == 1, n
+    placement = coord2._entries[0][2]
+    assert not np.array_equal(placement, np.tile(np.arange(8), (1, 1)))
+
+
+def test_backend_ep_validation():
+    from repro.serving.backends import make_backend
+    from repro.configs import get_config
+    from repro.models import init_params
+    import jax
+    cfg = get_config("granite-moe-1b-a400m", reduced=True)   # E=4
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    be = make_backend("dynaexq", ep_shards=3, n_hi_per_layer=3)
+    with pytest.raises(ValueError, match="not divisible"):
+        be.materialize_banks(cfg, params, kv_bytes=0)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    be = make_backend("dynaexq", ep_shards=2, n_hi_per_layer=3)
+    with pytest.raises(ValueError, match="n_hi_per_layer"):
+        be.materialize_banks(cfg, params, kv_bytes=0)
+    with pytest.raises(ValueError):
+        make_backend("dynaexq", ep_shards=0)

@@ -161,6 +161,46 @@ def test_all_lo_draft_bank_is_all_lo_under_ragged():
     np.testing.assert_array_equal(np.asarray(y_draft), np.asarray(y_nohi))
 
 
+def test_dense_bank_ragged_matches_padded():
+    """bf16 dict banks (fp16 / offload backends) ride the same ragged
+    compaction — no quantized tier anywhere — and must match the padded
+    overlay bit for bit, including masked vacant rows and row_counts."""
+    cfg, params, x, _ = _moe_setup()
+    dense = dict(params["experts"])
+    cap = moe_capacity(x.shape[0], cfg, 8.0)
+    yp, ap = moe_apply(params, dense, x, cfg, cap, dispatch="padded")
+    yr, ar = moe_apply(params, dense, x, cfg, cap, dispatch="ragged")
+    np.testing.assert_array_equal(np.asarray(yp), np.asarray(yr))
+    np.testing.assert_array_equal(np.asarray(ap.counts),
+                                  np.asarray(ar.counts))
+    tv = jnp.arange(x.shape[0]) % 3 != 1
+    yp, ap = moe_apply(params, dense, x, cfg, cap, token_valid=tv,
+                       n_rows=x.shape[0], dispatch="padded")
+    yr, ar = moe_apply(params, dense, x, cfg, cap, token_valid=tv,
+                       n_rows=x.shape[0], dispatch="ragged")
+    mask = np.asarray(tv)
+    np.testing.assert_array_equal(np.asarray(yp)[mask], np.asarray(yr)[mask])
+    np.testing.assert_array_equal(np.asarray(ap.row_counts),
+                                  np.asarray(ar.row_counts))
+
+
+@pytest.mark.parametrize("name", ["fp16", "offload"])
+def test_engine_token_identity_dense_backends_ragged(name):
+    """The dense-bank backends serve token-identically under ragged vs
+    padded dispatch (the ragged layout is bank-agnostic end to end)."""
+    def backend():
+        if name == "offload":
+            from repro.serving import OffloadConfig
+            return make_backend("offload", ocfg=OffloadConfig(
+                cache_experts_per_layer=4))
+        return make_backend("fp16")
+
+    tp, _ = _tokens("granite-moe-1b-a400m", "padded", True, backend=backend)
+    tr, eng = _tokens("granite-moe-1b-a400m", "ragged", True, backend=backend)
+    assert tp == tr
+    assert eng.stats()["active_experts"] > 0
+
+
 def test_moe_aux_dispatch_telemetry():
     cfg, params, x, bank = _moe_setup()
     cap = moe_capacity(x.shape[0], cfg, 8.0)

@@ -233,6 +233,60 @@ def test_shed_reject_policy(serving_setup):
     assert shed.tokens == []                     # never served
 
 
+def test_overloaded_keys_on_budget_headroom():
+    """Byte pressure alone (shared-envelope headroom below the knob) is an
+    overload signal, independent of queue depth / wait estimates."""
+    sched = Scheduler(SchedulerConfig(shed_policy="downgrade"))
+    idle = {"queue_depth": 0.0, "est_wait_s": 0.0}
+    assert not sched.overloaded({**idle, "budget_headroom_frac": 0.5})
+    assert sched.overloaded({**idle, "budget_headroom_frac": 0.01})
+    assert sched.admit_action(
+        "batch", {**idle, "budget_headroom_frac": 0.01}) == "downgrade"
+    # No envelope configured → signal absent → full headroom, no shed.
+    assert not sched.overloaded(idle)
+    with pytest.raises(ValueError, match="shed_headroom_frac"):
+        SchedulerConfig(shed_headroom_frac=1.0).validate()
+    with pytest.raises(ValueError, match="shed_headroom_frac"):
+        SchedulerConfig(shed_headroom_frac=-0.1).validate()
+
+
+def test_shed_under_byte_pressure_empty_queue(serving_setup):
+    """Regression: a nearly-exhausted HBM envelope must shed/downgrade at
+    submit time even with an EMPTY queue (the next admission would stall on
+    reclaim), and admission must recover when the pressure releases."""
+    import jax
+    cfg, params = serving_setup
+    clone = jax.tree_util.tree_map(lambda x: x, params)
+    eng = InferenceEngine(
+        cfg, clone, make_backend("fp16"),
+        EngineConfig(max_slots=2, max_len=64, hbm_budget_bytes=1 << 30,
+                     scheduler=SchedulerConfig(shed_policy="reject")))
+    # Starve the envelope directly (stand-in for KV blocks + hi-tier
+    # promotions filling HBM) — queue stays empty throughout.
+    grab = int(eng.budget.free - 0.01 * eng.budget.cap)
+    assert eng.budget.try_reserve(grab, account="pressure")
+    snap = eng.load_snapshot()
+    assert snap["queue_depth"] == 0.0
+    assert snap["budget_headroom_frac"] < 0.05
+    shed = eng.submit(Request(tokens=_prompt(cfg, 8, 0), max_new_tokens=2,
+                              qos="batch"))
+    assert shed.state is RequestState.SHED
+    down = eng.submit(Request(tokens=_prompt(cfg, 8, 1), max_new_tokens=2,
+                              qos="standard"))
+    assert down.exec_qos == "batch"              # downgraded, not dropped
+    prem = eng.submit(Request(tokens=_prompt(cfg, 8, 2), max_new_tokens=2,
+                              qos="premium"))
+    assert prem.exec_qos == "premium"            # premium never touched
+    eng.budget.release(grab, account="pressure")
+    ok = eng.submit(Request(tokens=_prompt(cfg, 8, 3), max_new_tokens=2,
+                            qos="batch"))
+    assert ok.state is not RequestState.SHED
+    eng.drain()
+    assert eng.stats()["shed_requests"] >= 1
+    assert all(len(h.tokens) == 2 for h in (down, prem, ok))
+    assert shed.tokens == []
+
+
 def test_expired_batch_deadline_dropped(serving_setup):
     import jax
     cfg, params = serving_setup
