@@ -1,0 +1,175 @@
+"""Residency hierarchy (ISSUE 8): streaming cold start vs full materialize,
+and global vs per-layer allocation under a shifting hot set.
+
+Two structural claims, measured on the shared trained bench model:
+
+* **Streaming TTFT < full-materialize TTFT.** The full path quantizes every
+  expert and fills the hi pool before the first forward; the streaming path
+  builds an empty bank, backfills prepacked lo rows from the expert-sharded
+  checkpoint, and serves the moment the lo tier completes (hi promotions
+  come later, driven by real traffic). Both TTFTs are wall-clock from
+  "checkpoint in hand" to the first emitted token, with jit compilation
+  warmed beforehand so the comparison is residency work, not XLA. The
+  ordering is asserted, not just reported.
+
+* **Transfer spend under a workload shift, global vs per-layer.** When the
+  hot set migrates (text → math → code prompts draw from disjoint vocab
+  slices), the per-layer top-n rule re-ranks every layer against its own
+  fixed quota while the global knapsack funds any swap that beats the
+  margin anywhere in the model — including cross-layer moves the per-layer
+  rule cannot express. Both policies' ``bytes_moved`` / promotion counts
+  land side by side so the trade is machine-comparable across PRs.
+
+Rows land in ``experiments/BENCH_hierarchy.json``. ``BENCH_SMOKE=1``
+shrinks the sweep.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import tempfile
+import time
+
+import jax
+
+from benchmarks.common import (BENCH_SMOKE, bench_backend, bench_config,
+                               clone, trained_model)
+from repro.core import ControllerConfig
+from repro.models import init_params
+from repro.serving import (EngineConfig, InferenceEngine, Request,
+                           load_streaming_params, make_backend, make_prompts,
+                           save_expert_shards)
+
+N_NEW = 3 if BENCH_SMOKE else 8
+PROMPT = 32
+TRIALS = 3
+SHIFT_ROUNDS = 1 if BENCH_SMOKE else 3
+JSON_OUT = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                        "BENCH_hierarchy.json")
+
+
+def _moe_positions(cfg):
+    return [p for p, _ in enumerate(cfg.superblock_or_default())
+            if cfg.ffn_kind(p) == "moe"]
+
+
+def _ttft(cfg, params, backend, toks):
+    """Wall-clock from backend materialization to the first token."""
+    t0 = time.perf_counter()
+    eng = InferenceEngine(cfg, params, backend,
+                          EngineConfig(max_slots=1, max_len=96))
+    h = eng.submit(Request(tokens=toks[0], max_new_tokens=N_NEW))
+    steps = 0
+    while not h.tokens:
+        eng.step()
+        steps += 1
+        assert steps < 10_000
+    ttft = time.perf_counter() - t0
+    eng.drain()
+    eng.flush()
+    return ttft, eng
+
+
+def _bench_streaming(report):
+    # A wider expert population than the shared bench model: cold-start
+    # residency work scales with L×E (quantize-everything vs stage-packed-
+    # rows) while the shared prefill/decode cost does not, so the structural
+    # gap is measurable above CPU timing noise. Weights are untrained —
+    # this figure times residency, not quality.
+    cfg = dataclasses.replace(
+        bench_config(), name="bench-moe-wide",
+        moe=dataclasses.replace(bench_config().moe, num_experts=16))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    toks = make_prompts("text", cfg.vocab_size, 1, PROMPT)
+
+    def full_backend():
+        return bench_backend("dynaexq")
+
+    shard_dir = tempfile.mkdtemp(prefix="repro_shards_")
+    try:
+        save_expert_shards(shard_dir, clone(params), _moe_positions(cfg),
+                           lo_bits=4)
+
+        def stream_backend():
+            return make_backend("dynaexq", lo_bits=4, n_hi_per_layer=2,
+                                stream=shard_dir, stream_experts_per_tick=64)
+
+        # Warm every jit cache (quantize, row staging, prefill, decode) so
+        # the timed runs compare residency work, not XLA compiles.
+        for mk, p in ((full_backend, clone(params)),
+                      (stream_backend, load_streaming_params(shard_dir))):
+            weng = InferenceEngine(cfg, p, mk(),
+                                   EngineConfig(max_slots=1, max_len=96))
+            weng.generate({"tokens": toks}, 2)
+            weng.flush()
+            del weng
+
+        full_s = min(_ttft(cfg, clone(params), full_backend(), toks)[0]
+                     for _ in range(TRIALS))
+        stream_s, seng = float("inf"), None
+        for _ in range(TRIALS):
+            t0 = time.perf_counter()
+            sparams = load_streaming_params(shard_dir)  # part of cold start
+            load_s = time.perf_counter() - t0
+            s, eng = _ttft(cfg, sparams, stream_backend(), toks)
+            if s + load_s < stream_s:
+                stream_s, seng = s + load_s, eng
+        assert seng.backend.serving_ready()
+        assert stream_s < full_s, (
+            f"streaming TTFT {stream_s:.3f}s must beat full-materialize "
+            f"TTFT {full_s:.3f}s")
+        row = {"full_ttft_s": full_s, "stream_ttft_s": stream_s,
+               "num_experts": cfg.moe.num_experts,
+               "ready_frac": float(seng.backend.ready_frac()),
+               "lo_bytes_staged": float(sum(
+                   s.stats["lo_bytes_staged"]
+                   for s in seng.backend.stores.values()))}
+        report("hierarchy/stream_ttft", stream_s * 1e6,
+               f"full={full_s*1e3:.1f}ms stream={stream_s*1e3:.1f}ms")
+        return row
+    finally:
+        shutil.rmtree(shard_dir, ignore_errors=True)
+
+
+def _bench_allocation(cfg, params, report):
+    rows = {}
+    for mode in ("global", "per_layer"):
+        be = make_backend(
+            "dynaexq", lo_bits=4, n_hi_per_layer=2,
+            global_alloc=(mode == "global"),
+            controller=ControllerConfig(update_interval_s=0.0))
+        eng = InferenceEngine(cfg, clone(params), be,
+                              EngineConfig(max_slots=4, max_len=96))
+        for _ in range(SHIFT_ROUNDS):
+            for w in ("text", "math", "code"):     # the hot set migrates
+                toks = make_prompts(w, cfg.vocab_size, 4, PROMPT)
+                for b in range(4):
+                    eng.submit(Request(tokens=toks[b],
+                                       max_new_tokens=N_NEW))
+                eng.drain()
+        eng.flush()
+        st = be.stats()
+        hi = be.hi_sets()
+        rows[mode] = {
+            "bytes_moved": float(st["bytes_moved"]),
+            "promotions": float(st["promotions"]),
+            "demotions": float(st["demotions"]),
+            "hi_slots": sum(len(s) for sets in hi.values() for s in sets)}
+        report(f"hierarchy/shift_{mode}", st["bytes_moved"],
+               f"promotions={st['promotions']:.0f}")
+    return rows
+
+
+def run(report) -> None:
+    cfg, params, _ = trained_model()
+    out = {"streaming": _bench_streaming(report),
+           "allocation": _bench_allocation(cfg, params, report)}
+    with open(JSON_OUT, "w") as f:
+        json.dump(out, f, indent=2)
+    report("hierarchy/json", 0.0, JSON_OUT)
+
+
+if __name__ == "__main__":
+    run(lambda n, us, d: print(f"{n},{us:.1f},{d}"))

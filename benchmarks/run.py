@@ -29,9 +29,10 @@ def main() -> None:
         print(f"{name},{us_per_call:.1f},{derived}")
 
     from benchmarks import (activation_ratio, demotion_curve, ep_scaling,
-                            kernels_bench, kv_reuse, prompt_scaling, quality,
-                            serving_perf, serving_sim, slo_serving,
-                            spec_decode, workload_shift)
+                            hierarchy, kernels_bench, kv_reuse,
+                            prompt_scaling, quality, serving_perf,
+                            serving_sim, slo_serving, spec_decode,
+                            workload_shift)
     suites = [
         ("activation_ratio", activation_ratio.run),
         ("workload_shift", workload_shift.run),
@@ -42,6 +43,7 @@ def main() -> None:
         ("slo_serving", slo_serving.run),
         ("kv_reuse", kv_reuse.run),
         ("ep_scaling", ep_scaling.run),
+        ("hierarchy", hierarchy.run),
         ("spec_decode", spec_decode.run),
         ("prompt_scaling", prompt_scaling.run),
         ("kernels", kernels_bench.run),

@@ -1,24 +1,30 @@
 """DynaExq core — the paper's contribution: online, budget-constrained
 precision allocation for MoE serving (hotness → top-n policy → VER +
 non-blocking transitions under a hard HBM budget)."""
+from repro.core.allocator import (AllocatorConfig, GlobalAllocator,
+                                  TierAssignment)
 from repro.core.budget import (BudgetTracker, BudgetView, BudgetPlan,
-                               UNBOUNDED, plan_budget, BudgetExceeded)
-from repro.core.controller import ControllerConfig, DynaExqController
+                               HierarchyPlan, UNBOUNDED, plan_budget,
+                               plan_hierarchy, BudgetExceeded)
+from repro.core.controller import (ControllerConfig, DynaExqController,
+                                   EPCoordinator, RebalanceConfig)
 from repro.core.hotness import HotnessEstimator, mask_row_counts
 from repro.core.policy import PolicyConfig, select_hi_set
 from repro.core.pools import SlotPool
 from repro.core.transitions import TransitionManager
 from repro.core.ver import (
-    ExpertBankQ, Residency, build_bank, expert_hi_nbytes, expert_lo_nbytes,
-    publish, unpublish, write_hi_slot,
+    ExpertBankQ, Residency, build_bank, build_bank_empty, expert_hi_nbytes,
+    expert_lo_nbytes, publish, unpublish, write_hi_slot, write_lo_expert,
 )
 
 __all__ = [
-    "BudgetTracker", "BudgetView", "BudgetPlan", "UNBOUNDED",
-    "plan_budget", "BudgetExceeded",
-    "ControllerConfig", "DynaExqController", "HotnessEstimator",
-    "mask_row_counts",
+    "AllocatorConfig", "GlobalAllocator", "TierAssignment",
+    "BudgetTracker", "BudgetView", "BudgetPlan", "HierarchyPlan",
+    "UNBOUNDED", "plan_budget", "plan_hierarchy", "BudgetExceeded",
+    "ControllerConfig", "DynaExqController", "EPCoordinator",
+    "RebalanceConfig", "HotnessEstimator", "mask_row_counts",
     "PolicyConfig", "select_hi_set", "SlotPool", "TransitionManager",
-    "ExpertBankQ", "Residency", "build_bank", "expert_hi_nbytes",
-    "expert_lo_nbytes", "publish", "unpublish", "write_hi_slot",
+    "ExpertBankQ", "Residency", "build_bank", "build_bank_empty",
+    "expert_hi_nbytes", "expert_lo_nbytes", "publish", "unpublish",
+    "write_hi_slot", "write_lo_expert",
 ]

@@ -101,6 +101,20 @@ class DynaExqController:
         self.tm.drain()
         self.tm.publish_ready()
 
+    def apply_plan(self, promotions, demotions) -> None:
+        """Enqueue an externally computed transition plan (the global
+        cross-layer allocator's) and run one drain/publish window. The
+        lists are (layer, expert) pairs — promotions hottest-first,
+        demotions coldest-first, exactly the admission order ``update()``
+        would derive per layer; the transition pipeline (budget gates,
+        rate limit, publish-then-switch) is identical."""
+        for l, e in demotions:
+            self.tm.request_demotion(int(l), int(e))
+        for l, e in promotions:
+            self.tm.request_promotion(int(l), int(e))
+        self.tm.drain()
+        self.tm.publish_ready()
+
     def flush(self) -> None:
         """Block on all in-flight transitions and publish (tests/shutdown)."""
         self.tm.drain()
@@ -137,7 +151,8 @@ class EPCoordinator:
         self.n_shards = n_shards
         self.cfg = cfg if cfg is not None else RebalanceConfig()
         self._entries = []   # (controller, moe_params dict, placement (L,E))
-        self.stats = {"migrations": 0, "windows": 0, "bytes_moved": 0}
+        self.stats = {"migrations": 0, "windows": 0, "bytes_moved": 0,
+                      "deferred_migrations": 0}
         self._last = time.monotonic()
 
     def register(self, ctl: DynaExqController, moe_params: Dict) -> None:
@@ -212,6 +227,19 @@ class EPCoordinator:
         either side could not be brought to RESIDENT_LO (in-flight
         promotion) — the pair is retried at the next window."""
         tm = ctl.tm
+        bank = ctl.bank
+        # Relabeling ships both experts' lo rows across the interconnect —
+        # price those bytes into the SAME per-window transfer budget
+        # promotions draw from (``migration_bytes_per_window``), so a
+        # window saturated by promotions defers rebalancing (and vice
+        # versa) instead of silently exceeding the transfer envelope.
+        relabel_bytes = 2 * sum(
+            (qt.packed.nbytes + qt.scales.nbytes)
+            // (qt.packed.shape[0] * qt.packed.shape[1])
+            for qt in bank.lo.values())
+        if not tm.try_consume_window(relabel_bytes):
+            self.stats["deferred_migrations"] += 1
+            return False
         lo_val = Residency.RESIDENT_LO.value
         if tm.state[l, e] != lo_val or tm.state[l, f] != lo_val:
             tm.request_demotion(l, e)
@@ -220,7 +248,6 @@ class EPCoordinator:
             tm.publish_ready(wait=True)
         if tm.state[l, e] != lo_val or tm.state[l, f] != lo_val:
             return False
-        bank = ctl.bank
         li, ei, fi = np.int32(l), np.int32(e), np.int32(f)
         moved = 0
         for name, qt in bank.lo.items():
@@ -239,6 +266,9 @@ class EPCoordinator:
                 arr = arr.copy()
                 tm.host_hi[name] = arr
             arr[l, [e, f]] = arr[l, [f, e]]
+        swap_masks = getattr(tm.host_hi, "swap_experts", None)
+        if swap_masks is not None:      # HostExpertStore: relabel its
+            swap_masks(l, e, f)         # presence/residency masks too
         ctl.hotness.swap(l, e, f)
         placement[l, [e, f]] = placement[l, [f, e]]
         # Both directions of the pairwise exchange cross the interconnect.

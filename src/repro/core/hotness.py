@@ -58,3 +58,31 @@ class HotnessEstimator:
         positions everywhere — the EMA history must follow its expert)."""
         self.scores[layer, [e, f]] = self.scores[layer, [f, e]]
         self.counts[layer, [e, f]] = self.counts[layer, [f, e]]
+
+    # -- persistence (cold-start priors) ---------------------------------
+    def state_dict(self) -> dict:
+        """EMA + unfolded counters, serializable with ``np.savez``."""
+        return {"alpha": np.float64(self.alpha),
+                "counts": self.counts.copy(),
+                "scores": self.scores.copy(),
+                "intervals": np.int64(self.intervals)}
+
+    def load_state(self, state: dict) -> None:
+        """Restore a previous run's traffic history. Shapes must match the
+        live estimator (a resized model must not inherit stale priors)."""
+        scores = np.asarray(state["scores"], np.float64)
+        counts = np.asarray(state["counts"], np.int64)
+        if scores.shape != self.scores.shape:
+            raise ValueError(
+                f"hotness state shape {scores.shape} != "
+                f"{self.scores.shape}")
+        self.scores = scores.copy()
+        self.counts = counts.copy()
+        self.intervals = int(state.get("intervals", 0))
+
+    def save(self, path: str) -> None:
+        np.savez(path, **self.state_dict())
+
+    def load(self, path: str) -> None:
+        with np.load(path) as z:
+            self.load_state({k: z[k] for k in z.files})

@@ -31,6 +31,10 @@ class SlotPool:
     def n_free(self) -> int:
         return len(self._free)
 
+    @property
+    def n_used(self) -> int:
+        return self.n_slots - len(self._free)
+
     def alloc(self, expert: int) -> int:
         """Pop the lowest free slot for ``expert``; raises if full (the
         admission check must prevent that)."""
@@ -81,6 +85,10 @@ class ShardedSlotPool:
     @property
     def n_free(self) -> int:
         return sum(len(f) for f in self._free)
+
+    @property
+    def n_used(self) -> int:
+        return self.n_slots - self.n_free
 
     def n_free_in(self, shard: int) -> int:
         return len(self._free[shard])

@@ -85,6 +85,12 @@ class TransitionManager:
         # reading device arrays back every window would sync the stream).
         self.slot_map_h = np.asarray(bank.slot_map).copy()
         self.slot_owner_h = np.asarray(bank.slot_owner).copy()
+        # One per-window transfer meter shared by promotion admission AND
+        # EP ownership migrations (relabeling bytes) — both ride the same
+        # interconnect, so they contend for the same budget. ``drain()``
+        # opens a fresh window; migrations spend whatever the window's
+        # promotions left.
+        self._window_used = 0
         self.stats = {"promoted": 0, "demoted": 0, "deferred": 0,
                       "bytes_moved": 0}
 
@@ -106,21 +112,36 @@ class TransitionManager:
             self.state[layer, expert] = Residency.DEMOTING.value
             self.evict_q.append((layer, expert))
 
+    def try_consume_window(self, nbytes: int) -> bool:
+        """Charge ``nbytes`` against the current window's transfer budget
+        (always succeeds when no rate limit is configured). The EP
+        coordinator prices its relabeling bytes here, so rebalancing and
+        promotions genuinely contend for one per-window budget."""
+        if not self.rate_limit:
+            return True
+        if self._window_used + nbytes > self.rate_limit:
+            return False
+        self._window_used += nbytes
+        return True
+
     # -- worker side -----------------------------------------------------
     def drain(self) -> None:
-        """Process evictions, then admit promotions under both gates."""
+        """Process evictions, then admit promotions under both gates.
+        Opens a fresh transfer window: promotions spend first, and any
+        coordinator migrations until the next drain spend the remainder."""
         while self.evict_q:
             l, e = self.evict_q.popleft()
             if self.state[l, e] != Residency.DEMOTING.value:
                 continue
             self._demote(l, e)
-        window_bytes = 0
+        self._window_used = 0
         deferred = deque()
         while self.update_q:
             l, e = self.update_q.popleft()
             if self.state[l, e] != Residency.PROMOTING.value:
                 continue
-            if self.rate_limit and window_bytes + self.hi_bytes > self.rate_limit:
+            if self.rate_limit and \
+                    self._window_used + self.hi_bytes > self.rate_limit:
                 deferred.append((l, e))
                 continue
             shard = self.shard_of_expert(e)
@@ -131,14 +152,21 @@ class TransitionManager:
                 continue
             slot = self.pools[l].alloc(e, shard)
             self._issue_copy(l, e, slot)
-            window_bytes += self.hi_bytes
+            self._window_used += self.hi_bytes
         self.update_q = deferred
 
     def _issue_copy(self, layer: int, expert: int, slot: int) -> None:
-        """Async hi-weight copy into the (unpublished) pool slot."""
+        """Async hi-weight copy into the (unpublished) pool slot. When the
+        host side is a ``HostExpertStore`` (duck-typed via ``ensure_hi``),
+        the expert's host rows are materialized first — on a streaming cold
+        start that is the lazy read from the checkpoint shard."""
+        ensure = getattr(self.host_hi, "ensure_hi", None)
+        if ensure is not None:
+            ensure(layer, expert)
         new_hi = {}
         for name, leaf in self.bank.hi.items():
-            w = jnp.asarray(self.host_hi[name][layer, expert])
+            w = jnp.asarray(self.host_hi[name][layer, expert]).astype(
+                leaf.dtype)
             new_hi[name] = write_hi_slot(leaf, jnp.int32(layer),
                                          jnp.int32(slot), w)
         self.bank.hi = new_hi  # dispatched, not yet waited on

@@ -121,6 +121,32 @@ def build_bank(expert_weights: Dict[str, jax.Array], n_hi: int,
     return ExpertBankQ(lo=lo, hi=hi, slot_owner=slot_owner, slot_map=slot_map)
 
 
+def build_bank_empty(expert_weights_shapes: Dict[str, tuple], n_hi: int,
+                     lo_bits: int, group_size: int = 64) -> ExpertBankQ:
+    """A bank whose lo rows are NOT yet materialized (streaming cold start):
+    packed codes and scales are zero until ``write_lo_expert`` stages each
+    expert's rows from the checkpoint shards. Callers gate serving on the
+    store's ``lo_valid`` mask — a forward pass must never read a zero row.
+
+    ``expert_weights_shapes``: name → (L, E, K, N) logical dense shapes."""
+    from repro.quant.qtensor import _elems_per_byte   # layout contract
+    lo, hi = {}, {}
+    first = next(iter(expert_weights_shapes.values()))
+    L, E = first[0], first[1]
+    for n, shape in sorted(expert_weights_shapes.items()):
+        l4, e4, k, nn = shape
+        lo[n] = QuantizedTensor(
+            packed=jnp.zeros((l4, e4, k // _elems_per_byte(lo_bits), nn),
+                             jnp.uint8),
+            scales=jnp.zeros((l4, e4, k // group_size, nn), jnp.bfloat16),
+            bits=lo_bits, group_size=group_size, shape=tuple(shape))
+        hi[n] = jnp.zeros((l4, n_hi, k, nn), jnp.bfloat16)
+    slot_owner = jnp.full((L, n_hi), -1, jnp.int32)
+    slot_map = jnp.full((L, E), -1, jnp.int32)
+    return ExpertBankQ(lo=lo, hi=hi, slot_owner=slot_owner,
+                       slot_map=slot_map)
+
+
 def expert_hi_nbytes(expert_weights_shapes: Dict[str, tuple], hi_bits: int = 16,
                      group_size: int = 64) -> int:
     """Device bytes of ONE expert's hi-precision version (per layer)."""
@@ -159,6 +185,28 @@ def write_hi_slot(hi_leaf: jax.Array, layer: jax.Array, slot: jax.Array,
     """
     return jax.lax.dynamic_update_slice(
         hi_leaf, w[None, None], (layer, slot) + (0,) * (w.ndim))
+
+
+@jax.jit
+def write_lo_expert(leaf: jax.Array, layer: jax.Array, expert: jax.Array,
+                    row: jax.Array) -> jax.Array:
+    """Copy one expert's lo-tier rows (packed codes OR scales) into an
+    (L, E, …) bank leaf — the H2D staging write of host→lo promotion and
+    streaming cold start. Same publish-then-switch discipline as
+    ``write_hi_slot``: the row is unreferenced until its residency mask
+    flips, so XLA overlaps the copy with in-flight serve steps."""
+    return jax.lax.dynamic_update_slice(
+        leaf, row.astype(leaf.dtype)[None, None],
+        (layer, expert) + (0,) * row.ndim)
+
+
+@jax.jit
+def write_lo_rows(leaf: jax.Array, layer: jax.Array, idx: jax.Array,
+                  vals: jax.Array) -> jax.Array:
+    """Bulk variant of :func:`write_lo_expert`: stage several experts of one
+    layer in a single scatter — the cold-start pump issues one device write
+    per (layer, leaf) instead of one per expert cell."""
+    return leaf.at[layer, idx].set(vals.astype(leaf.dtype))
 
 
 @jax.jit

@@ -19,7 +19,8 @@ from repro.launch.mesh import make_ep_mesh
 from repro.models import init_params
 from repro.serving import (BACKENDS, EngineConfig, InferenceEngine,
                            OffloadConfig, Request, SamplingParams,
-                           SchedulerConfig, make_backend, make_prompts)
+                           SchedulerConfig, load_streaming_params,
+                           make_backend, make_prompts, save_expert_shards)
 
 
 def build_backend(args):
@@ -31,7 +32,12 @@ def build_backend(args):
             n_hi_per_layer=None if args.hbm_gb else args.n_hi,
             hbm_gb=args.hbm_gb,
             controller=ControllerConfig(update_interval_s=0.25),
-            ep_shards=args.ep_shards)
+            ep_shards=args.ep_shards,
+            global_alloc=False if args.per_layer_alloc else None,
+            sensitivity=args.sensitivity,
+            lo_resident_total=args.lo_resident_total,
+            hotness_path=args.hotness_path,
+            stream=args.stream_from)
     if args.backend == "static":
         return make_backend("static", lo_bits=args.lo_bits)
     if args.backend == "offload":
@@ -103,6 +109,30 @@ def main():
                          "chunked prefills interleaved with decode "
                          "(0 = single-shot; rounded down to a "
                          "block-aligned prefill bucket)")
+    ap.add_argument("--per-layer-alloc", action="store_true",
+                    help="use the paper's per-layer top-n policy instead "
+                         "of the default global cross-layer knapsack "
+                         "allocator (dynaexq, single-shard)")
+    ap.add_argument("--sensitivity", default=None,
+                    help=".npz of per-expert quantization sensitivity "
+                         "(quant.sensitivity.save_sensitivity) — weights "
+                         "the global allocator's hotness ranking")
+    ap.add_argument("--lo-resident-total", type=int, default=None,
+                    help="enable the host-DRAM third tier: only this many "
+                         "(layer, expert) cells stay device-lo-resident; "
+                         "the rest pay a modeled demand-fetch stall when "
+                         "routed")
+    ap.add_argument("--hotness-path", default=None,
+                    help="prefix for hotness snapshots: restored at "
+                         "startup (warm allocator prior + hottest-first "
+                         "streaming) and saved after the run")
+    ap.add_argument("--stream-from", default=None,
+                    help="expert-sharded checkpoint dir (save_expert_"
+                         "shards): stream the lo tier in at startup and "
+                         "serve before the model fully materializes")
+    ap.add_argument("--save-shards", default=None,
+                    help="write the expert-sharded serving checkpoint to "
+                         "this dir and exit (streaming cold-start source)")
     ap.add_argument("--ep-shards", type=int, default=1,
                     help="expert-parallel serving over this many devices: "
                          "tokens and experts shard over the model axis, MoE "
@@ -126,7 +156,19 @@ def main():
     print(f"[serve] {cfg.name} backend={args.backend} "
           f"devices={jax.device_count()} spec_k={spec_k} "
           f"ep_shards={args.ep_shards}")
-    params = init_params(jax.random.PRNGKey(0), cfg)
+    if args.stream_from:
+        # Streaming cold start: only the base (non-expert) params load
+        # synchronously; the lo tier backfills behind the engine.
+        params = load_streaming_params(args.stream_from)
+    else:
+        params = init_params(jax.random.PRNGKey(0), cfg)
+    if args.save_shards:
+        positions = [p for p, _ in enumerate(cfg.superblock_or_default())
+                     if cfg.ffn_kind(p) == "moe"] if cfg.is_moe else []
+        save_expert_shards(args.save_shards, params, positions,
+                           lo_bits=args.lo_bits)
+        print(f"[serve] expert-sharded checkpoint -> {args.save_shards}")
+        return
     engine = InferenceEngine(
         cfg, params, build_backend(args),
         EngineConfig(max_slots=args.batch,
@@ -176,6 +218,9 @@ def main():
     print(f"[serve] uniform stats: "
           f"{ {k: round(float(v), 4) for k, v in st.items()} }")
     print(f"[serve] resident expert bytes: {engine.device_bytes():,}")
+    if args.hotness_path and hasattr(engine.backend, "save_hotness"):
+        engine.backend.save_hotness()
+        print(f"[serve] hotness snapshot -> {args.hotness_path}_p*.npz")
 
 
 if __name__ == "__main__":

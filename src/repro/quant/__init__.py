@@ -16,6 +16,8 @@ from repro.quant.qtensor import (
     quantized_nbytes,
 )
 from repro.quant.ptq import quantize_expert_bank, quantize_tree
+from repro.quant.sensitivity import (expert_sensitivity, load_sensitivity,
+                                     model_sensitivity, save_sensitivity)
 
 __all__ = [
     "QuantizedTensor",
@@ -27,4 +29,8 @@ __all__ = [
     "quantized_nbytes",
     "quantize_expert_bank",
     "quantize_tree",
+    "expert_sensitivity",
+    "model_sensitivity",
+    "save_sensitivity",
+    "load_sensitivity",
 ]

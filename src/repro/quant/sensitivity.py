@@ -1,0 +1,90 @@
+"""Offline per-expert quantization-sensitivity scores.
+
+The global allocator ranks (layer, expert) cells by ``hotness ×
+sensitivity``: an expert whose weights survive int4/int2 nearly unchanged
+can serve hot traffic from the lo tier, while a fragile one earns a hi slot
+at lower traffic. Sensitivity is measured offline (one pass over the
+checkpoint, no calibration data needed for the default):
+
+* **weight-space** (default): relative Frobenius quantization error
+  ``‖W − dq(q(W))‖_F / ‖W‖_F`` per (layer, expert), averaged over the
+  expert's projection matrices. Cheap, deterministic, data-free.
+* **activation-aware** (``probes > 0``): the same ratio measured through
+  random probe activations ``‖x(W − Ŵ)‖_F / ‖xW‖_F`` — weights that only
+  err in rarely-excited directions stop looking fragile.
+
+Scores are consumed *normalized to unit mean* (``normalize``), so they bend
+the hotness ranking without rescaling the budget currency, and persist via
+``save_sensitivity``/``load_sensitivity`` (one ``.npz``, a key per MoE
+position) so serving never recomputes them.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.quant.qtensor import quantize
+
+
+def expert_sensitivity(experts: Dict[str, jax.Array], lo_bits: int,
+                       group_size: int = 64, probes: int = 0,
+                       seed: int = 0) -> np.ndarray:
+    """(L, E) sensitivity of one MoE stack's experts to the lo-tier
+    quantizer. ``experts``: name → (L, E, K, N) dense weights."""
+    per_name = []
+    key = jax.random.PRNGKey(seed)
+    for name in sorted(experts):
+        w = jnp.asarray(experts[name], jnp.float32)
+        err = w - quantize(w, bits=lo_bits,
+                           group_size=group_size).dequantize(jnp.float32)
+        if probes > 0:
+            key, sub = jax.random.split(key)
+            x = jax.random.normal(sub, (probes, w.shape[-2]), jnp.float32)
+            w = jnp.einsum("pk,lekn->lepn", x, w)
+            err = jnp.einsum("pk,lekn->lepn", x, err)
+        num = jnp.sqrt(jnp.sum(err * err, axis=(-2, -1)))
+        den = jnp.sqrt(jnp.sum(w * w, axis=(-2, -1)))
+        per_name.append(np.asarray(num / jnp.maximum(den, 1e-12)))
+    return np.mean(np.stack(per_name, 0), axis=0)
+
+
+def normalize(sens: np.ndarray) -> np.ndarray:
+    """Unit-mean scores: sensitivity bends the hotness ranking, it must not
+    rescale the shared budget currency (all-equal scores are a no-op)."""
+    s = np.asarray(sens, np.float64)
+    m = s.mean()
+    if not np.isfinite(m) or m <= 0:
+        return np.ones_like(s)
+    return s / m
+
+
+def model_sensitivity(params: Dict, moe_positions, lo_bits: int,
+                      group_size: int = 64, probes: int = 0,
+                      seed: int = 0) -> Dict[str, np.ndarray]:
+    """Sensitivity for every MoE position of a params tree: position key →
+    (L, E) raw scores (normalize at the point of use)."""
+    out: Dict[str, np.ndarray] = {}
+    for pos in moe_positions:
+        experts = params["blocks"][str(pos)]["moe"]["experts"]
+        if experts is None:
+            raise ValueError(
+                f"position {pos}: experts already freed — run the "
+                f"sensitivity pass before bank materialization")
+        out[str(pos)] = expert_sensitivity(
+            experts, lo_bits, group_size=group_size, probes=probes,
+            seed=seed)
+    return out
+
+
+def save_sensitivity(path: str, sens_by_pos: Dict[str, np.ndarray]) -> None:
+    np.savez(path, **{f"pos_{k}": np.asarray(v, np.float64)
+                      for k, v in sens_by_pos.items()})
+
+
+def load_sensitivity(path: str) -> Dict[str, np.ndarray]:
+    with np.load(path) as z:
+        return {k[len("pos_"):]: z[k] for k in z.files
+                if k.startswith("pos_")}

@@ -4,6 +4,7 @@ from repro.serving.backends import (BACKENDS, DynaExqBackend, Fp16Backend,
                                     StaticPTQBackend, make_backend)
 from repro.serving.engine import (EngineConfig, InferenceEngine,
                                   RequestHandle, RequestState)
+from repro.serving.hoststore import FetchModel, HostExpertStore
 from repro.serving.kvpool import KVBlockPool, KVLease, TRASH_BLOCK
 from repro.serving.prefix import PrefixTrie
 from repro.serving.requests import (Request, RequestStream, WORKLOADS,
@@ -14,15 +15,21 @@ from repro.serving.scheduler import (QOS_CLASSES, Scheduler, SchedulerConfig,
                                      SlotSnapshot, TieredQueue, WORKLOAD_QOS,
                                      resolve_qos)
 from repro.serving.spec import SpecDecoder, accept_burst, all_lo_banks
+from repro.serving.streaming import (ShardSource, hotness_stage_order,
+                                     load_streaming_params,
+                                     save_expert_shards)
 
 __all__ = [
-    "BACKENDS", "DynaExqBackend", "EngineConfig", "Fp16Backend", "GREEDY",
+    "BACKENDS", "DynaExqBackend", "EngineConfig", "FetchModel",
+    "Fp16Backend", "GREEDY", "HostExpertStore",
     "InferenceEngine", "KVBlockPool", "KVLease", "LRUSet", "OffloadBackend",
     "OffloadConfig", "PrefixTrie", "QOS_CLASSES", "Request", "RequestHandle",
     "RequestSampler", "RequestState", "RequestStream", "ResidencyBackend",
     "STAT_KEYS", "SamplingParams", "Scheduler", "SchedulerConfig",
-    "SlotSnapshot", "SpecDecoder", "StaticPTQBackend", "TRASH_BLOCK",
-    "TieredQueue", "WORKLOADS", "WORKLOAD_QOS", "accept_burst",
-    "all_lo_banks", "counter_uniform", "make_backend", "make_prompts",
-    "mixed_stream", "resolve_qos", "sampling_probs",
+    "ShardSource", "SlotSnapshot", "SpecDecoder", "StaticPTQBackend",
+    "TRASH_BLOCK", "TieredQueue", "WORKLOADS", "WORKLOAD_QOS",
+    "accept_burst", "all_lo_banks", "counter_uniform",
+    "hotness_stage_order", "load_streaming_params", "make_backend",
+    "make_prompts", "mixed_stream", "resolve_qos", "sampling_probs",
+    "save_expert_shards",
 ]

@@ -35,18 +35,27 @@ Protocol (one backend instance per engine):
 from __future__ import annotations
 
 import dataclasses
-from collections import OrderedDict
-from typing import Dict, Iterable, Optional, Protocol, runtime_checkable
+import math
+import os
+import time
+from collections import OrderedDict, deque
+from typing import (Dict, Iterable, Optional, Protocol, Tuple,
+                    runtime_checkable)
 
 import jax
 import numpy as np
 
 from repro.core import (ControllerConfig, DynaExqController, build_bank,
                         expert_hi_nbytes, expert_lo_nbytes, plan_budget)
+from repro.core.allocator import AllocatorConfig, GlobalAllocator
 from repro.core.budget import BudgetTracker
 from repro.core.controller import EPCoordinator, RebalanceConfig
 from repro.core.hotness import mask_row_counts
+from repro.core.ver import build_bank_empty
 from repro.models.config import ArchConfig
+from repro.quant.sensitivity import load_sensitivity, normalize
+from repro.serving.hoststore import FetchModel, HostExpertStore
+from repro.serving.streaming import ShardSource, hotness_stage_order
 
 GiB = 1 << 30
 
@@ -62,11 +71,16 @@ GiB = 1 << 30
 #: The QoS-scheduler meters (``preemptions``/``resumes``/``shed_requests``/
 #: ``downgraded``) join the schema the same way: zeros from every backend,
 #: overwritten by the engine's live scheduler counters.
+#: ``host_fetches`` counts demand reads from the host tier — OffloadBackend's
+#: cache misses and DynaExq's routed-but-host-resident experts land in the
+#: same column, so "how often did the critical path touch host memory" is
+#: directly comparable across residency strategies.
 STAT_KEYS = ("ttft_s", "tpot_s", "stall_s", "bytes_moved",
              "promotions", "demotions",
              "accept_rate", "draft_tokens", "verified_tokens", "spec_rounds",
              "active_experts", "dispatch_pad_ratio",
-             "preemptions", "resumes", "shed_requests", "downgraded")
+             "preemptions", "resumes", "shed_requests", "downgraded",
+             "host_fetches")
 
 
 def _param_bytes(tree) -> int:
@@ -199,6 +213,16 @@ class _BackendBase:
     def flush(self) -> None:
         pass
 
+    # -- cold-start readiness --------------------------------------------
+    def serving_ready(self) -> bool:
+        """Whether forwards may run (False only mid-streaming-cold-start —
+        the engine idles admission and keeps ticking the backend)."""
+        return True
+
+    def ready_frac(self) -> float:
+        """Residency build-out progress in [0, 1] (1.0 once serving)."""
+        return 1.0
+
     # -- introspection ---------------------------------------------------
     def router_counts(self) -> Dict[str, np.ndarray]:
         """Accumulated router-selection counts per MoE position, (L, E)."""
@@ -272,10 +296,35 @@ class StaticPTQBackend(_BackendBase):
 
 
 class DynaExqBackend(_BackendBase):
-    """The paper's system: lo tier always resident + a budget-derived hi
-    pool whose occupancy the online controller re-allocates from router
-    traces. Promotions ride the migration stream (off the critical path) —
-    ``observe`` only feeds hotness; ``tick`` runs the policy window.
+    """The paper's system, extended to the full residency ladder: a hi-bf16
+    pool, the always-materializable lo tier, and (optionally) a host-DRAM
+    third tier — governed by ONE ``GlobalAllocator`` knapsack across every
+    layer of every MoE position. Promotions ride the migration stream (off
+    the critical path) — ``observe`` only feeds hotness; ``tick`` runs the
+    allocation window.
+
+    ``global_alloc`` (default on for single-shard serving): replaces the L
+    independent per-layer top-n policies with one cross-layer allocation —
+    a hot layer may hold more hi slots than a cold layer at the same total
+    byte budget. Each bank's physical per-layer slot pool is built with
+    ``slots_slack`` headroom over the uniform share so the allocator has
+    room to skew. ``global_alloc=False`` restores the paper's per-layer
+    rule (and is forced under expert parallelism, where hi slots are
+    shard-local and cannot be reassigned across layers).
+
+    ``lo_resident_total`` enables the host tier: only that many (layer,
+    expert) cells count as device-lo-resident; the rest live in host DRAM
+    and pay a ``fetch``-modeled demand stall when routed. ``sensitivity``
+    (dict or ``.npz`` path from ``quant.sensitivity``) reweights hotness so
+    fragile experts win hi slots at lower traffic.
+
+    ``stream`` (a ``streaming.ShardSource`` or its path) turns on the
+    streaming cold start: banks are built EMPTY, ``serving_ready()`` stays
+    False while ``tick`` backfills lo rows from the checkpoint shards
+    (``stream_experts_per_tick`` per window, hottest-first when a
+    ``hotness_path`` snapshot from a previous run exists), and the hi/host
+    tiers materialize lazily behind promotions — the dense experts never
+    need to exist in device memory all at once.
 
     Expert parallelism (``ep_shards > 1``): every MoE position's hi-slot
     pool is split into per-shard slot ranges with per-shard budget accounts
@@ -293,10 +342,33 @@ class DynaExqBackend(_BackendBase):
                  activation_slack_bytes: int = 64 << 20,
                  controller: Optional[ControllerConfig] = None,
                  ep_shards: int = 1,
-                 rebalance: Optional[RebalanceConfig] = None):
+                 rebalance: Optional[RebalanceConfig] = None,
+                 global_alloc: Optional[bool] = None,
+                 slots_slack: float = 2.0,
+                 sensitivity=None,
+                 lo_resident_total: Optional[int] = None,
+                 fetch: Optional[FetchModel] = None,
+                 hotness_path: Optional[str] = None,
+                 stream=None,
+                 stream_experts_per_tick: int = 16):
         super().__init__()
         if ep_shards < 1:
             raise ValueError("ep_shards must be >= 1")
+        if global_alloc is None:
+            global_alloc = ep_shards == 1
+        if global_alloc and ep_shards > 1:
+            raise ValueError(
+                "global_alloc requires ep_shards == 1: hi slots are "
+                "shard-local HBM under expert parallelism and cannot be "
+                "reassigned across layers by a global knapsack")
+        if (stream is not None or lo_resident_total) and not global_alloc:
+            raise ValueError(
+                "the host tier and streaming cold start require the "
+                "global allocator (single-shard serving)")
+        if slots_slack < 1.0:
+            raise ValueError("slots_slack must be >= 1.0")
+        if lo_resident_total is not None and lo_resident_total < 1:
+            raise ValueError("lo_resident_total must be >= 1")
         self.lo_bits = lo_bits
         self.hi_bits = hi_bits
         self.group_size = group_size
@@ -309,104 +381,431 @@ class DynaExqBackend(_BackendBase):
             EPCoordinator(self.ep_shards, rebalance) if ep_shards > 1 else None
         self.controllers: Dict[str, DynaExqController] = {}
         self.banks: Dict = {}
+        # -- residency-ladder configuration --------------------------------
+        self.global_alloc = bool(global_alloc)
+        self.slots_slack = float(slots_slack)
+        self.sensitivity = sensitivity      # dict pos→(L,E) | .npz path
+        self.lo_resident_total = lo_resident_total
+        self.fetch = fetch if fetch is not None else FetchModel()
+        self.hotness_path = hotness_path
+        self.stream = stream                # ShardSource | path | None
+        self.stream_experts_per_tick = int(stream_experts_per_tick)
+        self.stores: Dict[str, HostExpertStore] = {}
+        self.allocator: Optional[GlobalAllocator] = None
+        self._global_root: Optional[BudgetTracker] = None
+        self._row_caps: Optional[np.ndarray] = None
+        self._row_pos: list = []            # global row → (pos, layer)
+        self._row_offsets: Dict[str, int] = {}
+        self._sens: Dict[str, np.ndarray] = {}
+        self._lo_b: Dict[str, int] = {}
+        self._pump_queue: deque = deque()
+        self._lo_quota_left = lo_resident_total or 0
+        self._serving_ready = True
+        self._last_global = time.monotonic()
+        self._cadence = (controller.update_interval_s if controller
+                         is not None else ControllerConfig().update_interval_s)
+        self._host_acct = {"host_fetches": 0, "host_fetch_bytes": 0,
+                           "hotness_restored": 0}
+
+    # -- materialization ---------------------------------------------------
+    def _derive_n_hi(self, params, kv_bytes, shapes, L, E, hi_b, lo_b):
+        ep = self.ep_shards
+        if self.n_hi_per_layer is not None:
+            n_hi = self.n_hi_per_layer
+            if ep > 1 and n_hi % ep:
+                raise ValueError(
+                    f"n_hi_per_layer={n_hi} not divisible by "
+                    f"ep_shards={ep} (each shard owns n_hi/ep slots)")
+            return n_hi
+        if self.hbm_gb is not None:
+            nonexp = _param_bytes({k: v for k, v in params.items()
+                                   if k != "blocks"})
+            plan = plan_budget(
+                m_total=int(self.hbm_gb * GiB),
+                m_fixed=nonexp + kv_bytes + self.activation_slack_bytes,
+                lo_bytes_total=lo_b * L * E,
+                hi_bytes_per_expert_layer=hi_b,
+                n_layers=L, num_experts=E, align=ep)
+            return plan.n_hi_per_layer
+        n_hi = max(1, E // 8)
+        if ep > 1:
+            # round to a shard-divisible count (≥ one slot per shard)
+            n_hi = max(ep, n_hi // ep * ep)
+        return n_hi
 
     def _materialize(self, cfg, params, kv_bytes):
+        src = None
+        if self.stream is not None:
+            src = self.stream if hasattr(self.stream, "lo_layer") \
+                else ShardSource(self.stream)
+            self.stream = src
+        sens = self.sensitivity
+        if isinstance(sens, str):
+            sens = load_sensitivity(sens)
+        # Phase 1 — metadata prepass: slot counts and byte prices for every
+        # position BEFORE building anything, so the global envelope and the
+        # knapsack budget are sums over the whole model, not one position.
+        metas = []
         for pos in self.moe_positions:
-            experts = params["blocks"][str(pos)]["moe"]["experts"]
-            shapes = {k: tuple(v.shape) for k, v in experts.items()}
+            pos = str(pos)
+            experts = params["blocks"][pos]["moe"]["experts"]
+            if experts is not None:
+                shapes = {k: tuple(v.shape) for k, v in experts.items()}
+            elif src is not None:
+                shapes = src.shapes(pos)
+            else:
+                raise ValueError(
+                    f"position {pos}: experts are None and no stream "
+                    f"source configured")
             hi_b = expert_hi_nbytes(shapes, hi_bits=self.hi_bits,
                                     group_size=self.group_size)
             lo_b = expert_lo_nbytes(shapes, self.lo_bits, self.group_size)
-            L, E = experts["w_gate"].shape[:2]
-            ep = self.ep_shards
-            if ep > 1 and E % ep:
-                raise ValueError(
-                    f"num_experts={E} not divisible by ep_shards={ep}")
-            if self.n_hi_per_layer is not None:
-                n_hi = self.n_hi_per_layer
-                if ep > 1 and n_hi % ep:
-                    raise ValueError(
-                        f"n_hi_per_layer={n_hi} not divisible by "
-                        f"ep_shards={ep} (each shard owns n_hi/ep slots)")
-            elif self.hbm_gb is not None:
-                nonexp = _param_bytes({k: v for k, v in params.items()
-                                       if k != "blocks"})
-                plan = plan_budget(
-                    m_total=int(self.hbm_gb * GiB),
-                    m_fixed=nonexp + kv_bytes + self.activation_slack_bytes,
-                    lo_bytes_total=lo_b * L * E,
-                    hi_bytes_per_expert_layer=hi_b,
-                    n_layers=L, num_experts=E, align=ep)
-                n_hi = plan.n_hi_per_layer
+            L, E = next(iter(shapes.values()))[:2]
+            if self.ep_shards > 1 and E % self.ep_shards:
+                raise ValueError(f"num_experts={E} not divisible by "
+                                 f"ep_shards={self.ep_shards}")
+            n_hi = self._derive_n_hi(params, kv_bytes, shapes, L, E,
+                                     hi_b, lo_b)
+            metas.append((pos, experts, shapes, L, E, hi_b, lo_b, n_hi))
+        self._build_global_structures(metas, sens)
+        for pos, experts, shapes, L, E, hi_b, lo_b, n_hi in metas:
+            self._lo_b[pos] = lo_b
+            slots = n_hi
+            if self.global_alloc and n_hi > 0:
+                # Physical per-layer pool ceiling: headroom over the
+                # uniform share so the knapsack can skew slots toward hot
+                # layers. Byte accounting stays at n_hi·L·hi_b — extra
+                # slots are capacity, not budget.
+                slots = min(E, max(n_hi,
+                                   math.ceil(n_hi * self.slots_slack)))
+            streaming = experts is None
+            if streaming:
+                bank = build_bank_empty(shapes, n_hi=slots,
+                                        lo_bits=self.lo_bits,
+                                        group_size=self.group_size)
+                store = HostExpertStore(
+                    shapes,
+                    hi_loader=lambda l, e, p=pos: src.hi_expert(p, l, e),
+                    lo_loader=lambda l, p=pos: src.lo_layer(p, l),
+                    lo_valid_init=False)
             else:
-                n_hi = max(1, E // 8)
-                if ep > 1:
-                    # round to a shard-divisible count (≥ one slot per shard)
-                    n_hi = max(ep, n_hi // ep * ep)
-            host_hi = {k: np.asarray(v) for k, v in experts.items()}
-            bank = build_bank(experts, n_hi=n_hi, lo_bits=self.lo_bits,
-                              group_size=self.group_size,
-                              hi_bits=self.hi_bits)
-            self.banks[str(pos)] = bank
+                bank = build_bank(experts, n_hi=slots, lo_bits=self.lo_bits,
+                                  group_size=self.group_size,
+                                  hi_bits=self.hi_bits)
+                store = HostExpertStore(
+                    shapes, hi={k: np.asarray(v)
+                                for k, v in experts.items()})
+            self.banks[pos] = bank
+            self.stores[pos] = store
             if n_hi > 0:
-                # Under an engine-shared budget each position's hi tier is
-                # an account-scoped view: its own cap is the classic
-                # n_hi·L·hi_bytes pool, but every reservation also passes
-                # through the ONE envelope KV blocks draw from — KV
-                # pressure defers promotions, demotions free admission
-                # headroom.
-                tracker = None if self.budget is None else \
-                    self.budget.view(f"hi:{pos}", cap=n_hi * L * hi_b)
-                shard_trackers = None
-                if ep > 1:
-                    # One account per shard: a shard's promotions reserve
-                    # against ITS slice of the pool (its local HBM), so a
-                    # hot shard saturating its slots cannot starve — or
-                    # borrow from — a neighbour's budget.
-                    per_cap = (n_hi // ep) * L * hi_b
-                    if self.budget is not None:
-                        shard_trackers = [
-                            self.budget.view(f"hi:{pos}:s{j}", cap=per_cap)
-                            for j in range(ep)]
-                    else:
-                        shard_trackers = [BudgetTracker(per_cap)
-                                          for _ in range(ep)]
                 ctl = DynaExqController(
-                    bank, host_hi, n_hi_per_layer=n_hi,
+                    bank, store, n_hi_per_layer=n_hi,
                     hi_bytes_per_expert=hi_b, cfg=self.controller_cfg,
-                    tracker=tracker, ep_shards=ep,
-                    shard_trackers=shard_trackers)
-                self.controllers[str(pos)] = ctl
+                    tracker=self._tracker_for(pos, n_hi, L, hi_b),
+                    ep_shards=self.ep_shards,
+                    shard_trackers=self._shard_trackers_for(
+                        pos, n_hi, L, hi_b))
+                self.controllers[pos] = ctl
+                self._restore_hotness(pos, ctl)
                 if self.coordinator is not None:
                     # The moe params dict outlives the experts=None free
                     # below — the coordinator swaps its router leaf in
                     # place on migration.
                     self.coordinator.register(
-                        ctl, params["blocks"][str(pos)]["moe"])
-            params["blocks"][str(pos)]["moe"]["experts"] = None
+                        ctl, params["blocks"][pos]["moe"])
+            if streaming:
+                self._serving_ready = False
+            params["blocks"][pos]["moe"]["experts"] = None
+        if not self._serving_ready:
+            self._build_pump_queue()
         return self.banks
 
+    def _build_global_structures(self, metas, sens) -> None:
+        """Global-mode scaffolding: the cross-layer knapsack (row = one
+        layer of one position), its per-row slot ceilings, the shared byte
+        envelope, and the normalized sensitivity weights."""
+        if not self.global_alloc:
+            return
+        rows = [(pos, L, E, n_hi, hi_b)
+                for pos, _, _, L, E, hi_b, _, n_hi in metas if n_hi > 0]
+        if not rows:
+            return
+        Es = {E for _, _, E, _, _ in rows}
+        if len(Es) != 1:
+            raise ValueError(
+                f"global allocation needs a uniform expert count across "
+                f"MoE positions, got {sorted(Es)}")
+        total_hi = sum(n_hi * L for _, L, _, n_hi, _ in rows)
+        total_cap = sum(n_hi * L * hi_b for _, L, _, n_hi, hi_b in rows)
+        caps = []
+        for pos, L, E, n_hi, _ in rows:
+            self._row_offsets[pos] = len(self._row_pos)
+            slots = min(E, max(n_hi, math.ceil(n_hi * self.slots_slack)))
+            for l in range(L):
+                self._row_pos.append((pos, l))
+                caps.append(slots)
+        self._row_caps = np.asarray(caps, np.int64)
+        ctl_cfg = self.controller_cfg if self.controller_cfg is not None \
+            else ControllerConfig()
+        max_tr = ctl_cfg.max_transitions_per_layer * len(self._row_pos) \
+            if ctl_cfg.max_transitions_per_layer else 0
+        self.allocator = GlobalAllocator(AllocatorConfig(
+            total_hi=total_hi,
+            slots_per_layer=int(self._row_caps.max()),
+            margin=ctl_cfg.margin,
+            max_transitions=max_tr,
+            lo_resident_total=self.lo_resident_total or 0,
+            lo_margin=ctl_cfg.margin))
+        # One byte envelope for the whole hi tier: either the engine's
+        # shared tracker (promotions contend with KV admission) or a
+        # private global tracker at the classic summed cap. Per-position
+        # accounts carry NO own cap — the global slot budget is the
+        # allocator's to spend across layers and positions.
+        self._global_root = self.budget if self.budget is not None \
+            else BudgetTracker(total_cap)
+        if sens:
+            for pos, L, E, _, _ in rows:
+                s = sens.get(pos)
+                if s is None:
+                    continue
+                s = np.asarray(s, np.float64)
+                if s.shape != (L, E):
+                    raise ValueError(
+                        f"sensitivity for position {pos} has shape "
+                        f"{s.shape}, expected ({L}, {E})")
+                self._sens[pos] = normalize(s)
+
+    def _tracker_for(self, pos, n_hi, L, hi_b):
+        if self.global_alloc and self.allocator is not None:
+            return self._global_root.view(f"hi:{pos}")
+        if self.budget is not None:
+            # Under an engine-shared budget each position's hi tier is an
+            # account-scoped view: its own cap is the classic n_hi·L·hi_b
+            # pool, but every reservation also passes through the ONE
+            # envelope KV blocks draw from — KV pressure defers
+            # promotions, demotions free admission headroom.
+            return self.budget.view(f"hi:{pos}", cap=n_hi * L * hi_b)
+        return None
+
+    def _shard_trackers_for(self, pos, n_hi, L, hi_b):
+        ep = self.ep_shards
+        if ep <= 1:
+            return None
+        # One account per shard: a shard's promotions reserve against ITS
+        # slice of the pool (its local HBM), so a hot shard saturating its
+        # slots cannot starve — or borrow from — a neighbour's budget.
+        per_cap = (n_hi // ep) * L * hi_b
+        if self.budget is not None:
+            return [self.budget.view(f"hi:{pos}:s{j}", cap=per_cap)
+                    for j in range(ep)]
+        return [BudgetTracker(per_cap) for _ in range(ep)]
+
+    def _restore_hotness(self, pos, ctl) -> None:
+        if not self.hotness_path:
+            return
+        path = f"{self.hotness_path}_p{pos}.npz"
+        if not os.path.exists(path):
+            return
+        try:
+            ctl.hotness.load(path)
+            self._host_acct["hotness_restored"] += 1
+        except ValueError:
+            pass    # resized model: a stale prior must not crash serving
+
+    def _build_pump_queue(self) -> None:
+        """Round-robin merge of per-position staging orders (hottest-first
+        under a restored hotness prior, row-major otherwise) — positions
+        backfill evenly instead of position 0 hogging the early windows."""
+        per_pos = []
+        for pos, store in self.stores.items():
+            ctl = self.controllers.get(pos)
+            scores = ctl.hotness.scores if ctl is not None else None
+            order = hotness_stage_order(scores, store.L, store.E)
+            per_pos.append([(pos, l, e) for l, e in order])
+        for group in zip(*per_pos) if per_pos else []:
+            self._pump_queue.extend(group)
+
+    # -- per-forward hook --------------------------------------------------
     def _observe_residency(self, counts, compute_s):
+        stall = 0.0
         for k, ctl in self.controllers.items():
             c = counts.get(k)
-            if c is not None:
-                ctl.observe(np.asarray(c))
-        return 0.0
+            if c is None:
+                continue
+            c = np.asarray(c)
+            ctl.observe(c)
+            store = self.stores.get(k)
+            if store is None or not self.lo_resident_total:
+                continue
+            # Routed experts whose lo residency was ceded to the host tier
+            # pay a demand fetch on the critical path (their device rows
+            # are valid — the stall models the configuration where a
+            # host-resident row would not be kept on device).
+            miss = (c > 0) & ~store.lo_resident & store.lo_valid
+            n = int(miss.sum())
+            if n:
+                demand = n * self._lo_b[k]
+                self._host_acct["host_fetches"] += n
+                self._host_acct["host_fetch_bytes"] += demand
+                stall += self.fetch.stall_s(demand)
+        return stall
 
+    # -- windows -----------------------------------------------------------
     def tick(self) -> None:
-        for ctl in self.controllers.values():
-            ctl.maybe_update()
+        if not self._serving_ready:
+            self._pump()
+            return
+        if self.allocator is not None:
+            self._global_tick()
+        else:
+            for ctl in self.controllers.values():
+                ctl.maybe_update()
         if self.coordinator is not None:
             self.coordinator.maybe_rebalance()
+        for store in self.stores.values():
+            store.publish_lo()
+
+    def _pump(self) -> None:
+        """One streaming-cold-start window: stage up to
+        ``stream_experts_per_tick`` experts' lo rows, publish completed
+        copies, and open serving once every cell is materialized."""
+        staged = 0
+        batch: Dict[Tuple[str, int], Tuple[list, list]] = {}
+        while self._pump_queue and staged < self.stream_experts_per_tick:
+            pos, l, e = self._pump_queue.popleft()
+            if self.stores[pos].lo_valid[l, e]:
+                continue
+            resident = True
+            if self.lo_resident_total is not None:
+                resident = self._lo_quota_left > 0
+                if resident:
+                    self._lo_quota_left -= 1
+            ex, res = batch.setdefault((pos, l), ([], []))
+            ex.append(e)
+            res.append(resident)
+            staged += 1
+        for (pos, l), (ex, res) in batch.items():
+            # One scatter per (layer, leaf): the pump is dispatch-bound on
+            # tiny rows, so cell-at-a-time writes would dominate TTFT.
+            self.stores[pos].stage_lo_batch(self.banks[pos], l, ex, res)
+        for store in self.stores.values():
+            store.publish_lo()
+        if not self._pump_queue:
+            for store in self.stores.values():
+                store.publish_lo(wait=True)
+            if all(s.lo_complete for s in self.stores.values()):
+                self._serving_ready = True
+
+    def _global_tick(self, now: Optional[float] = None) -> bool:
+        now = now if now is not None else time.monotonic()
+        # Read the cadence live from the controllers (not the construction-
+        # time snapshot): callers freeze/retune policy by mutating ctl.cfg,
+        # exactly as the per-layer maybe_update path honors it.
+        cadence = min((ctl.cfg.update_interval_s
+                       for ctl in self.controllers.values()),
+                      default=self._cadence)
+        if now - self._last_global < cadence:
+            # Still publish any copies that completed since last window.
+            for ctl in self.controllers.values():
+                ctl.tm.publish_ready()
+            return False
+        self._last_global = now
+        self._global_update()
+        return True
+
+    def _global_update(self) -> None:
+        """One global allocation window: fold every position's hotness,
+        weight by sensitivity, stack all layers into one (R, E) value
+        matrix, solve the knapsack ONCE, then hand each position's
+        controller its slice of the plan (globally ordered, so under a
+        rate limit the hottest promotions anywhere in the model go
+        first)."""
+        R = len(self._row_pos)
+        if R == 0:
+            return
+        E = self.stores[self._row_pos[0][0]].E
+        value = np.zeros((R, E))
+        cur_hi = [set() for _ in range(R)]
+        use_lo = bool(self.lo_resident_total)
+        cur_lo = [set() for _ in range(R)] if use_lo else None
+        for pos, off in self._row_offsets.items():
+            ctl = self.controllers[pos]
+            w = ctl.hotness.fold()
+            s = self._sens.get(pos)
+            if s is not None:
+                w = w * s
+            L = ctl.tm.state.shape[0]
+            value[off:off + L] = w
+            store = self.stores[pos]
+            for l in range(L):
+                cur_hi[off + l] = ctl.tm.hi_set(l) | \
+                    ctl.tm.pending_experts(l)
+                if use_lo:
+                    cur_lo[off + l] = set(
+                        np.nonzero(store.lo_resident[l])[0].tolist())
+        asn = self.allocator.allocate(value, cur_hi, cur_lo,
+                                      row_caps=self._row_caps)
+        if use_lo:
+            for r, e in asn.lo_demotions:
+                pos, l = self._row_pos[r]
+                self.stores[pos].lo_resident[l, e] = False
+            for r, e in asn.lo_promotions:
+                pos, l = self._row_pos[r]
+                store = self.stores[pos]
+                if store.lo_valid[l, e]:
+                    store.lo_resident[l, e] = True
+                else:
+                    store.stage_lo(self.banks[pos], l, e, resident=True)
+        promos: Dict[str, list] = {p: [] for p in self.controllers}
+        demos: Dict[str, list] = {p: [] for p in self.controllers}
+        for r, e in asn.promotions:
+            pos, l = self._row_pos[r]
+            promos[pos].append((l, e))
+        for r, e in asn.demotions:
+            pos, l = self._row_pos[r]
+            demos[pos].append((l, e))
+        for pos, ctl in self.controllers.items():
+            ctl.apply_plan(promos[pos], demos[pos])
 
     def force_update(self) -> None:
-        for ctl in self.controllers.values():
-            ctl.update()
+        if not self._serving_ready:
+            self.flush()
+        if self.allocator is not None:
+            self._global_update()
+        else:
+            for ctl in self.controllers.values():
+                ctl.update()
 
     def flush(self) -> None:
+        while not self._serving_ready:
+            self._pump()
         for ctl in self.controllers.values():
             ctl.flush()
+        for store in self.stores.values():
+            store.publish_lo(wait=True)
+            store.check_invariants()
 
+    # -- readiness ---------------------------------------------------------
+    def serving_ready(self) -> bool:
+        return self._serving_ready
+
+    def ready_frac(self) -> float:
+        if self._serving_ready or not self.stores:
+            return 1.0
+        return float(np.mean([s.lo_valid.mean()
+                              for s in self.stores.values()]))
+
+    def save_hotness(self, path: Optional[str] = None) -> None:
+        """Persist every position's traffic history (``hotness_path``
+        prefix by default) — the next cold start stages hottest-first and
+        the allocator opens with a warm prior instead of uniform."""
+        prefix = path if path is not None else self.hotness_path
+        if not prefix:
+            raise ValueError("no hotness path configured")
+        for pos, ctl in self.controllers.items():
+            ctl.hotness.save(f"{prefix}_p{pos}.npz")
+
+    # -- introspection -----------------------------------------------------
     def hi_sets(self) -> Dict[str, list]:
         out = {}
         for k, ctl in self.controllers.items():
@@ -416,24 +815,37 @@ class DynaExqBackend(_BackendBase):
 
     def device_bytes(self) -> int:
         total = 0
-        for bank in self.banks.values():
+        for pos, bank in self.banks.items():
             shapes = {n: tuple(q.shape) for n, q in bank.lo.items()}
             L, E = bank.slot_map.shape
             per_lo = expert_lo_nbytes(shapes, self.lo_bits, self.group_size)
             per_hi = expert_hi_nbytes(shapes, hi_bits=self.hi_bits,
                                       group_size=self.group_size)
-            n_resident = int((np.asarray(bank.slot_owner) >= 0).sum())
-            total += per_lo * L * E + n_resident * per_hi
+            store = self.stores.get(pos)
+            n_lo = int(store.lo_resident.sum()) \
+                if store is not None and self.lo_resident_total else L * E
+            n_hi_res = int((np.asarray(bank.slot_owner) >= 0).sum())
+            total += per_lo * n_lo + n_hi_res * per_hi
         return total
 
     def _residency_stats(self):
         agg = {"stall_s": 0.0, "bytes_moved": 0.0,
-               "promotions": 0.0, "demotions": 0.0, "deferred": 0.0}
+               "promotions": 0.0, "demotions": 0.0, "deferred": 0.0,
+               "host_fetches": float(self._host_acct["host_fetches"])}
         for ctl in self.controllers.values():
             agg["bytes_moved"] += ctl.tm.stats["bytes_moved"]
             agg["promotions"] += ctl.tm.stats["promoted"]
             agg["demotions"] += ctl.tm.stats["demoted"]
             agg["deferred"] += ctl.tm.stats["deferred"]
+        agg["bytes_moved"] += self._host_acct["host_fetch_bytes"]
+        if self.stores:
+            agg["lo_resident_frac"] = float(np.mean(
+                [s.lo_resident.mean() for s in self.stores.values()]))
+            agg["hi_loads"] = float(sum(
+                s.stats["hi_loads"] for s in self.stores.values()))
+            agg["bytes_moved"] += sum(
+                s.stats["lo_bytes_staged"] for s in self.stores.values())
+        agg["residency_ready_frac"] = self.ready_frac()
         if self.coordinator is not None:
             agg["migrations"] = float(self.coordinator.stats["migrations"])
             agg["bytes_moved"] += self.coordinator.stats["bytes_moved"]
@@ -470,12 +882,16 @@ class OffloadBackend(_BackendBase):
     def __init__(self, ocfg: Optional[OffloadConfig] = None):
         super().__init__()
         self.ocfg = ocfg if ocfg is not None else OffloadConfig()
+        # The transfer-cost model is the residency ladder's FetchModel —
+        # the offload baseline and DynaExq's host tier price host↔device
+        # bytes identically, so their stall columns are comparable.
+        self.fetch = FetchModel(gbps=self.ocfg.pcie_gbps)
         self.expert_bytes = 0
         self.n_moe_layers = 0
         self.lru: Dict[int, LRUSet] = {}
         self.prev_active: Dict[int, set] = {}
         self._acct = {"hits": 0, "misses": 0, "stall_s": 0.0,
-                      "bytes_fetched": 0}
+                      "bytes_moved": 0}
 
     def _materialize(self, cfg, params, kv_bytes):
         # Per-expert bf16 bytes (w_gate + w_up + w_down).
@@ -510,14 +926,11 @@ class OffloadBackend(_BackendBase):
                     self._acct["misses"] += 1
                     miss_bytes += self.expert_bytes
             self.prev_active[l] = set(int(x) for x in acts)
-        pcie = self.ocfg.pcie_gbps * 1e9
         # Prefetches overlap with compute; anything beyond the overlap
         # window spills into the critical path with the demand misses.
-        overlap_budget = compute_s * pcie
-        spill = max(0.0, prefetched_bytes - overlap_budget)
-        stall = (miss_bytes + spill) / pcie
+        stall = self.fetch.stall_s(miss_bytes, prefetched_bytes, compute_s)
         self._acct["stall_s"] += stall
-        self._acct["bytes_fetched"] += miss_bytes + prefetched_bytes
+        self._acct["bytes_moved"] += miss_bytes + prefetched_bytes
         return stall
 
     def device_bytes(self) -> int:
@@ -527,9 +940,10 @@ class OffloadBackend(_BackendBase):
 
     def _residency_stats(self):
         return {"stall_s": self._acct["stall_s"],
-                "bytes_moved": float(self._acct["bytes_fetched"]),
+                "bytes_moved": float(self._acct["bytes_moved"]),
                 "hits": float(self._acct["hits"]),
-                "misses": float(self._acct["misses"])}
+                "misses": float(self._acct["misses"]),
+                "host_fetches": float(self._acct["misses"])}
 
 
 BACKENDS = {

@@ -740,10 +740,13 @@ class InferenceEngine:
             for h in self.queue)
         est_wait = (queued_tokens * self._tpot_ema /
                     max(1, self.ecfg.max_slots))
+        frac = getattr(self.backend, "ready_frac", None)
         return {"queue_depth": float(len(self.queue)),
                 "tpot_ema_s": float(self._tpot_ema),
                 "est_wait_s": float(est_wait),
-                "budget_headroom_frac": float(self.budget.headroom_frac())}
+                "budget_headroom_frac": float(self.budget.headroom_frac()),
+                "residency_ready_frac":
+                    float(frac()) if frac is not None else 1.0}
 
     def _shed_expired(self) -> None:
         """Drop queued batch-tier work whose deadline already passed —
@@ -1479,6 +1482,14 @@ class InferenceEngine:
         uniform-class traffic — is exactly the untiered engine. Returns
         the handles that finished this step."""
         finished: List[RequestHandle] = []
+        ready = getattr(self.backend, "serving_ready", None)
+        if ready is not None and not ready():
+            # Streaming cold start: the residency ladder is still
+            # materializing — keep the backend's staging windows running
+            # and hold admission (requests queue; no forward may observe
+            # a partially materialized expert).
+            self.backend.tick()
+            return finished
         self._shed_expired()
         self._admit(finished)
         self._maybe_preempt()
@@ -1603,6 +1614,9 @@ class InferenceEngine:
         """Post-step progress accounting for the serving loops: bump (and
         eventually trip) the stall counter when the engine sits fully idle
         with queued work it could not admit."""
+        ready = getattr(self.backend, "serving_ready", None)
+        if ready is not None and not ready():
+            return 0    # cold start still staging — queueing is progress
         idle = not any(h is not None for h in self.slots)
         if self.queue and idle and len(self.queue) == queue_before:
             stalled += 1

@@ -92,6 +92,12 @@ class SchedulerConfig:
     # Queued batch-tier requests whose deadline already passed are dropped
     # at admission time (state SHED) instead of burning decode steps.
     drop_expired_batch: bool = True
+    # Residency build-out fraction below which the engine counts as
+    # overloaded (streaming cold start: the ladder is still materializing,
+    # so batch traffic sheds/downgrades instead of piling onto a queue the
+    # engine cannot drain yet). 0 disables — a warm engine always reports
+    # ready_frac 1.0, so the default changes nothing.
+    shed_min_ready_frac: float = 0.0
     # ---- preemption ---------------------------------------------------
     preemption: bool = True          # evict lower tiers for blocked higher
     max_preempts: int = 2            # per-request eviction cap (liveness)
@@ -119,6 +125,10 @@ class SchedulerConfig:
             raise ValueError(
                 f"shed_headroom_frac={self.shed_headroom_frac} must be in "
                 f"[0, 1)")
+        if not 0.0 <= self.shed_min_ready_frac <= 1.0:
+            raise ValueError(
+                f"shed_min_ready_frac={self.shed_min_ready_frac} must be "
+                f"in [0, 1]")
         if self.prefill_chunk < 0:
             raise ValueError("prefill_chunk must be >= 0")
 
@@ -287,6 +297,10 @@ class Scheduler:
             return True
         if load.get("est_wait_s", 0.0) > self.cfg.shed_wait_s:
             return True
+        if self.cfg.shed_min_ready_frac and \
+                load.get("residency_ready_frac", 1.0) < \
+                self.cfg.shed_min_ready_frac:
+            return True    # cold start: the ladder is still materializing
         return (load.get("budget_headroom_frac", 1.0) <
                 self.cfg.shed_headroom_frac)
 

@@ -1,0 +1,183 @@
+"""Streaming cold start: serve before the checkpoint fully materializes.
+
+``training.checkpoint`` stores a flat leaf list — fine for training, useless
+for serving an 80B MoE whose first token only needs the router, attention,
+and the (4–8× smaller) lo tier. This module defines an **expert-sharded**
+layout plus the loaders the residency ladder streams from:
+
+    <root>/manifest.json                 positions, shapes, quantizer meta
+    <root>/base/leaf_*.npy               every non-expert param (checkpoint
+                                         format, experts pruned)
+    <root>/lo/p{pos}_l{layer}.npz        PREPACKED lo rows for one layer —
+                                         keys "{name}.packed" (E, K/epb, N)
+                                         u8 and "{name}.scales" f32
+    <root>/hi/p{pos}_l{layer}_e{e}.npz   one expert's dense rows, f32
+
+Quantization happens at SAVE time, so a cold start reads ``lo_bits/16`` of
+the expert bytes before serving — the structural reason streaming TTFT beats
+full materialization — and the staged rows are bit-identical to what
+``build_bank`` would have produced from the dense weights (temp-0 token
+parity with a fully materialized engine).
+
+Cold-start sequence (driven by ``DynaExqBackend`` with ``stream=``):
+router/attention load from ``base/`` at construction; the lo tier backfills
+via async staged writes in hotness order (restored priors when a hotness
+snapshot exists); serving opens the moment ``lo_valid`` is complete; the
+hi and host tiers keep backfilling lazily — each promotion's
+``ensure_hi`` pulls its shard — so under a tight envelope the dense experts
+never fully materialize anywhere.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.quant.qtensor import quantize
+
+
+def _flatten(tree: Dict, prefix: str = ""):
+    for k in sorted(tree):
+        v = tree[k]
+        key = f"{prefix}{k}"
+        if isinstance(v, dict):
+            yield from _flatten(v, key + "/")
+        elif v is None:
+            continue
+        else:
+            yield key, v
+
+
+def save_expert_shards(path: str, params: Dict, moe_positions,
+                       lo_bits: int = 4, group_size: int = 64) -> None:
+    """Write the expert-sharded serving checkpoint. ``params`` must still
+    hold dense experts (run before any backend frees them)."""
+    os.makedirs(os.path.join(path, "lo"), exist_ok=True)
+    os.makedirs(os.path.join(path, "hi"), exist_ok=True)
+    os.makedirs(os.path.join(path, "base"), exist_ok=True)
+    manifest = {"lo_bits": lo_bits, "group_size": group_size,
+                "positions": [], "shapes": {}}
+    base_keys = []
+    for key, leaf in _flatten(params):
+        if "/moe/experts/" in key:
+            continue
+        arr = np.asarray(leaf)
+        meta = {"key": key, "dtype": str(arr.dtype)}
+        if arr.dtype.kind not in "biufc":      # bf16 → f32 (lossless)
+            arr = arr.astype(np.float32)
+        np.save(os.path.join(path, "base",
+                             f"leaf_{len(base_keys):05d}.npy"), arr)
+        base_keys.append(meta)
+    manifest["base"] = base_keys
+    for pos in moe_positions:
+        pos = str(pos)
+        experts = params["blocks"][pos]["moe"]["experts"]
+        if experts is None:
+            raise ValueError(f"position {pos}: experts already freed")
+        names = sorted(experts)
+        shapes = {n: list(np.asarray(experts[n]).shape) for n in names}
+        manifest["positions"].append(pos)
+        manifest["shapes"][pos] = shapes
+        L, E = shapes[names[0]][:2]
+        packed = {n: quantize(jax.numpy.asarray(experts[n]), bits=lo_bits,
+                              group_size=group_size) for n in names}
+        for l in range(L):
+            rows = {}
+            for n in names:
+                rows[f"{n}.packed"] = np.asarray(packed[n].packed[l])
+                rows[f"{n}.scales"] = np.asarray(
+                    packed[n].scales[l], np.float32)
+            np.savez(os.path.join(path, "lo", f"p{pos}_l{l}.npz"), **rows)
+            for e in range(E):
+                np.savez(
+                    os.path.join(path, "hi", f"p{pos}_l{l}_e{e}.npz"),
+                    **{n: np.asarray(experts[n][l, e], np.float32)
+                       for n in names})
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+
+
+def load_streaming_params(path: str) -> Dict:
+    """Rebuild the params tree from ``base/`` with every MoE position's
+    ``experts`` left as ``None`` — the banks stream in behind it. This is
+    the ONLY synchronous read of a cold start."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    params: Dict = {}
+    for i, meta in enumerate(manifest["base"]):
+        arr = np.load(os.path.join(path, "base", f"leaf_{i:05d}.npy"))
+        leaf = jax.numpy.asarray(arr).astype(meta["dtype"])
+        node = params
+        parts = meta["key"].split("/")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = leaf
+    for pos in manifest["positions"]:
+        params["blocks"][pos]["moe"]["experts"] = None
+    return params
+
+
+class ShardSource:
+    """Loader half of the streaming cold start: per-layer prepacked lo rows
+    and per-expert dense hi rows, with read accounting (the benchmark's
+    bytes-before-first-token comes from here)."""
+
+    def __init__(self, path: str):
+        self.path = path
+        with open(os.path.join(path, "manifest.json")) as f:
+            self.manifest = json.load(f)
+        self.lo_bits = int(self.manifest["lo_bits"])
+        self.group_size = int(self.manifest["group_size"])
+        self.positions: List[str] = list(self.manifest["positions"])
+        self.stats = {"lo_reads": 0, "hi_reads": 0, "bytes_read": 0}
+
+    def shapes(self, pos) -> Dict[str, tuple]:
+        return {n: tuple(s)
+                for n, s in self.manifest["shapes"][str(pos)].items()}
+
+    def lo_layer(self, pos, layer: int) -> Dict[str, np.ndarray]:
+        with np.load(os.path.join(
+                self.path, "lo", f"p{pos}_l{layer}.npz")) as z:
+            rows = {k: z[k] for k in z.files}
+        self.stats["lo_reads"] += 1
+        self.stats["bytes_read"] += sum(a.nbytes for a in rows.values())
+        return rows
+
+    def hi_expert(self, pos, layer: int, expert: int
+                  ) -> Dict[str, np.ndarray]:
+        with np.load(os.path.join(
+                self.path, "hi", f"p{pos}_l{layer}_e{expert}.npz")) as z:
+            rows = {k: z[k] for k in z.files}
+        self.stats["hi_reads"] += 1
+        self.stats["bytes_read"] += sum(a.nbytes for a in rows.values())
+        return rows
+
+    def load_dense_experts(self, pos) -> Dict[str, jax.Array]:
+        """Materialize one position's FULL dense experts from the hi shards
+        — the no-streaming baseline path (reads every shard upfront; the
+        cold-start benchmark measures exactly this against streaming)."""
+        shapes = self.shapes(pos)
+        names = sorted(shapes)
+        L, E = shapes[names[0]][:2]
+        out = {n: np.zeros(tuple(shapes[n]), np.float32) for n in names}
+        for l in range(L):
+            for e in range(E):
+                rows = self.hi_expert(pos, l, e)
+                for n in names:
+                    out[n][l, e] = rows[n]
+        return {n: jax.numpy.asarray(a, jax.numpy.bfloat16)
+                for n, a in out.items()}
+
+
+def hotness_stage_order(scores: Optional[np.ndarray], L: int,
+                        E: int) -> List[tuple]:
+    """Cold-start staging order for one position's (layer, expert) cells:
+    hottest-first when a restored hotness snapshot exists (previous run's
+    traffic), deterministic row-major otherwise."""
+    if scores is None or scores.shape != (L, E) or not scores.any():
+        return [(l, e) for l in range(L) for e in range(E)]
+    flat = np.argsort(-scores.reshape(-1), kind="stable")
+    return [(int(i) // E, int(i) % E) for i in flat]

@@ -1,0 +1,179 @@
+"""Property + unit tests for the global cross-layer knapsack allocator."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.allocator import AllocatorConfig, GlobalAllocator
+
+
+def _alloc(total_hi, slots, margin=0.0, max_transitions=0,
+           lo_total=0, lo_margin=0.0):
+    return GlobalAllocator(AllocatorConfig(
+        total_hi=total_hi, slots_per_layer=slots, margin=margin,
+        max_transitions=max_transitions, lo_resident_total=lo_total,
+        lo_margin=lo_margin))
+
+
+def _rand_state(rng, R, E, n_cur):
+    value = rng.random((R, E)) * 10
+    current = [set() for _ in range(R)]
+    for _ in range(n_cur):
+        current[int(rng.integers(R))].add(int(rng.integers(E)))
+    return value, current
+
+
+# -- feasibility ------------------------------------------------------------
+
+@settings(max_examples=40)
+@given(seed=st.integers(0, 10_000), R=st.integers(1, 5),
+       E=st.integers(2, 8), total=st.integers(0, 16),
+       slots=st.integers(1, 6), margin=st.floats(0.0, 2.0),
+       max_tr=st.integers(0, 4))
+def test_budget_feasibility(seed, R, E, total, slots, margin, max_tr):
+    """Whatever the traffic and starting state, the plan never exceeds the
+    global slot budget or any row's physical pool ceiling, and applying the
+    promotion/demotion lists to `current` reproduces the target exactly."""
+    rng = np.random.default_rng(seed)
+    value, current = _rand_state(rng, R, E, n_cur=min(total, R * 2))
+    # Feasible starting state: rows never hold more than their ceiling.
+    cap = min(slots, E)
+    current = [set(sorted(s)[:cap]) for s in current]
+    asn = _alloc(total, slots, margin, max_tr).allocate(value, current)
+    assert sum(len(s) for s in asn.hi) <= total
+    for r in range(R):
+        assert len(asn.hi[r]) <= cap
+    rebuilt = [set(s) for s in current]
+    for r, e in asn.demotions:
+        rebuilt[r].discard(e)
+    for r, e in asn.promotions:
+        rebuilt[r].add(e)
+    assert rebuilt == asn.hi
+
+
+@settings(max_examples=40)
+@given(seed=st.integers(0, 10_000), R=st.integers(1, 4),
+       E=st.integers(2, 6), total=st.integers(1, 8),
+       lo_total=st.integers(1, 20))
+def test_ladder_order_hi_subset_of_lo(seed, R, E, total, lo_total):
+    """hi ⊆ lo always: a hi-resident expert is never demoted to host."""
+    rng = np.random.default_rng(seed)
+    value, current = _rand_state(rng, R, E, n_cur=total)
+    cur_lo = [set(range(E)) for _ in range(R)]
+    asn = _alloc(total, slots=E, lo_total=lo_total).allocate(
+        value, current, cur_lo)
+    assert asn.lo is not None
+    for r in range(R):
+        assert asn.hi[r] <= asn.lo[r]
+    hi_cells = {(r, e) for r in range(R) for e in asn.hi[r]}
+    assert not hi_cells & set(asn.lo_demotions)
+
+
+# -- hotness monotonicity ---------------------------------------------------
+
+@settings(max_examples=40)
+@given(seed=st.integers(0, 10_000), R=st.integers(1, 4),
+       E=st.integers(2, 8), total=st.integers(1, 12),
+       slots=st.integers(1, 6))
+def test_hotness_monotone_within_row(seed, R, E, total, slots):
+    """Fresh allocation (no incumbents): within any row, every selected
+    cell is at least as valuable as every unselected cell — the row ceiling
+    can cap a row's count but never invert its ranking."""
+    rng = np.random.default_rng(seed)
+    value = rng.random((R, E)) * 10
+    asn = _alloc(total, slots).allocate(value, [set() for _ in range(R)])
+    for r in range(R):
+        outside = [value[r, e] for e in range(E) if e not in asn.hi[r]]
+        if asn.hi[r] and outside:
+            assert min(value[r, e] for e in asn.hi[r]) >= max(outside) - 1e-12
+
+
+def test_cross_layer_reallocation():
+    """The point of the global knapsack: a hot row takes more slots than a
+    cold one at the same total budget — inexpressible per-layer (top-n with
+    n_hi=1 per row would pin one slot each)."""
+    value = np.array([[10.0, 9.0, 0.0, 0.0],
+                      [0.1, 0.1, 0.1, 0.1]])
+    asn = _alloc(total_hi=2, slots=2).allocate(value, [set(), set()])
+    assert asn.hi[0] == {0, 1}
+    assert asn.hi[1] == set()
+
+
+# -- hysteresis -------------------------------------------------------------
+
+@settings(max_examples=30)
+@given(seed=st.integers(0, 10_000), R=st.integers(1, 4),
+       E=st.integers(2, 8), total=st.integers(1, 10))
+def test_hysteresis_no_thrash(seed, R, E, total):
+    """Near-tie oscillation produces ZERO transitions: re-allocating with
+    value perturbations strictly inside the margin keeps the incumbent set
+    untouched."""
+    rng = np.random.default_rng(seed)
+    value = rng.random((R, E)) * 10
+    margin = 1.0
+    allocator = _alloc(total, slots=E, margin=margin)
+    first = allocator.allocate(value, [set() for _ in range(R)])
+    jitter = rng.uniform(-margin / 4, margin / 4, size=value.shape)
+    again = allocator.allocate(value + jitter, first.hi)
+    assert again.promotions == []
+    assert again.demotions == []
+    assert again.hi == first.hi
+
+
+def test_margin_clearing_swap_goes_through():
+    """A genuinely hotter entrant (clears the margin) still displaces the
+    coldest incumbent — hysteresis damps ties, it does not freeze."""
+    value = np.array([[5.0, 1.0, 0.0]])
+    allocator = _alloc(total_hi=1, slots=1, margin=1.0)
+    asn = allocator.allocate(value, [{2}])
+    assert asn.hi == [{0}]
+    assert asn.promotions == [(0, 0)] and asn.demotions == [(0, 2)]
+
+
+# -- rate limiting ----------------------------------------------------------
+
+def test_max_transitions_truncates_globally():
+    """The per-window cap truncates the plan hottest-first while keeping it
+    budget- and ceiling-feasible."""
+    R, E, total = 3, 4, 3
+    value = np.zeros((R, E))
+    value[0] = [9, 8, 7, 6]            # row 0 suddenly red hot
+    current = [set(), {0, 1}, {2}]     # 3 slots held elsewhere
+    asn = _alloc(total, slots=3, max_transitions=1).allocate(value, current)
+    assert len(asn.promotions) <= 1
+    assert asn.promotions == [(0, 0)]  # hottest promotion admitted first
+    assert sum(len(s) for s in asn.hi) <= total
+    for r in range(R):
+        assert len(asn.hi[r]) <= 3
+
+
+def test_lo_quota_and_host_demotion():
+    """With a lo-residency quota below the cell count, exactly the quota's
+    coldest complement is demoted to host — and lo promotions/demotions
+    reproduce the target from the current set."""
+    value = np.array([[4.0, 3.0, 2.0, 1.0],
+                      [8.0, 7.0, 6.0, 5.0]])
+    cur_lo = [set(range(4)), set(range(4))]
+    asn = _alloc(total_hi=1, slots=1, lo_total=5).allocate(
+        value, [set(), set()], cur_lo)
+    assert sum(len(s) for s in asn.lo) == 5
+    rebuilt = [set(s) for s in cur_lo]
+    for r, e in asn.lo_demotions:
+        rebuilt[r].discard(e)
+    for r, e in asn.lo_promotions:
+        rebuilt[r].add(e)
+    assert rebuilt == asn.lo
+    # The 3 coldest cells overall went to host.
+    demoted = set(asn.lo_demotions)
+    assert demoted == {(0, 1), (0, 2), (0, 3)}
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        AllocatorConfig(total_hi=-1, slots_per_layer=1).validate()
+    with pytest.raises(ValueError):
+        AllocatorConfig(total_hi=1, slots_per_layer=1,
+                        margin=-0.5).validate()
+    with pytest.raises(ValueError):
+        GlobalAllocator(AllocatorConfig(total_hi=1, slots_per_layer=1)) \
+            .allocate(np.zeros((2, 3)), [set()])

@@ -1,0 +1,358 @@
+"""Residency-ladder integration tests: global cross-layer allocation, the
+host-DRAM third tier, streaming cold start, and their serving-stack wiring."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import ControllerConfig
+from repro.core.budget import BudgetExceeded, plan_hierarchy
+from repro.core.controller import RebalanceConfig
+from repro.core.hotness import HotnessEstimator
+from repro.serving import (EngineConfig, InferenceEngine, Request,
+                           STAT_KEYS, Scheduler, SchedulerConfig,
+                           load_streaming_params, make_backend,
+                           make_prompts, save_expert_shards)
+from repro.serving.hoststore import FetchModel
+
+
+def _clone(params):
+    return jax.tree_util.tree_map(lambda x: x, params)
+
+
+def _engine(cfg, params, backend, **ecfg_kw):
+    ecfg_kw.setdefault("max_slots", 2)
+    ecfg_kw.setdefault("max_len", 48)
+    return InferenceEngine(cfg, params, backend, EngineConfig(**ecfg_kw))
+
+
+def _dynaexq(**kw):
+    kw.setdefault("lo_bits", 4)
+    kw.setdefault("n_hi_per_layer", 2)
+    kw.setdefault("controller", ControllerConfig(update_interval_s=0.0))
+    return make_backend("dynaexq", **kw)
+
+
+# -- tentpole: global cross-layer allocation --------------------------------
+
+def test_global_cross_layer_beats_per_layer(serving_setup):
+    """The acceptance case: under layer-skewed traffic the global allocator
+    concentrates hi slots on the hot layer — an assignment the per-layer
+    top-n rule structurally cannot express (it pins each layer to n_hi)."""
+    cfg, params = serving_setup
+    counts = np.zeros((2, cfg.moe.num_experts))
+    counts[0] = [40, 30, 20, 10]      # layer 0 red hot, layer 1 silent
+    sets = {}
+    for global_alloc in (True, False):
+        be = _dynaexq(global_alloc=global_alloc)
+        eng = _engine(cfg, _clone(params), be)
+        ctl = be.controllers["0"]
+        ctl.observe(counts)
+        be.force_update()
+        be.flush()
+        ctl.tm.check_invariants()
+        sets[global_alloc] = be.hi_sets()["0"]
+        # Same slot budget spent either way.
+        assert sum(len(s) for s in sets[global_alloc]) == 4
+        del eng
+    assert sets[True][0] == [0, 1, 2, 3]   # whole budget on the hot layer
+    assert sets[True][1] == []
+    assert all(len(s) == 2 for s in sets[False])   # per-layer: pinned
+
+
+def test_global_default_and_ep_exclusion(serving_setup):
+    """Global allocation is the single-shard default; expert parallelism
+    falls back to per-layer (shard-local slots) and rejects an explicit
+    global request."""
+    assert _dynaexq().global_alloc is True
+    assert _dynaexq(ep_shards=2).global_alloc is False
+    with pytest.raises(ValueError):
+        _dynaexq(ep_shards=2, global_alloc=True)
+    with pytest.raises(ValueError):
+        _dynaexq(ep_shards=2, lo_resident_total=4)
+
+
+def test_sensitivity_bends_allocation(serving_setup):
+    """A fragile expert (high quantization sensitivity) wins a hi slot from
+    an equally-hot robust one."""
+    cfg, params = serving_setup
+    E = cfg.moe.num_experts
+    sens = np.ones((2, E))
+    sens[1, 3] = 40.0                  # expert (1, 3) is fragile
+    be = _dynaexq(sensitivity={"0": sens})
+    _engine(cfg, _clone(params), be)
+    counts = np.ones((2, E))           # perfectly uniform traffic
+    be.controllers["0"].observe(counts)
+    be.force_update()
+    be.flush()
+    assert 3 in be.hi_sets()["0"][1]
+
+
+# -- host-DRAM third tier ---------------------------------------------------
+
+def test_host_tier_quota_and_demand_stall(serving_setup):
+    cfg, params = serving_setup
+    E = cfg.moe.num_experts
+    be = _dynaexq(lo_resident_total=5,
+                  fetch=FetchModel(gbps=1.0))
+    eng = _engine(cfg, _clone(params), be)
+    counts = np.zeros((2, E))
+    counts[0] = [40, 30, 20, 10]
+    counts[1] = [4, 3, 2, 1]
+    be.controllers["0"].observe(counts)
+    be.force_update()
+    be.flush()
+    store = be.stores["0"]
+    store.check_invariants()
+    # Exactly the quota stays device-lo-resident; the rest went to host.
+    assert int(store.lo_resident.sum()) == 5
+    # Ladder order: every hi resident is lo-resident.
+    for l in range(2):
+        for e in be.hi_sets()["0"][l]:
+            assert store.lo_resident[l, e]
+    # Routing a host-resident expert pays a modeled demand-fetch stall.
+    host_cell = np.argwhere(~store.lo_resident)[0]
+    demand = np.zeros((2, E))
+    demand[host_cell[0], host_cell[1]] = 3
+    stall = be.observe({"0": demand}, compute_s=0.0)
+    assert stall > 0
+    st = be.stats()
+    assert st["host_fetches"] >= 1
+    assert st["lo_resident_frac"] < 1.0
+    assert set(STAT_KEYS) <= set(st)
+    # Modeled footprint shrinks with the quota (same traffic, same hi
+    # residency — only the lo tier differs).
+    full = _dynaexq()
+    _engine(cfg, _clone(params), full)
+    full.controllers["0"].observe(counts)
+    full.force_update()
+    full.flush()
+    assert be.device_bytes() < full.device_bytes()
+    del eng
+
+
+def test_randomized_ladder_interleaving(serving_setup):
+    """Randomized promote/demote/host-evict interleavings: after every
+    window the VER handle table, the store masks, and the ladder ordering
+    (hi ⊆ lo-resident, resident count == quota) all hold."""
+    cfg, params = serving_setup
+    E = cfg.moe.num_experts
+    quota = 6
+    be = _dynaexq(lo_resident_total=quota,
+                  controller=ControllerConfig(update_interval_s=0.0,
+                                              margin=0.5))
+    _engine(cfg, _clone(params), be)
+    ctl = be.controllers["0"]
+    store = be.stores["0"]
+    rng = np.random.default_rng(7)
+    for round_ in range(25):
+        counts = rng.integers(0, 50, size=(2, E)) * \
+            rng.integers(0, 2, size=(2, E))
+        ctl.observe(counts)
+        be.observe({"0": rng.integers(0, 3, size=(2, E))})
+        be.force_update()
+        if round_ % 3 == 0:
+            be.flush()
+        ctl.tm.check_invariants()
+        store.check_invariants()
+        hi = be.hi_sets()["0"]
+        for l in range(2):
+            for e in hi[l]:
+                assert store.lo_resident[l, e], (round_, l, e)
+        assert int(store.lo_resident.sum()) == quota
+    be.flush()
+    assert be.stats()["promotions"] > 0
+
+
+# -- streaming cold start ---------------------------------------------------
+
+@pytest.fixture(scope="module")
+def shard_dir(tmp_path_factory, serving_setup):
+    cfg, params = serving_setup
+    d = tmp_path_factory.mktemp("shards")
+    save_expert_shards(str(d), _clone(params), [0], lo_bits=4)
+    return str(d)
+
+
+def test_streaming_token_parity(serving_setup, shard_dir):
+    """Frozen-policy temp-0 parity: an engine that streamed its lo tier
+    from checkpoint shards emits token-for-token what the fully
+    materialized engine does — staged rows are bit-identical to
+    build_bank's."""
+    cfg, params = serving_setup
+    frozen = ControllerConfig(update_interval_s=1e9)
+    prompts = make_prompts("text", cfg.vocab_size, 2, 16)
+    eng_a = _engine(cfg, _clone(params), _dynaexq(controller=frozen))
+    out_a, _, _ = eng_a.generate({"tokens": prompts}, 6)
+    eng_b = _engine(cfg, load_streaming_params(shard_dir),
+                    _dynaexq(controller=frozen, stream=shard_dir,
+                             stream_experts_per_tick=3))
+    assert not eng_b.backend.serving_ready()
+    out_b, _, _ = eng_b.generate({"tokens": prompts}, 6)
+    assert eng_b.backend.serving_ready()
+    np.testing.assert_array_equal(np.asarray(out_a), np.asarray(out_b))
+
+
+def test_streaming_warmed_parity(serving_setup, shard_dir):
+    """With identical traffic, the streamed and materialized engines reach
+    identical hi sets AND identical tokens — hi shards (f32 on disk) cast
+    back to the exact bf16 the dense checkpoint held."""
+    cfg, params = serving_setup
+    frozen = ControllerConfig(update_interval_s=1e9)
+    counts = np.zeros((2, cfg.moe.num_experts))
+    counts[0] = [40, 30, 20, 10]
+    prompts = make_prompts("text", cfg.vocab_size, 2, 16)
+    outs, his = [], []
+    for stream in (None, shard_dir):
+        p = load_streaming_params(shard_dir) if stream else _clone(params)
+        be = _dynaexq(controller=frozen, stream=stream)
+        eng = _engine(cfg, p, be)
+        be.flush()                       # finish the cold-start pump
+        be.controllers["0"].observe(counts)
+        be.force_update()
+        be.flush()
+        his.append(be.hi_sets())
+        out, _, _ = eng.generate({"tokens": prompts}, 6)
+        outs.append(np.asarray(out))
+    assert his[0] == his[1]
+    assert sum(len(s) for s in his[1]["0"]) == 4
+    np.testing.assert_array_equal(outs[0], outs[1])
+
+
+def test_cold_start_gating(serving_setup, shard_dir):
+    """While streaming, the engine queues but never runs a forward (no
+    request may observe a partially materialized expert); readiness grows
+    monotonically; queued work drains once the lo tier completes."""
+    cfg, _ = serving_setup
+    be = _dynaexq(controller=ControllerConfig(update_interval_s=1e9),
+                  stream=shard_dir, stream_experts_per_tick=2)
+    eng = _engine(cfg, load_streaming_params(shard_dir), be)
+    prompts = make_prompts("text", cfg.vocab_size, 1, 8)
+    h = eng.submit(Request(tokens=prompts[0], max_new_tokens=4))
+    last_frac, steps = 0.0, 0
+    while not be.serving_ready():
+        assert all(s is None for s in eng.slots)
+        assert eng.step() == []
+        frac = be.ready_frac()
+        assert frac >= last_frac
+        last_frac = frac
+        steps += 1
+        assert steps < 100
+    for store in be.stores.values():
+        store.check_invariants()
+        assert store.lo_complete
+    assert eng.load_snapshot()["residency_ready_frac"] == 1.0
+    eng.drain()
+    assert len(h.tokens) == 4
+    st = be.stats()
+    assert st["residency_ready_frac"] == 1.0
+
+
+def test_scheduler_sheds_during_cold_start():
+    s = Scheduler(SchedulerConfig(shed_policy="downgrade",
+                                  shed_min_ready_frac=0.9))
+    warm = {"queue_depth": 0.0, "est_wait_s": 0.0,
+            "budget_headroom_frac": 1.0}
+    assert s.overloaded({**warm, "residency_ready_frac": 0.5})
+    assert not s.overloaded({**warm, "residency_ready_frac": 0.95})
+    assert not s.overloaded(warm)      # absent signal = warm engine
+    with pytest.raises(ValueError):
+        SchedulerConfig(shed_min_ready_frac=1.5).validate()
+
+
+# -- satellites -------------------------------------------------------------
+
+def test_migration_rate_limit_shared_with_promotions(serving_setup):
+    """EP relabeling draws from the SAME per-window transfer budget as
+    promotions: a starved window defers migrations (counted), an open one
+    admits them."""
+    cfg, params = serving_setup
+    counts = np.zeros((2, cfg.moe.num_experts))
+    counts[:] = [100, 50, 1, 0]        # shard 0 holds all the heat
+    reb = RebalanceConfig(interval_s=0.0, skew_threshold=1.1,
+                          max_migrations_per_window=4)
+    migrated = {}
+    for limit in (1, 0):               # 1 byte/window vs unlimited
+        be = _dynaexq(ep_shards=2,
+                      controller=ControllerConfig(
+                          update_interval_s=0.0,
+                          migration_bytes_per_window=limit),
+                      rebalance=dataclasses.replace(reb))
+        be.materialize_banks(cfg, _clone(params), kv_bytes=0)
+        ctl = be.controllers["0"]
+        ctl.observe(counts)
+        ctl.update()
+        migrated[limit] = be.coordinator.rebalance()
+        if limit == 1:
+            assert be.coordinator.stats["deferred_migrations"] > 0
+        ctl.tm.check_invariants()
+        be.stores["0"].check_invariants()
+    assert migrated[1] == 0
+    assert migrated[0] > 0
+
+
+def test_hotness_save_restore_roundtrip(tmp_path):
+    h = HotnessEstimator(2, 4, alpha=0.5)
+    h.observe(np.arange(8).reshape(2, 4))
+    h.fold()
+    h.observe(np.ones((2, 4)))
+    p = str(tmp_path / "hot.npz")
+    h.save(p)
+    h2 = HotnessEstimator(2, 4)
+    h2.load(p)
+    np.testing.assert_array_equal(h2.scores, h.scores)
+    np.testing.assert_array_equal(h2.counts, h.counts)
+    assert h2.intervals == h.intervals
+    with pytest.raises(ValueError):
+        HotnessEstimator(3, 4).load(p)
+
+
+def test_backend_hotness_persistence(serving_setup, tmp_path):
+    """save_hotness → a new backend constructed with the same prefix opens
+    with the previous run's traffic as its prior."""
+    cfg, params = serving_setup
+    prefix = str(tmp_path / "hotness")
+    be = _dynaexq(hotness_path=prefix)
+    _engine(cfg, _clone(params), be)
+    counts = np.zeros((2, cfg.moe.num_experts))
+    counts[0, 1] = 99
+    be.controllers["0"].observe(counts)
+    be.controllers["0"].hotness.fold()
+    be.save_hotness()
+    be2 = _dynaexq(hotness_path=prefix)
+    _engine(cfg, _clone(params), be2)
+    np.testing.assert_array_equal(
+        be2.controllers["0"].hotness.scores,
+        be.controllers["0"].hotness.scores)
+    assert be2._host_acct["hotness_restored"] == 1
+
+
+def test_plan_hierarchy_budget_split():
+    plan = plan_hierarchy(m_total=1000, m_fixed=100,
+                          lo_bytes_per_expert_layer=10,
+                          hi_bytes_per_expert_layer=100,
+                          n_layers=2, num_experts=4)
+    assert plan.lo_resident_total == 8 and plan.total_hi == 8
+    partial = plan_hierarchy(m_total=150, m_fixed=100,
+                             lo_bytes_per_expert_layer=10,
+                             hi_bytes_per_expert_layer=100,
+                             n_layers=2, num_experts=4)
+    assert partial.lo_resident_total == 5 and partial.total_hi == 0
+    with pytest.raises(BudgetExceeded):
+        plan_hierarchy(m_total=105, m_fixed=100,
+                       lo_bytes_per_expert_layer=10,
+                       hi_bytes_per_expert_layer=100,
+                       n_layers=2, num_experts=4)
+
+
+def test_offload_uniform_stats(engine_factory):
+    """The absorbed offload baseline reports through the uniform schema:
+    bytes_moved (renamed from bytes_fetched) and host_fetches (= misses)."""
+    eng = engine_factory("offload")
+    prompts = make_prompts("text", eng.cfg.vocab_size, 2, 16)
+    eng.generate({"tokens": prompts}, 4)
+    st = eng.backend.stats()
+    assert set(STAT_KEYS) <= set(st)
+    assert st["host_fetches"] == st["misses"]
+    assert st["bytes_moved"] > 0

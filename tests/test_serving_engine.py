@@ -42,7 +42,10 @@ def test_dynaexq_promotes_under_skew(engine_factory, prompts):
     eng.generate({"tokens": prompts}, 6)
     eng.flush()
     hi = eng.backend.hi_sets()["0"]
-    assert all(len(s) == 2 for s in hi)    # budget-full residency
+    # Budget-full residency: the global allocator spends the whole slot
+    # budget (n_hi × L) but may skew slots toward hot layers — only the
+    # TOTAL is pinned (the per-layer rule would pin each layer to n_hi).
+    assert sum(len(s) for s in hi) == 2 * len(hi)
     ctl = eng.backend.controllers["0"]
     ctl.tm.check_invariants()
     assert ctl.tm.stats["promoted"] >= 2 * len(hi)  # n_hi × layers at least
