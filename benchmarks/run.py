@@ -29,7 +29,7 @@ def main() -> None:
         print(f"{name},{us_per_call:.1f},{derived}")
 
     from benchmarks import (activation_ratio, demotion_curve, ep_scaling,
-                            hierarchy, kernels_bench, kv_reuse,
+                            hierarchy, kernels_bench, kv_reuse, obs_overhead,
                             prompt_scaling, quality, serving_perf,
                             serving_sim, slo_serving, spec_decode,
                             workload_shift)
@@ -45,6 +45,7 @@ def main() -> None:
         ("ep_scaling", ep_scaling.run),
         ("hierarchy", hierarchy.run),
         ("spec_decode", spec_decode.run),
+        ("obs_overhead", obs_overhead.run),
         ("prompt_scaling", prompt_scaling.run),
         ("kernels", kernels_bench.run),
         ("kernels_roofline", kernels_bench.run_roofline),

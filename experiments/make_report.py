@@ -76,6 +76,46 @@ def fmt_dryrun(recs, mesh):
     return "\n".join(rows)
 
 
+def fmt_obs(path="experiments/BENCH_obs.json"):
+    """§Observability tables from the obs_overhead benchmark artifact:
+    promotion publish-latency percentiles and the measured-vs-roofline
+    bytes/token residuals per (tokens, hi-mix) bucket."""
+    try:
+        with open(path) as f:
+            obs = json.load(f)["obs"]
+    except (FileNotFoundError, KeyError):
+        return None
+    prom, roof = obs["promotions"], obs["roofline"]
+    rows = [
+        "### Observability tax + promotion latency",
+        "",
+        f"| tok/s (obs off) | tok/s (obs on) | overhead | trace events |",
+        "|---|---|---|---|",
+        f"| {obs['tokens_per_s_off']:.1f} | {obs['tokens_per_s_on']:.1f} | "
+        f"{obs['overhead_frac']*100:+.1f}% (budget "
+        f"{obs['max_overhead_frac']*100:.0f}%) | {obs['trace_events']} |",
+        "",
+        f"Promotions: {prom['n_published']} published, "
+        f"{prom['n_cancelled']} cancelled; publish latency p50 "
+        f"{prom['publish_latency_p50_s']*1e3:.1f} ms, p95 "
+        f"{prom['publish_latency_p95_s']*1e3:.1f} ms, max "
+        f"{prom['publish_latency_max_s']*1e3:.1f} ms.",
+        "",
+        "### Measured vs roofline MoE bytes/token "
+        f"({roof['n_steps']} decode steps)",
+        "",
+        "| tokens/step | published hi/layer | steps | measured B/tok | "
+        "predicted B/tok | residual |",
+        "|---|---|---|---|---|---|",
+    ]
+    for b in roof["buckets"]:
+        rows.append(
+            f"| {b['tokens']:g} | {b['hi_per_layer']:g} | {b['n_steps']} | "
+            f"{b['measured_bpt']:,.0f} | {b['predicted_bpt']:,.0f} | "
+            f"{b['rel_residual']*100:+.2f}% |")
+    return "\n".join(rows)
+
+
 if __name__ == "__main__":
     single = load("experiments/dryrun_single.jsonl")
     multi = load("experiments/dryrun_multi.jsonl")
@@ -92,4 +132,8 @@ if __name__ == "__main__":
         f.write(fmt_dryrun(single, "16x16"))
     with open("experiments/dryrun_multi_table.md", "w") as f:
         f.write(fmt_dryrun(multi, "2x16x16"))
+    obs_md = fmt_obs()
+    if obs_md is not None:
+        with open("experiments/obs_table.md", "w") as f:
+            f.write(obs_md + "\n")
     print("tables written to experiments/*.md")

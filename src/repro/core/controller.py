@@ -154,6 +154,7 @@ class EPCoordinator:
         self.stats = {"migrations": 0, "windows": 0, "bytes_moved": 0,
                       "deferred_migrations": 0}
         self._last = time.monotonic()
+        self.tracer = None   # FlightRecorder, attached by the serving layer
 
     def register(self, ctl: DynaExqController, moe_params: Dict) -> None:
         """Track one MoE position: its controller and the live params dict
@@ -273,4 +274,7 @@ class EPCoordinator:
         placement[l, [e, f]] = placement[l, [f, e]]
         # Both directions of the pairwise exchange cross the interconnect.
         self.stats["bytes_moved"] += 2 * moved
+        if self.tracer is not None:
+            self.tracer.instant("ep_migration", cat="ep", layer=l, expert=e,
+                                peer=f, bytes=2 * moved)
         return True

@@ -44,6 +44,10 @@ class PendingPromotion:
     # ``_issue_copy``, so peeking the bank would let an older promotion
     # publish on a newer copy's completion (and vice versa).
     arrays: tuple = ()
+    # Flight-recorder lifecycle: async-span correlation id and the engine-
+    # clock issue timestamp (publish latency = publish ts − issue ts).
+    seq: int = 0
+    issue_ts: float = 0.0
 
 
 class TransitionManager:
@@ -93,6 +97,11 @@ class TransitionManager:
         self._window_used = 0
         self.stats = {"promoted": 0, "demoted": 0, "deferred": 0,
                       "bytes_moved": 0}
+        # Observability (attached by the backend, None by default): every
+        # hook below guards on ``tracer is not None`` — with observability
+        # off the pipeline allocates nothing extra.
+        self.tracer = None                  # repro.obs.trace.FlightRecorder
+        self.publish_hist = None            # metrics Histogram (publish lat)
 
     # -- shard plumbing ---------------------------------------------------
     def shard_of_expert(self, expert: int) -> int:
@@ -106,11 +115,17 @@ class TransitionManager:
         if self.state[layer, expert] == Residency.RESIDENT_LO.value:
             self.state[layer, expert] = Residency.PROMOTING.value
             self.update_q.append((layer, expert))
+            if self.tracer is not None:
+                self.tracer.instant("promo_request", cat="residency",
+                                    layer=layer, expert=expert)
 
     def request_demotion(self, layer: int, expert: int) -> None:
         if self.state[layer, expert] == Residency.RESIDENT_HI.value:
             self.state[layer, expert] = Residency.DEMOTING.value
             self.evict_q.append((layer, expert))
+            if self.tracer is not None:
+                self.tracer.instant("demo_request", cat="residency",
+                                    layer=layer, expert=expert)
 
     def try_consume_window(self, nbytes: int) -> bool:
         """Charge ``nbytes`` against the current window's transfer budget
@@ -149,6 +164,9 @@ class TransitionManager:
                     or not self._tracker_for(shard).try_reserve(self.hi_bytes)):
                 deferred.append((l, e))   # backpressure: stay queued
                 self.stats["deferred"] += 1
+                if self.tracer is not None:
+                    self.tracer.instant("promo_deferred", cat="residency",
+                                        layer=l, expert=e)
                 continue
             slot = self.pools[l].alloc(e, shard)
             self._issue_copy(l, e, slot)
@@ -170,9 +188,17 @@ class TransitionManager:
             new_hi[name] = write_hi_slot(leaf, jnp.int32(layer),
                                          jnp.int32(slot), w)
         self.bank.hi = new_hi  # dispatched, not yet waited on
-        self._pending.append(PendingPromotion(
-            layer, expert, slot, self.hi_bytes,
-            arrays=tuple(new_hi.values())))
+        p = PendingPromotion(layer, expert, slot, self.hi_bytes,
+                             arrays=tuple(new_hi.values()))
+        if self.tracer is not None:
+            # Lifecycle span: opens at copy issue, closes at publish (or
+            # cancellation) — per-phase timestamps on the engine clock.
+            p.seq = self.tracer.next_id()
+            p.issue_ts = self.tracer.clock()
+            self.tracer.async_begin("promotion", p.seq, cat="residency",
+                                    layer=layer, expert=expert, slot=slot,
+                                    bytes=self.hi_bytes)
+        self._pending.append(p)
         self.stats["bytes_moved"] += self.hi_bytes
 
     def _demote(self, layer: int, expert: int) -> None:
@@ -186,6 +212,9 @@ class TransitionManager:
                 self.hi_bytes)
         self.state[layer, expert] = Residency.RESIDENT_LO.value
         self.stats["demoted"] += 1
+        if self.tracer is not None:
+            self.tracer.instant("demotion", cat="residency", layer=layer,
+                                expert=expert, slot=slot)
 
     def publish_ready(self, wait: bool = False) -> int:
         """Publish completed copies (window boundary). ``wait=True`` blocks on
@@ -212,12 +241,25 @@ class TransitionManager:
                 self.state[p.layer, p.expert] = Residency.RESIDENT_HI.value
                 published += 1
                 self.stats["promoted"] += 1
+                if self.tracer is not None:
+                    # ``published=1`` certifies the publish-then-switch
+                    # discipline: this span only closes published after its
+                    # own result arrays probed ready — no forward can have
+                    # observed a half-materialized expert.
+                    self.tracer.async_end("promotion", p.seq,
+                                          cat="residency", published=1)
+                    if self.publish_hist is not None:
+                        self.publish_hist.observe(
+                            self.tracer.clock() - p.issue_ts)
             else:
                 # Demoted while promoting — reclaim without publishing.
                 self.pools[p.layer].free(p.slot)
                 self._tracker_for(self.pools[p.layer].shard_of(p.slot)).release(
                     p.nbytes)
                 self.state[p.layer, p.expert] = Residency.RESIDENT_LO.value
+                if self.tracer is not None:
+                    self.tracer.async_end("promotion", p.seq,
+                                          cat="residency", published=0)
         self._pending = still
         self._flush_maps()
         return published

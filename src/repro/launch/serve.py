@@ -133,6 +133,15 @@ def main():
     ap.add_argument("--save-shards", default=None,
                     help="write the expert-sharded serving checkpoint to "
                          "this dir and exit (streaming cold-start source)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the flight-recorder trace here as Chrome "
+                         "trace-event JSON (open in Perfetto / "
+                         "chrome://tracing)")
+    ap.add_argument("--metrics-jsonl", default=None,
+                    help="append per-step metric samples to this JSONL file")
+    ap.add_argument("--no-obs", action="store_true",
+                    help="disable the observability layer entirely (no "
+                         "tracer, no metrics, no shutdown summary)")
     ap.add_argument("--ep-shards", type=int, default=1,
                     help="expert-parallel serving over this many devices: "
                          "tokens and experts shard over the model axis, MoE "
@@ -169,6 +178,10 @@ def main():
                            lo_bits=args.lo_bits)
         print(f"[serve] expert-sharded checkpoint -> {args.save_shards}")
         return
+    obs = None
+    if not args.no_obs:
+        from repro.obs import Observability, ObsConfig
+        obs = Observability(ObsConfig(metrics_jsonl=args.metrics_jsonl))
     engine = InferenceEngine(
         cfg, params, build_backend(args),
         EngineConfig(max_slots=args.batch,
@@ -185,7 +198,7 @@ def main():
                          qos_default=args.qos_default,
                          shed_policy=args.shed_policy,
                          prefill_chunk=args.prefill_chunk)),
-        dist=dist)
+        dist=dist, obs=obs)
     toks = make_prompts(args.workload, cfg.vocab_size,
                         args.batch, args.prompt_len)
     use_sampling = (args.temperature > 0 or args.top_k is not None or
@@ -215,9 +228,30 @@ def main():
               f"tokens/row-round {st['verified_tokens']/row_rounds:.2f} "
               f"(1.0 = no speculation; {st['draft_tokens']:.0f} drafted "
               f"over {st['spec_rounds']:.0f} rounds)")
-    print(f"[serve] uniform stats: "
-          f"{ {k: round(float(v), 4) for k, v in st.items()} }")
     print(f"[serve] resident expert bytes: {engine.device_bytes():,}")
+    if obs is None:
+        # No obs layer: fall back to the raw uniform stats dump.
+        print(f"[serve] uniform stats: "
+              f"{ {k: round(float(v), 4) for k, v in st.items()} }")
+    else:
+        summ = obs.summary()
+        roof, prom = summ["roofline"], summ["promotions"]
+        resid = max((abs(b["rel_residual"]) for b in roof["buckets"]),
+                    default=0.0)
+        stall = sum(h.stall_exposure_s for h in handles)
+        print(f"[serve] obs: {summ['trace_events']} events "
+              f"({summ['trace_dropped']} dropped)  "
+              f"promotions {prom['n_published']} published / "
+              f"{prom['n_cancelled']} cancelled "
+              f"publish p95 {prom['publish_latency_p95_s']*1e3:.1f} ms  "
+              f"bytes/token residual max {resid:.3f} "
+              f"over {roof['n_steps']} decode steps  "
+              f"stall exposure {stall*1e3:.1f} ms  "
+              f"shed {st.get('shed_requests', 0.0):.0f}")
+        if args.trace_out:
+            obs.save_trace(args.trace_out)
+            print(f"[serve] trace -> {args.trace_out}")
+        obs.close()
     if args.hotness_path and hasattr(engine.backend, "save_hotness"):
         engine.backend.save_hotness()
         print(f"[serve] hotness snapshot -> {args.hotness_path}_p*.npz")

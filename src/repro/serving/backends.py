@@ -82,6 +82,12 @@ STAT_KEYS = ("ttft_s", "tpot_s", "stall_s", "bytes_moved",
              "preemptions", "resumes", "shed_requests", "downgraded",
              "host_fetches")
 
+#: The schema contract: ``backend.stats()`` returns EXACTLY
+#: ``STAT_KEYS + type(backend).STAT_EXTRAS`` — extras are declared per
+#: class, not leaked ad hoc, so downstream consumers (benchmark JSON,
+#: metrics export, report tables) can pin columns. Enforced by
+#: ``tests/test_obs.py``.
+
 
 def _param_bytes(tree) -> int:
     return sum(x.size * x.dtype.itemsize
@@ -162,6 +168,9 @@ class _BackendBase:
 
     name = "base"
 
+    #: Stats keys this class emits beyond the uniform ``STAT_KEYS``.
+    STAT_EXTRAS: Tuple[str, ...] = ()
+
     def __init__(self):
         self._ttft: list[float] = []
         self._tpot: list[float] = []
@@ -169,6 +178,24 @@ class _BackendBase:
         self.cfg: Optional[ArchConfig] = None
         self.budget = None                  # engine's shared BudgetTracker
         self.moe_positions: list[int] = []
+        self.tracer = None                  # obs.FlightRecorder | None
+        self.metrics = None                 # obs.MetricsRegistry | None
+
+    # -- observability ---------------------------------------------------
+    def attach_obs(self, tracer=None, metrics=None) -> None:
+        """Wire the engine's flight recorder / metrics registry in.
+        Subclasses propagate to owned components (TransitionManager,
+        EPCoordinator, HostExpertStore). ``None`` detaches — every
+        instrumentation site is a pointer check, so detached backends
+        compile to the pre-obs behavior."""
+        self.tracer = tracer
+        self.metrics = metrics
+
+    def obs_meta(self) -> Dict[str, int]:
+        """Byte prices the trace cost model replays against:
+        ``{"lo_bytes", "hi_bytes"}`` per expert-layer cell (zeros where a
+        tier doesn't exist under this strategy)."""
+        return {}
 
     # -- lifecycle -------------------------------------------------------
     def materialize_banks(self, cfg: ArchConfig, params: Dict,
@@ -201,11 +228,31 @@ class _BackendBase:
             acc = self._counts_sum.get(k)
             self._counts_sum[k] = c.copy() if acc is None else acc + c
         stall = self._observe_residency(cleaned, compute_s)
+        if self.tracer is not None:
+            # The per-forward traffic record the cost model replays: routed
+            # assignments plus the active-cell tier split at THIS forward's
+            # residency. Args are counts only (no wall-clock durations), so
+            # virtual-clock replays trace byte-identically.
+            hi, lo, host, pub = self._tier_counts(cleaned)
+            self.tracer.instant(
+                "moe_forward", cat="engine",
+                routed=int(sum(int(c.sum()) for c in cleaned.values())),
+                layers=int(sum(c.shape[0] for c in cleaned.values())),
+                active_hi=hi, active_lo=lo, active_host=host,
+                published_hi=pub, prefill=int(prefill))
         (self._ttft if prefill else self._tpot).append(compute_s + stall)
         return stall
 
     def _observe_residency(self, counts: Dict, compute_s: float) -> float:
         return 0.0
+
+    def _tier_counts(self, cleaned: Dict) -> Tuple[int, int, int, int]:
+        """One forward's ``(active_hi, active_lo, active_host,
+        published_hi)`` cell counts. Base strategy: everything serves from
+        an always-resident lo tier (StaticPTQ's truth; overridden where the
+        ladder is richer)."""
+        act = sum(int((c > 0).sum()) for c in cleaned.values())
+        return 0, act, 0, 0
 
     def tick(self) -> None:
         pass
@@ -227,6 +274,12 @@ class _BackendBase:
     def router_counts(self) -> Dict[str, np.ndarray]:
         """Accumulated router-selection counts per MoE position, (L, E)."""
         return dict(self._counts_sum)
+
+    def residency_mix(self) -> Dict[str, int]:
+        """Current (layer, expert)-cell residency census:
+        ``{"hi", "lo", "host"}`` counts (the per-step gauge the metrics
+        sampler records)."""
+        return {"hi": 0, "lo": 0, "host": 0}
 
     def device_bytes(self) -> int:
         raise NotImplementedError
@@ -253,12 +306,31 @@ class Fp16Backend(_BackendBase):
     def __init__(self):
         super().__init__()
         self._dense_bytes = 0
+        self._cells = 0
+        self._cell_bytes = 0
 
     def _materialize(self, cfg, params, kv_bytes):
         self._dense_bytes = sum(
             _param_bytes(params["blocks"][str(p)]["moe"]["experts"])
             for p in self.moe_positions)
+        self._cells = sum(
+            int(np.prod(params["blocks"][str(p)]["moe"]["experts"]
+                        ["w_gate"].shape[:2]))
+            for p in self.moe_positions)
+        self._cell_bytes = self._dense_bytes // max(1, self._cells)
         return None        # forward uses the dense experts in params
+
+    def _tier_counts(self, cleaned):
+        # Dense experts: every active cell streams at full precision.
+        act = sum(int((c > 0).sum()) for c in cleaned.values())
+        cells = sum(int(c.size) for c in cleaned.values())
+        return act, 0, 0, cells
+
+    def residency_mix(self) -> Dict[str, int]:
+        return {"hi": self._cells, "lo": 0, "host": 0}
+
+    def obs_meta(self) -> Dict[str, int]:
+        return {"lo_bytes": 0, "hi_bytes": self._cell_bytes}
 
     def device_bytes(self) -> int:
         return self._dense_bytes
@@ -276,20 +348,30 @@ class StaticPTQBackend(_BackendBase):
         self.group_size = group_size
         self.banks: Dict = {}
         self._lo_bytes = 0
+        self._cells = 0
+        self._lo_per = 0
 
     def _materialize(self, cfg, params, kv_bytes):
         for pos in self.moe_positions:
             experts = params["blocks"][str(pos)]["moe"]["experts"]
             shapes = {k: tuple(v.shape) for k, v in experts.items()}
             L, E = experts["w_gate"].shape[:2]
-            self._lo_bytes += expert_lo_nbytes(
-                shapes, self.lo_bits, self.group_size) * L * E
+            self._lo_per = expert_lo_nbytes(
+                shapes, self.lo_bits, self.group_size)
+            self._lo_bytes += self._lo_per * L * E
+            self._cells += L * E
             self.banks[str(pos)] = build_bank(
                 experts, n_hi=0, lo_bits=self.lo_bits,
                 group_size=self.group_size)
             # Free the dense copies — the bank is the only residency now.
             params["blocks"][str(pos)]["moe"]["experts"] = None
         return self.banks
+
+    def residency_mix(self) -> Dict[str, int]:
+        return {"hi": 0, "lo": self._cells, "host": 0}
+
+    def obs_meta(self) -> Dict[str, int]:
+        return {"lo_bytes": self._lo_per, "hi_bytes": 0}
 
     def device_bytes(self) -> int:
         return self._lo_bytes
@@ -334,6 +416,9 @@ class DynaExqBackend(_BackendBase):
     window alongside the per-position controllers)."""
 
     name = "dynaexq"
+
+    STAT_EXTRAS = ("deferred", "lo_resident_frac", "hi_loads",
+                   "residency_ready_frac", "migrations")
 
     def __init__(self, lo_bits: int = 4, hi_bits: int = 16,
                  group_size: int = 64,
@@ -398,6 +483,7 @@ class DynaExqBackend(_BackendBase):
         self._row_offsets: Dict[str, int] = {}
         self._sens: Dict[str, np.ndarray] = {}
         self._lo_b: Dict[str, int] = {}
+        self._hi_b: Dict[str, int] = {}
         self._pump_queue: deque = deque()
         self._lo_quota_left = lo_resident_total or 0
         self._serving_ready = True
@@ -470,6 +556,7 @@ class DynaExqBackend(_BackendBase):
         self._build_global_structures(metas, sens)
         for pos, experts, shapes, L, E, hi_b, lo_b, n_hi in metas:
             self._lo_b[pos] = lo_b
+            self._hi_b[pos] = hi_b
             slots = n_hi
             if self.global_alloc and n_hi > 0:
                 # Physical per-layer pool ceiling: headroom over the
@@ -518,7 +605,62 @@ class DynaExqBackend(_BackendBase):
             params["blocks"][pos]["moe"]["experts"] = None
         if not self._serving_ready:
             self._build_pump_queue()
+        self._propagate_obs()   # components built after attach_obs
         return self.banks
+
+    # -- observability -----------------------------------------------------
+    def attach_obs(self, tracer=None, metrics=None) -> None:
+        super().attach_obs(tracer, metrics)
+        self._propagate_obs()
+
+    def _propagate_obs(self) -> None:
+        """Push the recorder/registry into owned components. Idempotent and
+        order-independent: runs both at attach time and at the end of
+        ``_materialize`` (whichever comes second sees everything)."""
+        hist = self.metrics.histogram(
+            "promotion_publish_latency_seconds",
+            "copy issue -> publish latency of hi promotions") \
+            if self.metrics is not None else None
+        for ctl in self.controllers.values():
+            ctl.tm.tracer = self.tracer
+            ctl.tm.publish_hist = hist
+        if self.coordinator is not None:
+            self.coordinator.tracer = self.tracer
+        for store in self.stores.values():
+            store.tracer = self.tracer
+
+    def obs_meta(self) -> Dict[str, int]:
+        if not self._lo_b:
+            return {}
+        return {"lo_bytes": int(next(iter(self._lo_b.values()))),
+                "hi_bytes": int(next(iter(self._hi_b.values())))}
+
+    def _tier_counts(self, cleaned):
+        hi = lo = host = pub = 0
+        for k, c in cleaned.items():
+            act = c > 0
+            ctl = self.controllers.get(k)
+            hi_mask = ctl.tm.slot_map_h >= 0 if ctl is not None \
+                else np.zeros(c.shape, bool)
+            store = self.stores.get(k)
+            if store is not None and self.lo_resident_total:
+                host_mask = ~store.lo_resident & store.lo_valid
+            else:
+                host_mask = np.zeros(c.shape, bool)
+            pub += int(hi_mask.sum())
+            hi += int((act & hi_mask).sum())
+            host += int((act & ~hi_mask & host_mask).sum())
+            lo += int((act & ~hi_mask & ~host_mask).sum())
+        return hi, lo, host, pub
+
+    def residency_mix(self) -> Dict[str, int]:
+        hi = lo = host = 0
+        for ctl in self.controllers.values():
+            hi += int((ctl.tm.slot_map_h >= 0).sum())
+        for store in self.stores.values():
+            lo += int(store.lo_resident.sum())
+            host += int((~store.lo_resident & store.lo_valid).sum())
+        return {"hi": hi, "lo": lo, "host": host}
 
     def _build_global_structures(self, metas, sens) -> None:
         """Global-mode scaffolding: the cross-layer knapsack (row = one
@@ -647,7 +789,13 @@ class DynaExqBackend(_BackendBase):
                 demand = n * self._lo_b[k]
                 self._host_acct["host_fetches"] += n
                 self._host_acct["host_fetch_bytes"] += demand
-                stall += self.fetch.stall_s(demand)
+                s = self.fetch.stall_s(demand)
+                stall += s
+                if self.tracer is not None:
+                    # stall_s is modeled from bytes (deterministic), safe
+                    # for byte-identical replay traces.
+                    self.tracer.instant("host_fetch", cat="host", pos=k,
+                                        experts=n, bytes=demand, stall_s=s)
         return stall
 
     # -- windows -----------------------------------------------------------
@@ -829,8 +977,11 @@ class DynaExqBackend(_BackendBase):
         return total
 
     def _residency_stats(self):
+        # Every STAT_EXTRAS key gets a default so the emitted schema is
+        # exactly STAT_KEYS + STAT_EXTRAS regardless of configuration.
         agg = {"stall_s": 0.0, "bytes_moved": 0.0,
                "promotions": 0.0, "demotions": 0.0, "deferred": 0.0,
+               "lo_resident_frac": 1.0, "hi_loads": 0.0, "migrations": 0.0,
                "host_fetches": float(self._host_acct["host_fetches"])}
         for ctl in self.controllers.values():
             agg["bytes_moved"] += ctl.tm.stats["bytes_moved"]
@@ -878,6 +1029,8 @@ class OffloadBackend(_BackendBase):
     """
 
     name = "offload"
+
+    STAT_EXTRAS = ("hits", "misses")
 
     def __init__(self, ocfg: Optional[OffloadConfig] = None):
         super().__init__()
@@ -932,6 +1085,22 @@ class OffloadBackend(_BackendBase):
         self._acct["stall_s"] += stall
         self._acct["bytes_moved"] += miss_bytes + prefetched_bytes
         return stall
+
+    def _tier_counts(self, cleaned):
+        # Computes dense: every active cell streams full-precision rows.
+        act = sum(int((c > 0).sum()) for c in cleaned.values())
+        cells = sum(int(c.size) for c in cleaned.values())
+        return act, 0, 0, cells
+
+    def residency_mix(self) -> Dict[str, int]:
+        hi = sum(len(lru) for lru in self.lru.values())
+        E = self.cfg.moe.num_experts if self.cfg is not None and \
+            self.cfg.moe is not None else 0
+        total = self.n_moe_layers * E
+        return {"hi": hi, "lo": 0, "host": max(0, total - hi)}
+
+    def obs_meta(self) -> Dict[str, int]:
+        return {"lo_bytes": 0, "hi_bytes": self.expert_bytes}
 
     def device_bytes(self) -> int:
         """Device-resident cache footprint under the offload budget."""

@@ -95,6 +95,24 @@ from repro.serving.spec import (_gather_paged_lanes, _restore_paged_lanes,
 from repro.serving.scheduler import (Scheduler, SchedulerConfig,
                                      SlotSnapshot, TieredQueue)
 
+#: Engine-level keys ``InferenceEngine.stats()`` adds on top of the
+#: backend's ``STAT_KEYS`` + per-class ``STAT_EXTRAS`` (plus the
+#: speculative decoder's live overwrites of schema keys). Pinned here so
+#: the stats schema is a checked contract (tests/test_obs.py), not an
+#: accretion: a new engine gauge must be added to this tuple or the
+#: contract test fails.
+ENGINE_STAT_KEYS = (
+    "steps", "prefills", "admitted", "finished", "prefill_tokens",
+    "prefix_hit_tokens", "kv_cow_copies", "preemptions", "resumes",
+    "shed_requests", "downgraded", "chunk_prefills",
+    "prefill_compiles", "kv_blocks_in_use", "kv_bytes_in_use",
+    "prefix_trie_nodes", "spec_row_rounds")
+
+#: Keys ``load_snapshot()`` returns — the shed policy's input schema,
+#: pinned for the same reason.
+LOAD_SNAPSHOT_KEYS = ("queue_depth", "tpot_ema_s", "est_wait_s",
+                      "budget_headroom_frac", "residency_ready_frac")
+
 
 # Module-level jitted entry points with the (frozen, hashable) ArchConfig as
 # a static argument: the XLA compile cache is keyed on the function identity,
@@ -290,6 +308,12 @@ class RequestHandle:
         self._chunk_pos = 0              # prompt tokens prefilled so far
         self.lease: Optional[KVLease] = None   # paged-mode KV block lease
         self.prefix_hit_tokens: int = 0  # prompt tokens served from the trie
+        # Modeled stall seconds of forwards this request was RESIDENT for
+        # (prefill + decode + spec rounds): host-tier demand fetches and
+        # offload misses attributed to the requests they actually delayed.
+        # Exposure, not an exclusive share — concurrent residents each
+        # record the full stall their step suffered.
+        self.stall_exposure_s: float = 0.0
         # Per-request routing telemetry: MoE position → (nsb, E) int64
         # router selections attributed to THIS request's row (prompt tokens
         # at prefill + one per decode step). Populated at admission.
@@ -312,7 +336,7 @@ class InferenceEngine:
 
     def __init__(self, cfg: ArchConfig, params: Dict,
                  backend: ResidencyBackend,
-                 ecfg: Optional[EngineConfig] = None, dist=None):
+                 ecfg: Optional[EngineConfig] = None, dist=None, obs=None):
         if cfg.is_encoder_decoder:
             raise NotImplementedError(
                 "InferenceEngine serves decoder-only stacks; encoder-decoder "
@@ -377,6 +401,25 @@ class InferenceEngine:
         else:
             kv_bytes = 0
 
+        # ---- observability (repro.obs) ---------------------------------
+        # The flight recorder's clock is rebound to the ENGINE clock, so
+        # virtual-clock replays (``replay(realtime=False)``) stamp events
+        # deterministically and traces compare byte-identical in CI. With
+        # ``obs=None`` (default) every instrumentation site below is a
+        # single pointer check — the decode hot path is untouched.
+        self.obs = obs
+        self.tracer = obs.tracer if obs is not None else None
+        self.metrics = obs.metrics if obs is not None else None
+        self._sample_every = max(1, obs.cfg.sample_every) \
+            if obs is not None else 1
+        self._obs_prev = (0.0, 0.0, 0)   # dispatch-gauge snapshot per step
+        if self.tracer is not None:
+            self.tracer.clock = self._now
+        if obs is not None:
+            attach = getattr(backend, "attach_obs", None)
+            if attach is not None:
+                attach(self.tracer, self.metrics)
+
         self.banks = backend.materialize_banks(cfg, params, kv_bytes,
                                                budget=self.budget)
         # MoE dispatch layout + per-row capacity normalization, resolved
@@ -389,6 +432,17 @@ class InferenceEngine:
         if self.moe_dispatch not in ("padded", "ragged"):
             raise ValueError(f"moe_dispatch={self.moe_dispatch!r}; "
                              f"one of padded|ragged")
+        if self.tracer is not None:
+            # Trace metadata the offline cost model (repro.obs.costmodel)
+            # replays against: dispatch mode, router shape, byte prices.
+            self.tracer.meta.update(
+                moe_dispatch=self.moe_dispatch,
+                num_experts=cfg.moe.num_experts if cfg.is_moe else 0,
+                top_k=cfg.moe.top_k if cfg.is_moe else 1,
+                lo_bytes=0, hi_bytes=0, backend=backend.name)
+            meta_fn = getattr(backend, "obs_meta", None)
+            if meta_fn is not None:
+                self.tracer.meta.update(meta_fn())
         norm = self.ecfg.row_capacity_norm and cfg.is_moe
         self._row_cap_decode = moe_capacity(
             1, cfg.moe, self.ecfg.capacity_factor) if norm else None
@@ -656,14 +710,23 @@ class InferenceEngine:
         handle.submit_s = self._now()
         handle.enqueue_s = handle.submit_s
         handle.stall_at_submit = self._stall_clock
+        if self.tracer is not None:
+            self.tracer.instant("submit", cat="sched", rid=handle.id,
+                                qos=qos, prompt=plen)
         action = self.sched.admit_action(qos, self.load_snapshot())
         if action == "shed":
             handle.state = RequestState.SHED
             self.counters["shed_requests"] += 1
+            if self.tracer is not None:
+                self.tracer.instant("shed", cat="sched", rid=handle.id,
+                                    qos=qos, reason="overload")
             return handle
         if action == "downgrade" and handle.exec_qos != "batch":
             handle.exec_qos = "batch"
             self.counters["downgraded"] += 1
+            if self.tracer is not None:
+                self.tracer.instant("downgrade", cat="sched", rid=handle.id,
+                                    qos=qos)
         self.queue.append(handle)
         return handle
 
@@ -765,6 +828,9 @@ class InferenceEngine:
         for h in self.queue.prune(expired):
             h.state = RequestState.SHED
             self.counters["shed_requests"] += 1
+            if self.tracer is not None:
+                self.tracer.instant("shed", cat="sched", rid=h.id,
+                                    qos=h.qos, reason="deadline")
 
     # ------------------------------------------------------------------
     def _admit(self, finished: List[RequestHandle]) -> None:
@@ -1037,6 +1103,10 @@ class InferenceEngine:
         self._stall_clock += stall
         for r, handle in enumerate(group):
             slot = int(slots_arr[r])
+            handle.stall_exposure_s += stall
+            if self.tracer is not None:
+                self.tracer.instant("admit", cat="sched", rid=handle.id,
+                                    slot=slot, qos=handle.exec_qos)
             tok = int(amax[r]) if r not in samp else \
                 handle.sampler.next_token(samp[r], 0)
             handle.tokens.append(tok)
@@ -1110,6 +1180,9 @@ class InferenceEngine:
         # dispatch and every router count — vacancy is invisible to hotness
         # and residency accounting.
         self.counters["finished"] += 1
+        if self.tracer is not None:
+            self.tracer.instant("finish", cat="sched", rid=handle.id,
+                                tokens=len(handle.tokens))
         finished.append(handle)
 
     # ------------------------------------------------------------------
@@ -1191,6 +1264,9 @@ class InferenceEngine:
         handle._snapshot = snap
         handle.preempts += 1
         self.counters["preemptions"] += 1
+        if self.tracer is not None:
+            self.tracer.instant("preempt", cat="sched", rid=handle.id,
+                                slot=slot, pos=pos)
         self.queue.appendleft(handle)
 
     def _maybe_preempt(self) -> None:
@@ -1219,6 +1295,9 @@ class InferenceEngine:
         self.pos[slot] = snap.pos
         self.tokens[slot] = handle.tokens[-1]
         self.counters["resumes"] += 1
+        if self.tracer is not None:
+            self.tracer.instant("resume", cat="sched", rid=handle.id,
+                                slot=slot, pos=snap.pos)
 
     def _scatter_snapshot_rows(self, rows: Dict[str, np.ndarray],
                                slot: int) -> None:
@@ -1429,6 +1508,8 @@ class InferenceEngine:
         stall = self.backend.observe(counts_np, dt, prefill=True,
                                      row_valid=row_valid)
         self._stall_clock += stall
+        for _, h in group:
+            h.stall_exposure_s += stall
         amax = np.asarray(jnp.argmax(logits, -1), np.int32)
         samp = self._gather_sampling_rows(
             logits, [r for r, (i, h) in enumerate(group)
@@ -1509,7 +1590,57 @@ class InferenceEngine:
                 self._decode_one(rows, finished, lo=(kind == "lo"),
                                  guard_ssm=guard)
         self.backend.tick()
+        if self.obs is not None:
+            self._step_obs()
         return finished
+
+    def _step_obs(self) -> None:
+        """Step-boundary observability: one ``step`` trace instant with the
+        per-step gauges, plus the metrics sampling cadence. Every value is
+        count-derived or modeled (never a wall-clock duration), so
+        virtual-clock replays trace byte-identically."""
+        a0, p0, l0 = self._obs_prev
+        self._obs_prev = (self._disp_active_sum, self._disp_pad_sum,
+                          self._disp_layers)
+        d_lay = self._disp_layers - l0
+        active = (self._disp_active_sum - a0) / d_lay if d_lay else 0.0
+        pad = (self._disp_pad_sum - p0) / d_lay if d_lay else 0.0
+        mix_fn = getattr(self.backend, "residency_mix", None)
+        mix = mix_fn() if mix_fn is not None else {"hi": 0, "lo": 0,
+                                                   "host": 0}
+        headroom = float(self.budget.headroom_frac())
+        depths = self.queue.depths()
+        running = sum(h is not None for h in self.slots)
+        step = self.counters["steps"]
+        if self.tracer is not None:
+            self.tracer.instant(
+                "step", cat="engine", step=step,
+                active_experts=round(active, 4), pad_ratio=round(pad, 4),
+                hi=mix["hi"], lo=mix["lo"], host=mix["host"],
+                headroom=round(headroom, 6), queued=len(self.queue),
+                running=running)
+        if self.metrics is not None and step % self._sample_every == 0:
+            m = self.metrics
+            m.gauge("engine_active_experts",
+                    "mean experts with routed tokens per layer-step").set(
+                        active)
+            m.gauge("engine_dispatch_pad_ratio",
+                    "padding fraction of the MoE dispatch layout").set(pad)
+            m.gauge("residency_hi_cells").set(mix["hi"])
+            m.gauge("residency_lo_cells").set(mix["lo"])
+            m.gauge("residency_host_cells").set(mix["host"])
+            m.gauge("budget_headroom_frac",
+                    "shared HBM envelope headroom").set(headroom)
+            for q, d in depths.items():
+                m.gauge(f"queue_depth_{q}").set(d)
+            if self._spec is not None:
+                m.gauge("spec_accept_rate").set(
+                    self._spec.accepted_total /
+                    max(1, self._spec.draft_total))
+            m.sample(step=step, active_experts=round(active, 4),
+                     pad_ratio=round(pad, 4), hi=mix["hi"], lo=mix["lo"],
+                     host=mix["host"], headroom=round(headroom, 6),
+                     **{f"queued_{q}": d for q, d in depths.items()})
 
     def _decode_one(self, active, finished: List[RequestHandle],
                     lo: bool = False, guard_ssm: bool = False) -> None:
@@ -1566,6 +1697,9 @@ class InferenceEngine:
         stall = self.backend.observe(counts_np, dt, prefill=False,
                                      row_valid=row_valid)
         self._stall_clock += stall
+        if stall:
+            for _, h in active:
+                h.stall_exposure_s += stall
         latency = dt + stall
         self.decode_times.append(latency)
         self._tpot_sum += latency * len(active)
@@ -1758,16 +1892,19 @@ class InferenceEngine:
             out["active_experts"] = self._disp_active_sum / self._disp_layers
             out["dispatch_pad_ratio"] = self._disp_pad_sum / \
                 self._disp_layers
+        out["spec_row_rounds"] = 0.0
         if self._spec is not None:
             out.update(self._spec.stats())
+        # ENGINE_STAT_KEYS are emitted unconditionally (zeros where N/A) so
+        # the stats schema is configuration-independent.
         if self.pool is not None:
             out["kv_blocks_in_use"] = float(self.pool.blocks_in_use)
             out["kv_bytes_in_use"] = float(self.pool.bytes_in_use)
-            if self.trie is not None:
-                out["prefix_trie_nodes"] = float(self.trie.n_nodes)
         else:
             out["kv_blocks_in_use"] = 0.0
             out["kv_bytes_in_use"] = 0.0
+        out["prefix_trie_nodes"] = float(self.trie.n_nodes) \
+            if self.trie is not None else 0.0
         return out
 
     def device_bytes(self) -> int:

@@ -99,6 +99,7 @@ class HostExpertStore:
         self._staging: List[_PendingLo] = []
         self.stats = {"hi_loads": 0, "hi_bytes_loaded": 0,
                       "lo_staged": 0, "lo_bytes_staged": 0}
+        self.tracer = None   # FlightRecorder, attached by the serving layer
 
     # -- host_hi mapping interface (TransitionManager / EPCoordinator) ----
     def items(self):
@@ -170,6 +171,9 @@ class HostExpertStore:
                                         tuple(arrays)))
         self.stats["lo_staged"] += 1
         self.stats["lo_bytes_staged"] += nbytes
+        if self.tracer is not None:
+            self.tracer.instant("host_stage", cat="host", layer=layer,
+                                experts=1, bytes=nbytes)
         return nbytes
 
     def stage_lo_batch(self, bank: ExpertBankQ, layer: int, experts,
@@ -199,6 +203,9 @@ class HostExpertStore:
                                         tuple(arrays)))
         self.stats["lo_staged"] += int(idx.size)
         self.stats["lo_bytes_staged"] += nbytes
+        if self.tracer is not None:
+            self.tracer.instant("host_stage", cat="host", layer=layer,
+                                experts=int(idx.size), bytes=nbytes)
         return nbytes
 
     def publish_lo(self, wait: bool = False) -> int:
@@ -223,6 +230,8 @@ class HostExpertStore:
             self.lo_resident[p.layer, ex[res]] = True
             published += int(ex.size)
         self._staging = still
+        if published and self.tracer is not None:
+            self.tracer.instant("lo_publish", cat="host", experts=published)
         return published
 
     @property

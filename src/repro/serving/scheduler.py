@@ -218,6 +218,10 @@ class TieredQueue:
             self._tiers[q] = keep
         return out
 
+    def depths(self) -> Dict[str, int]:
+        """Per-QoS-class queue depth snapshot (metrics sampling)."""
+        return {q: len(d) for q, d in self._tiers.items()}
+
     def __len__(self) -> int:
         return sum(len(d) for d in self._tiers.values())
 

@@ -124,7 +124,7 @@ def engine_factory(serving_setup):
 
     cfg, params = serving_setup
 
-    def build(name, max_slots=4, max_len=64, **kw):
+    def build(name, max_slots=4, max_len=64, obs=None, **kw):
         if name in ("static", "dynaexq"):
             kw.setdefault("lo_bits", 4)
         if name == "dynaexq":
@@ -134,6 +134,6 @@ def engine_factory(serving_setup):
         clone = jax.tree_util.tree_map(lambda x: x, params)
         return InferenceEngine(cfg, clone, make_backend(name, **kw),
                                EngineConfig(max_slots=max_slots,
-                                            max_len=max_len))
+                                            max_len=max_len), obs=obs)
 
     return build
