@@ -29,10 +29,10 @@ def main() -> None:
         print(f"{name},{us_per_call:.1f},{derived}")
 
     from benchmarks import (activation_ratio, demotion_curve, ep_scaling,
-                            hierarchy, kernels_bench, kv_reuse, obs_overhead,
-                            prompt_scaling, quality, serving_perf,
-                            serving_sim, slo_serving, spec_decode,
-                            workload_shift)
+                            fault_tolerance, hierarchy, kernels_bench,
+                            kv_reuse, obs_overhead, prompt_scaling, quality,
+                            serving_perf, serving_sim, slo_serving,
+                            spec_decode, workload_shift)
     suites = [
         ("activation_ratio", activation_ratio.run),
         ("workload_shift", workload_shift.run),
@@ -44,6 +44,7 @@ def main() -> None:
         ("kv_reuse", kv_reuse.run),
         ("ep_scaling", ep_scaling.run),
         ("hierarchy", hierarchy.run),
+        ("fault_tolerance", fault_tolerance.run),
         ("spec_decode", spec_decode.run),
         ("obs_overhead", obs_overhead.run),
         ("prompt_scaling", prompt_scaling.run),

@@ -21,6 +21,7 @@ from repro.core.transitions import TransitionManager
 from repro.core.ver import (ExpertBankQ, Residency, build_bank,
                             expert_hi_nbytes, swap_expert_rows,
                             swap_router_cols)
+from repro.fault.inject import TransferFault
 
 
 @dataclasses.dataclass
@@ -68,6 +69,25 @@ class DynaExqController:
             migration_bytes_per_window=cfg.migration_bytes_per_window,
             n_shards=ep_shards, shard_trackers=shard_trackers)
         self._last_update = time.monotonic()
+        # Failure-decay penalty (fault tolerance): a (L, E) multiplier on
+        # folded hotness, halved each time an expert's promotion copy fails
+        # and recovering toward 1 every window — a flapping expert keeps
+        # getting re-candidated but can't livelock the promotion budget.
+        self._fail_penalty = np.ones((L, E))
+        self.fail_decay = 0.5
+        self.fail_recover = 0.5
+        self.tm.fail_cb = self.note_promotion_failure
+
+    def note_promotion_failure(self, layer: int, expert: int) -> None:
+        self._fail_penalty[layer, expert] *= self.fail_decay
+
+    def folded_scores(self) -> np.ndarray:
+        """Fold the hotness EMA and apply (then partially recover) the
+        failure-decay penalty. All policy paths — per-layer ``update()``
+        and the global allocator — must rank on THIS, not the raw fold."""
+        scores = self.hotness.fold() * self._fail_penalty
+        self._fail_penalty += (1.0 - self._fail_penalty) * self.fail_recover
+        return scores
 
     @property
     def bank(self) -> ExpertBankQ:
@@ -89,7 +109,7 @@ class DynaExqController:
     def update(self) -> None:
         """One policy window: fold EMA → per-layer top-n w/ hysteresis →
         enqueue transitions → drain → publish completed."""
-        scores = self.hotness.fold()
+        scores = self.folded_scores()
         L = scores.shape[0]
         for l in range(L):
             current = self.tm.hi_set(l) | self.tm.pending_experts(l)
@@ -152,9 +172,10 @@ class EPCoordinator:
         self.cfg = cfg if cfg is not None else RebalanceConfig()
         self._entries = []   # (controller, moe_params dict, placement (L,E))
         self.stats = {"migrations": 0, "windows": 0, "bytes_moved": 0,
-                      "deferred_migrations": 0}
+                      "deferred_migrations": 0, "aborted_migrations": 0}
         self._last = time.monotonic()
         self.tracer = None   # FlightRecorder, attached by the serving layer
+        self.injector = None  # FaultInjector, attached by the serving layer
 
     def register(self, ctl: DynaExqController, moe_params: Dict) -> None:
         """Track one MoE position: its controller and the live params dict
@@ -249,15 +270,50 @@ class EPCoordinator:
             tm.publish_ready(wait=True)
         if tm.state[l, e] != lo_val or tm.state[l, f] != lo_val:
             return False
+        fault = None
+        if self.injector is not None:
+            fault = self.injector.fire("ep_mig", layer=l, expert=e, peer=f)
+        if fault is not None and fault.kind == "fail":
+            # Abort before any mutation: refund the window bytes so the
+            # budget only prices transfers that landed; retried next window.
+            tm.refund_window(relabel_bytes)
+            self.stats["aborted_migrations"] += 1
+            return False
         li, ei, fi = np.int32(l), np.int32(e), np.int32(f)
         moved = 0
-        for name, qt in bank.lo.items():
-            packed = swap_expert_rows(qt.packed, li, ei, fi)
-            scales = swap_expert_rows(qt.scales, li, ei, fi)
-            bank.lo[name] = dataclasses.replace(qt, packed=packed,
-                                                scales=scales)
-            moved += (packed.nbytes + scales.nbytes) // (packed.shape[0] *
-                                                         packed.shape[1])
+        applied = []
+        try:
+            for i_leaf, (name, qt) in enumerate(list(bank.lo.items())):
+                packed = swap_expert_rows(qt.packed, li, ei, fi)
+                scales = swap_expert_rows(qt.scales, li, ei, fi)
+                bank.lo[name] = dataclasses.replace(qt, packed=packed,
+                                                    scales=scales)
+                applied.append(name)
+                moved += (packed.nbytes + scales.nbytes) // (
+                    packed.shape[0] * packed.shape[1])
+                if fault is not None and i_leaf == 0:
+                    # Injected mid-swap failure: some leaves relabeled,
+                    # the rest (and the compensating router swap) not yet —
+                    # exactly the partial-swap state that must roll back.
+                    raise TransferFault("ep_mig", kind=fault.kind,
+                                        seq=fault.seq)
+        except TransferFault:
+            # Partial-swap abort: a second swap of the same pair restores
+            # the applied leaves bit-exactly. The router column swap only
+            # happens after ALL leaves land, so the forward function stayed
+            # invariant throughout (swap+swap = identity per leaf).
+            for name in applied:
+                qt = bank.lo[name]
+                packed = swap_expert_rows(qt.packed, li, ei, fi)
+                scales = swap_expert_rows(qt.scales, li, ei, fi)
+                bank.lo[name] = dataclasses.replace(qt, packed=packed,
+                                                    scales=scales)
+            tm.refund_window(relabel_bytes)
+            self.stats["aborted_migrations"] += 1
+            if self.tracer is not None:
+                self.tracer.instant("fault_cancel", cat="fault", site="ep_mig",
+                                    layer=l, expert=e, peer=f)
+            return False
         moe_params["router"] = swap_router_cols(moe_params["router"],
                                                 li, ei, fi)
         for name, arr in tm.host_hi.items():

@@ -21,6 +21,7 @@ only ever points at slots whose copies completed.
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import Dict, List, Optional, Sequence
 
@@ -31,6 +32,8 @@ import numpy as np
 from repro.core.budget import BudgetTracker
 from repro.core.pools import ShardedSlotPool
 from repro.core.ver import ExpertBankQ, Residency, write_hi_slot
+from repro.fault.inject import TransferFault
+from repro.fault.retry import RetryExhausted, RetryPolicy, retry_call
 
 
 @dataclasses.dataclass
@@ -48,6 +51,13 @@ class PendingPromotion:
     # clock issue timestamp (publish latency = publish ts − issue ts).
     seq: int = 0
     issue_ts: float = 0.0
+    # Fault state: an injected DMA stall keeps the copy "in flight" until
+    # the clock passes ``stall_until``; a corrupt payload is caught by the
+    # publish-time integrity check and never published; ``cancelled`` makes
+    # the refund idempotent no matter which path cancels first.
+    stall_until: float = 0.0
+    corrupt: bool = False
+    cancelled: bool = False
 
 
 class TransitionManager:
@@ -96,12 +106,23 @@ class TransitionManager:
         # promotions left.
         self._window_used = 0
         self.stats = {"promoted": 0, "demoted": 0, "deferred": 0,
-                      "bytes_moved": 0}
+                      "bytes_moved": 0, "retries": 0, "fault_cancels": 0}
         # Observability (attached by the backend, None by default): every
         # hook below guards on ``tracer is not None`` — with observability
         # off the pipeline allocates nothing extra.
         self.tracer = None                  # repro.obs.trace.FlightRecorder
         self.publish_hist = None            # metrics Histogram (publish lat)
+        # Fault tolerance (same pointer-check discipline as obs). ``clock``
+        # is rebound to the engine clock so promotion ages — the watchdog's
+        # input — ride the virtual clock under replay.
+        self.injector = None                # repro.fault.inject.FaultInjector
+        self.retry = RetryPolicy()
+        self.clock = time.monotonic
+        self.fail_cb = None                 # controller failure-decay hook
+        # Sum of reservations issued but neither published nor cancelled.
+        # ``check_invariants`` pins this to the open promotion spans —
+        # the exactly-once-refund audit.
+        self.inflight_bytes = 0
 
     # -- shard plumbing ---------------------------------------------------
     def shard_of_expert(self, expert: int) -> int:
@@ -169,37 +190,92 @@ class TransitionManager:
                                         layer=l, expert=e)
                 continue
             slot = self.pools[l].alloc(e, shard)
-            self._issue_copy(l, e, slot)
-            self._window_used += self.hi_bytes
+            if self._issue_copy(l, e, slot):
+                self._window_used += self.hi_bytes
         self.update_q = deferred
 
-    def _issue_copy(self, layer: int, expert: int, slot: int) -> None:
+    def _issue_copy(self, layer: int, expert: int, slot: int) -> bool:
         """Async hi-weight copy into the (unpublished) pool slot. When the
         host side is a ``HostExpertStore`` (duck-typed via ``ensure_hi``),
         the expert's host rows are materialized first — on a streaming cold
-        start that is the lazy read from the checkpoint shard."""
-        ensure = getattr(self.host_hi, "ensure_hi", None)
-        if ensure is not None:
-            ensure(layer, expert)
-        new_hi = {}
-        for name, leaf in self.bank.hi.items():
-            w = jnp.asarray(self.host_hi[name][layer, expert]).astype(
-                leaf.dtype)
-            new_hi[name] = write_hi_slot(leaf, jnp.int32(layer),
-                                         jnp.int32(slot), w)
+        start that is the lazy read from the checkpoint shard.
+
+        Fault path: injected ``promo_copy`` failures are retried under
+        ``self.retry``; if the copy (or the host-side load underneath it)
+        exhausts its retries, the admission is aborted — slot freed,
+        reservation refunded, expert back to RESIDENT_LO, controller
+        notified via ``fail_cb`` — and the expert keeps serving lo.
+        Returns True iff the copy was issued."""
+        fault = [None]
+
+        def attempt():
+            if self.injector is not None:
+                f = self.injector.fire("promo_copy", layer=layer,
+                                       expert=expert)
+                if f is not None:
+                    if f.kind == "fail":
+                        raise TransferFault("promo_copy", seq=f.seq)
+                    fault[0] = f        # stall / corrupt ride the copy
+            ensure = getattr(self.host_hi, "ensure_hi", None)
+            if ensure is not None:
+                ensure(layer, expert)
+            new_hi = {}
+            for name, leaf in self.bank.hi.items():
+                w = jnp.asarray(self.host_hi[name][layer, expert]).astype(
+                    leaf.dtype)
+                new_hi[name] = write_hi_slot(leaf, jnp.int32(layer),
+                                             jnp.int32(slot), w)
+            return new_hi
+
+        seed = self.injector.seed if self.injector is not None else 0
+        try:
+            new_hi, retries, _ = retry_call(
+                attempt, self.retry, seed=seed, key=(layer << 16) | expert,
+                site="promo_copy", tracer=self.tracer)
+        except (RetryExhausted, TransferFault) as e:
+            self._abort_issue(layer, expert, slot, e)
+            return False
+        if retries:
+            self.stats["retries"] += retries
         self.bank.hi = new_hi  # dispatched, not yet waited on
         p = PendingPromotion(layer, expert, slot, self.hi_bytes,
                              arrays=tuple(new_hi.values()))
+        p.issue_ts = self.clock()
+        f = fault[0]
+        if f is not None:
+            if f.kind == "stall":
+                p.stall_until = p.issue_ts + f.stall_s
+            elif f.kind == "corrupt":
+                p.corrupt = True
         if self.tracer is not None:
             # Lifecycle span: opens at copy issue, closes at publish (or
             # cancellation) — per-phase timestamps on the engine clock.
             p.seq = self.tracer.next_id()
-            p.issue_ts = self.tracer.clock()
             self.tracer.async_begin("promotion", p.seq, cat="residency",
                                     layer=layer, expert=expert, slot=slot,
                                     bytes=self.hi_bytes)
         self._pending.append(p)
+        self.inflight_bytes += self.hi_bytes
         self.stats["bytes_moved"] += self.hi_bytes
+        return True
+
+    def _abort_issue(self, layer: int, expert: int, slot: int,
+                     err: Exception) -> None:
+        """Unwind an admission whose copy never issued: the slot and the
+        reservation go back, the expert stays lo, and the controller's
+        failure-decay penalty keeps a flapping expert from livelocking the
+        promotion budget."""
+        self.pools[layer].free(slot)
+        self._tracker_for(self.pools[layer].shard_of(slot)).release(
+            self.hi_bytes)
+        self.state[layer, expert] = Residency.RESIDENT_LO.value
+        self.stats["fault_cancels"] += 1
+        if self.fail_cb is not None:
+            self.fail_cb(layer, expert)
+        if self.tracer is not None:
+            self.tracer.instant("fault_cancel", cat="fault", layer=layer,
+                                expert=expert, site="promo_copy",
+                                reason=type(err).__name__)
 
     def _demote(self, layer: int, expert: int) -> None:
         """Publish-then-reclaim: redirect the handle to lo, then free."""
@@ -228,6 +304,11 @@ class TransitionManager:
         still = []
         published = 0
         for p in self._pending:
+            if not wait and p.stall_until > self.clock():
+                # Injected DMA stall: the copy is "still on the wire" until
+                # the deadline passes (the watchdog may cancel it first).
+                still.append(p)
+                continue
             ready = wait or all(_is_ready(a) for a in p.arrays)
             if ready and wait:
                 for a in p.arrays:
@@ -236,9 +317,16 @@ class TransitionManager:
                 still.append(p)
                 continue
             if self.state[p.layer, p.expert] == Residency.PROMOTING.value:
+                if p.corrupt:
+                    # Modeled publish-time integrity check: the copy landed
+                    # but its payload is bad — cancel instead of publishing,
+                    # so the forward never sees the corrupt version.
+                    self._cancel_pending(p, "corrupt")
+                    continue
                 self.slot_map_h[p.layer, p.expert] = p.slot
                 self.slot_owner_h[p.layer, p.slot] = p.expert
                 self.state[p.layer, p.expert] = Residency.RESIDENT_HI.value
+                self.inflight_bytes -= p.nbytes
                 published += 1
                 self.stats["promoted"] += 1
                 if self.tracer is not None:
@@ -253,16 +341,64 @@ class TransitionManager:
                             self.tracer.clock() - p.issue_ts)
             else:
                 # Demoted while promoting — reclaim without publishing.
-                self.pools[p.layer].free(p.slot)
-                self._tracker_for(self.pools[p.layer].shard_of(p.slot)).release(
-                    p.nbytes)
-                self.state[p.layer, p.expert] = Residency.RESIDENT_LO.value
-                if self.tracer is not None:
-                    self.tracer.async_end("promotion", p.seq,
-                                          cat="residency", published=0)
+                self._cancel_pending(p, "demoted", fault=False)
         self._pending = still
         self._flush_maps()
         return published
+
+    def _cancel_pending(self, p: PendingPromotion, reason: str,
+                        fault: bool = True) -> None:
+        """Cancel an in-flight promotion through the async-span cancel path.
+        Idempotent: the slot frees and the reservation refunds exactly once
+        no matter how many paths (publish, watchdog, demote) race to cancel."""
+        if p.cancelled:
+            return
+        p.cancelled = True
+        self.pools[p.layer].free(p.slot)
+        self._tracker_for(self.pools[p.layer].shard_of(p.slot)).release(
+            p.nbytes)
+        self.state[p.layer, p.expert] = Residency.RESIDENT_LO.value
+        self.inflight_bytes -= p.nbytes
+        if fault:
+            self.stats["fault_cancels"] += 1
+            if self.fail_cb is not None:
+                self.fail_cb(p.layer, p.expert)
+        if self.tracer is not None:
+            self.tracer.async_end("promotion", p.seq, cat="residency",
+                                  published=0, reason=reason)
+
+    def cancel_stuck(self, now: float, deadline_s: float) -> int:
+        """Watchdog hook: cancel promotions in flight longer than
+        ``deadline_s`` (engine-clock age since issue). The expert keeps
+        serving lo and the controller re-candidates it next window."""
+        n = 0
+        still = []
+        for p in self._pending:
+            age = now - p.issue_ts
+            if age > deadline_s:
+                if self.tracer is not None:
+                    self.tracer.instant("promo_timeout", cat="fault",
+                                        layer=p.layer, expert=p.expert,
+                                        age_s=round(age, 6))
+                self._cancel_pending(p, "timeout")
+                n += 1
+            else:
+                still.append(p)
+        self._pending = still
+        return n
+
+    def refund_window(self, nbytes: int) -> None:
+        """Return bytes charged via ``try_consume_window`` for a transfer
+        that was subsequently aborted (e.g. an EP migration that rolled
+        back) — the window budget should only price transfers that landed."""
+        if self.rate_limit:
+            self._window_used = max(0, self._window_used - nbytes)
+
+    def pending_ages(self, now: float) -> List[tuple]:
+        """(layer, expert, age_s) for every in-flight promotion — the
+        stall-diagnostic snapshot's view of the transfer plane."""
+        return [(p.layer, p.expert, round(now - p.issue_ts, 6))
+                for p in self._pending]
 
     def _flush_maps(self) -> None:
         """Push the host-side handle table to the device arrays (tiny)."""
@@ -297,6 +433,13 @@ class TransitionManager:
         owners = (self.slot_owner_h >= 0).sum()
         assert owners == n_used, (owners, n_used)
         in_flight = len(self._pending)
+        # Exactly-once refund audit: bytes reserved-but-unpublished must
+        # equal the sum of OPEN promotion spans — a double refund (or a
+        # leaked reservation) after an injected fault breaks this first.
+        open_bytes = sum(p.nbytes for p in self._pending)
+        assert self.inflight_bytes == open_bytes, \
+            (self.inflight_bytes, open_bytes)
+        assert not any(p.cancelled for p in self._pending)
         for p in self._pending:
             used_shard[self.pools[p.layer].shard_of(p.slot)] += 1
         if self.shard_trackers:

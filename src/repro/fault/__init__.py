@@ -1,0 +1,32 @@
+"""Deterministic fault injection + fault tolerance for the transfer plane.
+
+Every transfer/IO boundary in the residency ladder — promotion H2D copies,
+host-tier hi/lo loads, lo staging, streaming shard reads, EP migrations,
+demand host fetches — can be made to fail, stall, or corrupt on a seeded,
+counter-based schedule (`FaultPlan` / `FaultInjector`).  The machinery that
+survives those faults lives next to it: a shared exponential-backoff retry
+policy with Philox jitter (`RetryPolicy` / `retry_call`) and an engine-step
+watchdog (`Watchdog`) that cancels promotions stuck past a deadline and
+requeues requests that stopped making progress.
+
+Zero overhead when disabled: every injection point is a single
+``injector is None`` pointer check, the same pattern the obs subsystem uses
+for tracers.
+"""
+from repro.fault.inject import (Fault, FaultInjector, FaultPlan, FaultRule,
+                                TransferFault)
+from repro.fault.retry import RetryExhausted, RetryPolicy, retry_call
+from repro.fault.watchdog import Watchdog, WatchdogConfig
+
+__all__ = [
+    "Fault",
+    "FaultInjector",
+    "FaultPlan",
+    "FaultRule",
+    "RetryExhausted",
+    "RetryPolicy",
+    "TransferFault",
+    "Watchdog",
+    "WatchdogConfig",
+    "retry_call",
+]

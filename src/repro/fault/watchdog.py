@@ -1,0 +1,68 @@
+"""Engine-step-driven watchdog for stuck transfers and stuck requests.
+
+`InferenceEngine.step()` calls ``scan(engine)`` once per step (only when a
+deadline is configured — the disabled path is a ``None`` pointer check).
+Two sweeps:
+
+* **Promotions** stuck in flight past ``promo_deadline_s`` (engine-clock
+  age since issue) are cancelled through the backend's
+  ``cancel_stuck_promotions`` hook — the slot frees, the reservation
+  refunds exactly once, and the expert keeps serving lo.  Emits a
+  ``promo_timeout`` event per cancel.
+* **Requests** RUNNING but with no token appended for ``no_progress_s``
+  are preempted back to the front of their QoS tier (bit-exact snapshot
+  resume — the request is requeued, not failed).  Emits ``watchdog_cancel``.
+
+All ages are measured on the engine clock, so virtual-clock replays see the
+same watchdog decisions as realtime runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class WatchdogConfig:
+    promo_deadline_s: Optional[float] = None
+    no_progress_s: Optional[float] = None
+
+
+class Watchdog:
+    def __init__(self, cfg: WatchdogConfig, tracer=None):
+        self.cfg = cfg
+        self.tracer = tracer
+        self.stats = {"promo_timeouts": 0, "request_requeues": 0}
+
+    def scan(self, engine) -> int:
+        """One sweep over in-flight promotions and RUNNING requests.
+        Returns the number of cancels/requeues performed."""
+        now = engine._now()
+        n = 0
+        if self.cfg.promo_deadline_s is not None:
+            cancel = getattr(engine.backend, "cancel_stuck_promotions", None)
+            if cancel is not None:
+                k = cancel(now, self.cfg.promo_deadline_s)
+                self.stats["promo_timeouts"] += k
+                n += k
+        if self.cfg.no_progress_s is not None:
+            for h in list(engine.slots):
+                # Only requests that produced at least one token carry a
+                # progress stamp; younger ones are still covered by the
+                # admission-stall detector.
+                if h is None or not h.last_progress_s:
+                    continue
+                if h.state.value != "running":
+                    continue
+                age = now - h.last_progress_s
+                if age <= self.cfg.no_progress_s:
+                    continue
+                engine.preempt(h)
+                h.last_progress_s = now
+                engine.counters["watchdog_cancels"] += 1
+                self.stats["request_requeues"] += 1
+                n += 1
+                if self.tracer is not None:
+                    self.tracer.instant("watchdog_cancel", cat="fault",
+                                        rid=h.id, age_s=round(age, 6))
+        return n

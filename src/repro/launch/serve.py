@@ -37,13 +37,23 @@ def build_backend(args):
             sensitivity=args.sensitivity,
             lo_resident_total=args.lo_resident_total,
             hotness_path=args.hotness_path,
-            stream=args.stream_from)
+            stream=args.stream_from,
+            fault=_fault_plan(args))
     if args.backend == "static":
         return make_backend("static", lo_bits=args.lo_bits)
     if args.backend == "offload":
         return make_backend("offload", ocfg=OffloadConfig(
             cache_experts_per_layer=args.n_hi * 2))
     return make_backend(args.backend)
+
+
+def _fault_plan(args):
+    """``--fault-plan`` (JSON string or path) → FaultPlan, with
+    ``--fault-seed`` overriding the plan's seed when given."""
+    if not getattr(args, "fault_plan", None):
+        return None
+    from repro.fault import FaultPlan
+    return FaultPlan.parse(args.fault_plan, seed=args.fault_seed)
 
 
 def main():
@@ -142,6 +152,17 @@ def main():
     ap.add_argument("--no-obs", action="store_true",
                     help="disable the observability layer entirely (no "
                          "tracer, no metrics, no shutdown summary)")
+    ap.add_argument("--fault-plan", default=None,
+                    help="fault-injection plan for chaos runs: a JSON "
+                         "string or a path to one, e.g. "
+                         '\'{"seed": 7, "rules": [{"site": "host_lo", '
+                         '"prob": 0.1}]}\' (dynaexq backend only)')
+    ap.add_argument("--fault-seed", type=int, default=None,
+                    help="override the fault plan's Philox seed")
+    ap.add_argument("--promo-deadline-s", type=float, default=None,
+                    help="watchdog: cancel promotions still unpublished "
+                         "after this many seconds (refund + keep serving "
+                         "lo)")
     ap.add_argument("--ep-shards", type=int, default=1,
                     help="expert-parallel serving over this many devices: "
                          "tokens and experts shard over the model axis, MoE "
@@ -194,6 +215,7 @@ def main():
                      spec_k=spec_k,
                      moe_dispatch=args.moe_dispatch,
                      row_capacity_norm=args.row_capacity,
+                     promo_deadline_s=args.promo_deadline_s,
                      scheduler=SchedulerConfig(
                          qos_default=args.qos_default,
                          shed_policy=args.shed_policy,

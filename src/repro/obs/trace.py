@@ -48,6 +48,17 @@ name                      cat         args
 ``host_stage``/           host        layer(s), n, bytes
 ``lo_publish``
 ``spec_round``            spec        rows, drafted, accepted
+``fault_injected``        fault       site, kind, seq (injector fired)
+``retry``                 fault       site, attempt, backoff_s — includes
+                                      host demand-fetch re-reads
+``fault_cancel``          fault       layer, expert, reason (promotion or
+                                      migration aborted after retries)
+``promo_timeout``         fault       layer, expert, age_s (watchdog
+                                      cancelled a stuck promotion)
+``watchdog_cancel``       fault       rid, idle_s (no-progress request
+                                      preempted and requeued)
+``quarantine``            fault       layer, n, experts served from host
+                                      until their lo rows re-stage
 ========================  ==========  =========================================
 """
 from __future__ import annotations

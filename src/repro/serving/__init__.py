@@ -2,8 +2,9 @@ from repro.serving.backends import (BACKENDS, DynaExqBackend, Fp16Backend,
                                     LRUSet, OffloadBackend, OffloadConfig,
                                     ResidencyBackend, STAT_KEYS,
                                     StaticPTQBackend, make_backend)
-from repro.serving.engine import (EngineConfig, InferenceEngine,
-                                  RequestHandle, RequestState)
+from repro.serving.engine import (EngineConfig, EngineStallError,
+                                  InferenceEngine, RequestHandle,
+                                  RequestState)
 from repro.serving.hoststore import FetchModel, HostExpertStore
 from repro.serving.kvpool import KVBlockPool, KVLease, TRASH_BLOCK
 from repro.serving.prefix import PrefixTrie
@@ -20,7 +21,8 @@ from repro.serving.streaming import (ShardSource, hotness_stage_order,
                                      save_expert_shards)
 
 __all__ = [
-    "BACKENDS", "DynaExqBackend", "EngineConfig", "FetchModel",
+    "BACKENDS", "DynaExqBackend", "EngineConfig", "EngineStallError",
+    "FetchModel",
     "Fp16Backend", "GREEDY", "HostExpertStore",
     "InferenceEngine", "KVBlockPool", "KVLease", "LRUSet", "OffloadBackend",
     "OffloadConfig", "PrefixTrie", "QOS_CLASSES", "Request", "RequestHandle",

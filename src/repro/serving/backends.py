@@ -52,6 +52,8 @@ from repro.core.budget import BudgetTracker
 from repro.core.controller import EPCoordinator, RebalanceConfig
 from repro.core.hotness import mask_row_counts
 from repro.core.ver import build_bank_empty
+from repro.fault.inject import FaultInjector, FaultPlan
+from repro.fault.retry import RetryExhausted, RetryPolicy
 from repro.models.config import ArchConfig
 from repro.quant.sensitivity import load_sensitivity, normalize
 from repro.serving.hoststore import FetchModel, HostExpertStore
@@ -75,12 +77,16 @@ GiB = 1 << 30
 #: cache misses and DynaExq's routed-but-host-resident experts land in the
 #: same column, so "how often did the critical path touch host memory" is
 #: directly comparable across residency strategies.
+#: The fault-tolerance meters (``retries``: transfer attempts retried under
+#: the shared backoff policy; ``fault_cancels``: promotions/migrations
+#: cancelled by a fault, timeout, or publish-time integrity check) join the
+#: uniform schema: zeros everywhere the transfer plane is fault-free.
 STAT_KEYS = ("ttft_s", "tpot_s", "stall_s", "bytes_moved",
              "promotions", "demotions",
              "accept_rate", "draft_tokens", "verified_tokens", "spec_rounds",
              "active_experts", "dispatch_pad_ratio",
              "preemptions", "resumes", "shed_requests", "downgraded",
-             "host_fetches")
+             "host_fetches", "retries", "fault_cancels")
 
 #: The schema contract: ``backend.stats()`` returns EXACTLY
 #: ``STAT_KEYS + type(backend).STAT_EXTRAS`` — extras are declared per
@@ -418,7 +424,7 @@ class DynaExqBackend(_BackendBase):
     name = "dynaexq"
 
     STAT_EXTRAS = ("deferred", "lo_resident_frac", "hi_loads",
-                   "residency_ready_frac", "migrations")
+                   "residency_ready_frac", "migrations", "quarantined")
 
     def __init__(self, lo_bits: int = 4, hi_bits: int = 16,
                  group_size: int = 64,
@@ -435,7 +441,9 @@ class DynaExqBackend(_BackendBase):
                  fetch: Optional[FetchModel] = None,
                  hotness_path: Optional[str] = None,
                  stream=None,
-                 stream_experts_per_tick: int = 16):
+                 stream_experts_per_tick: int = 16,
+                 fault=None,
+                 retry: Optional[RetryPolicy] = None):
         super().__init__()
         if ep_shards < 1:
             raise ValueError("ep_shards must be >= 1")
@@ -492,6 +500,18 @@ class DynaExqBackend(_BackendBase):
                          is not None else ControllerConfig().update_interval_s)
         self._host_acct = {"host_fetches": 0, "host_fetch_bytes": 0,
                            "hotness_restored": 0}
+        # -- fault tolerance ------------------------------------------------
+        # ``fault``: a FaultPlan, a prebuilt FaultInjector, or a JSON
+        # string/path (the launcher's --fault-plan). None = zero overhead:
+        # every site is a single pointer check.
+        if fault is None or isinstance(fault, FaultInjector):
+            self.injector = fault
+        elif isinstance(fault, FaultPlan):
+            self.injector = fault.injector()
+        else:
+            self.injector = FaultPlan.parse(fault).injector()
+        self.retry = retry if retry is not None else RetryPolicy()
+        self._fault_acct = {"retries": 0}
 
     # -- materialization ---------------------------------------------------
     def _derive_n_hi(self, params, kv_bytes, shapes, L, E, hi_b, lo_b):
@@ -605,8 +625,78 @@ class DynaExqBackend(_BackendBase):
             params["blocks"][pos]["moe"]["experts"] = None
         if not self._serving_ready:
             self._build_pump_queue()
+        self._propagate_faults()
         self._propagate_obs()   # components built after attach_obs
         return self.banks
+
+    # -- fault tolerance ---------------------------------------------------
+    def _propagate_faults(self) -> None:
+        """Push the injector + retry policy into every transfer-plane
+        component (transition managers, host stores, the shard source, the
+        EP coordinator)."""
+        for ctl in self.controllers.values():
+            ctl.tm.injector = self.injector
+            ctl.tm.retry = self.retry
+        for store in self.stores.values():
+            store.injector = self.injector
+            store.retry = self.retry
+        if self.coordinator is not None:
+            self.coordinator.injector = self.injector
+        if self.stream is not None and hasattr(self.stream, "lo_layer"):
+            self.stream.injector = self.injector
+
+    def bind_clock(self, clock) -> None:
+        """Rebind the transfer plane to the engine clock (virtual under
+        replay) — promotion issue timestamps feed the watchdog."""
+        for ctl in self.controllers.values():
+            ctl.tm.clock = clock
+
+    def cancel_stuck_promotions(self, now: float, deadline_s: float) -> int:
+        """Watchdog hook: cancel promotions in flight past the deadline
+        (slot freed, reservation refunded, expert keeps serving lo)."""
+        n = 0
+        for ctl in self.controllers.values():
+            n += ctl.tm.cancel_stuck(now, deadline_s)
+        return n
+
+    def pending_promotions(self, now: float) -> list:
+        """(pos, layer, expert, age_s) for every in-flight promotion —
+        the stall-diagnostic snapshot."""
+        out = []
+        for pos, ctl in self.controllers.items():
+            out += [(pos, l, e, a) for l, e, a in ctl.tm.pending_ages(now)]
+        return out
+
+    def degraded_cells(self) -> Dict[str, np.ndarray]:
+        """pos → (L, E) quarantine mask, positions with none omitted —
+        the engine flags requests routed through these as degraded."""
+        return {pos: s.quarantined for pos, s in self.stores.items()
+                if s.quarantined.any()}
+
+    def _heal_quarantined(self, per_tick: int = 2) -> None:
+        """Opportunistically re-stage quarantined cells (a bounded number
+        per window); a staging that finally lands clears the flag at
+        publish. Repeated failures just keep the cell quarantined."""
+        healed = 0
+        for pos, store in self.stores.items():
+            if not store.quarantined.any():
+                continue
+            for l, e in zip(*np.nonzero(store.quarantined)):
+                if healed >= per_tick:
+                    return
+                resident = True
+                if self.lo_resident_total is not None:
+                    resident = self._lo_quota_left > 0
+                    if resident:
+                        self._lo_quota_left -= 1
+                try:
+                    store.stage_lo(self.banks[pos], int(l), int(e),
+                                   resident=resident)
+                except RetryExhausted:
+                    if resident and self.lo_resident_total is not None:
+                        self._lo_quota_left += 1
+                    continue
+                healed += 1
 
     # -- observability -----------------------------------------------------
     def attach_obs(self, tracer=None, metrics=None) -> None:
@@ -628,6 +718,13 @@ class DynaExqBackend(_BackendBase):
             self.coordinator.tracer = self.tracer
         for store in self.stores.values():
             store.tracer = self.tracer
+        if self.injector is not None:
+            self.injector.tracer = self.tracer
+        if self.tracer is not None:
+            # Promotion issue timestamps and publish latencies on ONE clock
+            # (the engine rebinds the recorder's clock to its own).
+            for ctl in self.controllers.values():
+                ctl.tm.clock = self.tracer.clock
 
     def obs_meta(self) -> Dict[str, int]:
         if not self._lo_b:
@@ -647,6 +744,8 @@ class DynaExqBackend(_BackendBase):
                 host_mask = ~store.lo_resident & store.lo_valid
             else:
                 host_mask = np.zeros(c.shape, bool)
+            if store is not None:
+                host_mask = host_mask | store.quarantined
             pub += int(hi_mask.sum())
             hi += int((act & hi_mask).sum())
             host += int((act & ~hi_mask & host_mask).sum())
@@ -777,19 +876,38 @@ class DynaExqBackend(_BackendBase):
             c = np.asarray(c)
             ctl.observe(c)
             store = self.stores.get(k)
-            if store is None or not self.lo_resident_total:
+            if store is None:
                 continue
             # Routed experts whose lo residency was ceded to the host tier
             # pay a demand fetch on the critical path (their device rows
             # are valid — the stall models the configuration where a
-            # host-resident row would not be kept on device).
-            miss = (c > 0) & ~store.lo_resident & store.lo_valid
+            # host-resident row would not be kept on device). Quarantined
+            # cells are ALWAYS host-served (their device rows are unreal),
+            # regardless of whether the host tier is enabled.
+            miss = np.zeros(c.shape, bool)
+            if self.lo_resident_total:
+                miss = ~store.lo_resident & store.lo_valid
+            miss = (c > 0) & (miss | store.quarantined)
             n = int(miss.sum())
             if n:
                 demand = n * self._lo_b[k]
                 self._host_acct["host_fetches"] += n
                 self._host_acct["host_fetch_bytes"] += demand
                 s = self.fetch.stall_s(demand)
+                if self.injector is not None:
+                    f = self.injector.fire("host_fetch", pos=k, experts=n)
+                    if f is not None:
+                        # A failed (or slow) demand fetch is retried
+                        # synchronously on the critical path: one extra
+                        # full transfer plus any injected stall —
+                        # availability is never lost, only latency.
+                        extra = s + (f.stall_s if f.kind == "stall" else 0.0)
+                        s += extra
+                        self._fault_acct["retries"] += 1
+                        if self.tracer is not None:
+                            self.tracer.instant("retry", cat="fault",
+                                                site="host_fetch", pos=k,
+                                                backoff_s=round(extra, 9))
                 stall += s
                 if self.tracer is not None:
                     # stall_s is modeled from bytes (deterministic), safe
@@ -810,6 +928,7 @@ class DynaExqBackend(_BackendBase):
                 ctl.maybe_update()
         if self.coordinator is not None:
             self.coordinator.maybe_rebalance()
+        self._heal_quarantined()
         for store in self.stores.values():
             store.publish_lo()
 
@@ -835,7 +954,16 @@ class DynaExqBackend(_BackendBase):
         for (pos, l), (ex, res) in batch.items():
             # One scatter per (layer, leaf): the pump is dispatch-bound on
             # tiny rows, so cell-at-a-time writes would dominate TTFT.
-            self.stores[pos].stage_lo_batch(self.banks[pos], l, ex, res)
+            try:
+                self.stores[pos].stage_lo_batch(self.banks[pos], l, ex, res)
+            except RetryExhausted:
+                # The staging source exhausted its retries: quarantine the
+                # batch (served from host, healed by later re-stages) so
+                # one unreadable shard can never hold ``serving_ready()``
+                # hostage; refund the residency quota it reserved.
+                self.stores[pos].quarantine(l, ex)
+                if self.lo_resident_total is not None:
+                    self._lo_quota_left += sum(res)
         for store in self.stores.values():
             store.publish_lo()
         if not self._pump_queue:
@@ -878,7 +1006,7 @@ class DynaExqBackend(_BackendBase):
         cur_lo = [set() for _ in range(R)] if use_lo else None
         for pos, off in self._row_offsets.items():
             ctl = self.controllers[pos]
-            w = ctl.hotness.fold()
+            w = ctl.folded_scores()     # fold + failure-decay penalty
             s = self._sens.get(pos)
             if s is not None:
                 w = w * s
@@ -903,7 +1031,14 @@ class DynaExqBackend(_BackendBase):
                 if store.lo_valid[l, e]:
                     store.lo_resident[l, e] = True
                 else:
-                    store.stage_lo(self.banks[pos], l, e, resident=True)
+                    try:
+                        store.stage_lo(self.banks[pos], l, e, resident=True)
+                    except RetryExhausted:
+                        # Failed lo staging falls back to the host demand
+                        # path: the cell stays host-resident (paying the
+                        # modeled fetch stall when routed) and the allocator
+                        # re-candidates it next window.
+                        continue
         promos: Dict[str, list] = {p: [] for p in self.controllers}
         demos: Dict[str, list] = {p: [] for p in self.controllers}
         for r, e in asn.promotions:
@@ -982,12 +1117,16 @@ class DynaExqBackend(_BackendBase):
         agg = {"stall_s": 0.0, "bytes_moved": 0.0,
                "promotions": 0.0, "demotions": 0.0, "deferred": 0.0,
                "lo_resident_frac": 1.0, "hi_loads": 0.0, "migrations": 0.0,
-               "host_fetches": float(self._host_acct["host_fetches"])}
+               "host_fetches": float(self._host_acct["host_fetches"]),
+               "retries": float(self._fault_acct["retries"]),
+               "fault_cancels": 0.0, "quarantined": 0.0}
         for ctl in self.controllers.values():
             agg["bytes_moved"] += ctl.tm.stats["bytes_moved"]
             agg["promotions"] += ctl.tm.stats["promoted"]
             agg["demotions"] += ctl.tm.stats["demoted"]
             agg["deferred"] += ctl.tm.stats["deferred"]
+            agg["retries"] += ctl.tm.stats["retries"]
+            agg["fault_cancels"] += ctl.tm.stats["fault_cancels"]
         agg["bytes_moved"] += self._host_acct["host_fetch_bytes"]
         if self.stores:
             agg["lo_resident_frac"] = float(np.mean(
@@ -996,10 +1135,18 @@ class DynaExqBackend(_BackendBase):
                 s.stats["hi_loads"] for s in self.stores.values()))
             agg["bytes_moved"] += sum(
                 s.stats["lo_bytes_staged"] for s in self.stores.values())
+            agg["retries"] += sum(
+                s.stats["retries"] for s in self.stores.values())
+            # Live gauge (not a counter): cells currently host-served
+            # because their staging source kept failing.
+            agg["quarantined"] = float(sum(
+                int(s.quarantined.sum()) for s in self.stores.values()))
         agg["residency_ready_frac"] = self.ready_frac()
         if self.coordinator is not None:
             agg["migrations"] = float(self.coordinator.stats["migrations"])
             agg["bytes_moved"] += self.coordinator.stats["bytes_moved"]
+            agg["fault_cancels"] += \
+                self.coordinator.stats["aborted_migrations"]
         return agg
 
 

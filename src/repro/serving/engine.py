@@ -106,7 +106,7 @@ ENGINE_STAT_KEYS = (
     "prefix_hit_tokens", "kv_cow_copies", "preemptions", "resumes",
     "shed_requests", "downgraded", "chunk_prefills",
     "prefill_compiles", "kv_blocks_in_use", "kv_bytes_in_use",
-    "prefix_trie_nodes", "spec_row_rounds")
+    "prefix_trie_nodes", "spec_row_rounds", "watchdog_cancels")
 
 #: Keys ``load_snapshot()`` returns — the shed policy's input schema,
 #: pinned for the same reason.
@@ -264,6 +264,14 @@ class EngineConfig:
     # which reproduce the untiered engine exactly for default-class
     # traffic. See repro.serving.scheduler.
     scheduler: Optional[SchedulerConfig] = None
+    # ---- fault tolerance (repro.fault) -------------------------------
+    # Cancel hi promotions stuck in flight longer than this (engine-clock
+    # seconds since copy issue): slot freed, reservation refunded, expert
+    # keeps serving lo. None = no promotion watchdog.
+    promo_deadline_s: Optional[float] = None
+    # Preempt-and-requeue RUNNING requests that appended no token for this
+    # long (bit-exact snapshot resume). None = no request watchdog.
+    watchdog_no_progress_s: Optional[float] = None
 
 
 class RequestState(enum.Enum):
@@ -272,6 +280,29 @@ class RequestState(enum.Enum):
     RUNNING = "running"
     FINISHED = "finished"
     SHED = "shed"                 # refused by the load-shedding policy
+
+
+class EngineStallError(RuntimeError):
+    """The engine went fully idle with queued work it could not admit and
+    no in-flight transfers left to free bytes — no future step can change
+    anything. Carries a structured ``snapshot`` (queue depths per QoS
+    tier, pending promotions with ages, budget headroom, residency
+    readiness) so operators see *why* admission wedged instead of a bare
+    "stalled" string."""
+
+    def __init__(self, snapshot: Dict[str, object]):
+        self.snapshot = snapshot
+        depths = snapshot.get("queue_depths", {})
+        pend = snapshot.get("pending_promotions", [])
+        super().__init__(
+            f"admission stalled: {snapshot.get('queued_total', 0)} queued "
+            f"request(s) cannot reserve KV under the shared HBM envelope "
+            f"and no in-flight work remains to free bytes "
+            f"(queue depths {depths}, envelope used "
+            f"{snapshot.get('budget_used', 0)}/"
+            f"{snapshot.get('budget_cap', 0)}, "
+            f"ready_frac {snapshot.get('residency_ready_frac', 1.0):.3f}, "
+            f"{len(pend)} pending promotion(s))")
 
 
 class RequestHandle:
@@ -318,6 +349,14 @@ class RequestHandle:
         # router selections attributed to THIS request's row (prompt tokens
         # at prefill + one per decode step). Populated at admission.
         self.expert_counts: Optional[Dict[str, np.ndarray]] = None
+        # ---- fault tolerance -----------------------------------------
+        # True once any forward of this request routed through a
+        # quarantined (host-served, degraded-quality) expert cell — such
+        # requests complete but are excluded from bit-parity guarantees.
+        self.degraded = False
+        # Engine clock at the last appended token (watchdog progress
+        # stamp; 0.0 until the first token).
+        self.last_progress_s: float = 0.0
 
     @property
     def workload(self) -> str:
@@ -422,6 +461,24 @@ class InferenceEngine:
 
         self.banks = backend.materialize_banks(cfg, params, kv_bytes,
                                                budget=self.budget)
+        # ---- fault tolerance (repro.fault) ------------------------------
+        # Rebind the transfer plane's clocks to the engine clock (virtual
+        # under replay) so promotion ages — the watchdog's input — share
+        # the time base of every other engine metric.
+        bind = getattr(backend, "bind_clock", None)
+        if bind is not None:
+            bind(self._now)
+        self._watchdog = None
+        if self.ecfg.promo_deadline_s is not None or \
+                self.ecfg.watchdog_no_progress_s is not None:
+            from repro.fault.watchdog import Watchdog, WatchdogConfig
+            self._watchdog = Watchdog(WatchdogConfig(
+                promo_deadline_s=self.ecfg.promo_deadline_s,
+                no_progress_s=self.ecfg.watchdog_no_progress_s),
+                tracer=self.tracer)
+        # Quarantine-degradation marking: a single method call per step
+        # when the backend exposes it, skipped entirely otherwise.
+        self._degraded_fn = getattr(backend, "degraded_cells", None)
         # MoE dispatch layout + per-row capacity normalization, resolved
         # ONCE here (env changes after construction cannot disagree with
         # already-compiled executables). The decode row cap is static; the
@@ -509,7 +566,7 @@ class InferenceEngine:
                          "prefix_hit_tokens": 0, "kv_cow_copies": 0,
                          "preemptions": 0, "resumes": 0,
                          "shed_requests": 0, "downgraded": 0,
-                         "chunk_prefills": 0}
+                         "chunk_prefills": 0, "watchdog_cancels": 0}
         # ---- length-bucket ladder -----------------------------------
         # SSD prefill requires sequence length divisible by the chunk size,
         # so for stacks with mamba layers every bucket is a chunk multiple.
@@ -1101,6 +1158,7 @@ class InferenceEngine:
         stall = self.backend.observe(counts_np, dt, prefill=True,
                                      row_valid=row_valid)
         self._stall_clock += stall
+        self._note_degraded(counts_np, list(enumerate(group)))
         for r, handle in enumerate(group):
             slot = int(slots_arr[r])
             handle.stall_exposure_s += stall
@@ -1122,6 +1180,7 @@ class InferenceEngine:
                              self._stall_clock - handle.stall_at_submit)
             self.ttfts.append(handle.ttft_s)
             handle.state = RequestState.RUNNING
+            handle.last_progress_s = handle.first_token_s
             handle.slot = slot
             # Per-request attribution needs row-resolved counts; under
             # shard_map expert parallelism only aggregates exist.
@@ -1510,6 +1569,8 @@ class InferenceEngine:
         self._stall_clock += stall
         for _, h in group:
             h.stall_exposure_s += stall
+        self._note_degraded(counts_np, [(r, h) for r, (i, h)
+                                        in enumerate(group)])
         amax = np.asarray(jnp.argmax(logits, -1), np.int32)
         samp = self._gather_sampling_rows(
             logits, [r for r, (i, h) in enumerate(group)
@@ -1545,6 +1606,7 @@ class InferenceEngine:
                         self._stall_clock - h.stall_at_submit)
             self.ttfts.append(h.ttft_s)
             h.state = RequestState.RUNNING
+            h.last_progress_s = h.first_token_s
             self.pos[i] = plen
             self.tokens[i] = tok
             if self._done(h):
@@ -1563,6 +1625,11 @@ class InferenceEngine:
         uniform-class traffic — is exactly the untiered engine. Returns
         the handles that finished this step."""
         finished: List[RequestHandle] = []
+        if self._watchdog is not None:
+            # Scan BEFORE this step makes progress: a request that wedged
+            # during prior steps still carries its stale stamp here, and a
+            # cancelled promotion's slot is re-admittable this same step.
+            self._watchdog.scan(self)
         ready = getattr(self.backend, "serving_ready", None)
         if ready is not None and not ready():
             # Streaming cold start: the residency ladder is still
@@ -1712,11 +1779,14 @@ class InferenceEngine:
         amax = np.asarray(jnp.argmax(logits, -1), np.int32)
         samp = self._gather_sampling_rows(
             logits, [i for i, h in active if not h.sampler.greedy])
+        self._note_degraded(counts_np, active)
         for i, handle in active:
             tok = int(amax[i]) if i not in samp else \
                 handle.sampler.next_token(samp[i], len(handle.tokens))
             handle.tokens.append(tok)
             handle.step_times.append(latency)
+            if self._watchdog is not None:
+                handle.last_progress_s = self._now()
             for k, v in counts_np.items():
                 if v.ndim == 3 and k in handle.expert_counts:
                     handle.expert_counts[k] += v[:, i]
@@ -1725,6 +1795,26 @@ class InferenceEngine:
             if self._done(handle):
                 self._finish(handle, finished)
         self.counters["steps"] += 1
+
+    def _note_degraded(self, counts_np: Dict[str, np.ndarray],
+                       rows) -> None:
+        """Flag requests whose forward routed through a quarantined expert
+        cell (host-served after repeated staging failures): they complete,
+        but at degraded quality — the chaos-parity contract excludes them.
+        ``rows``: (row index into the counts' row dim, handle) pairs."""
+        if self._degraded_fn is None:
+            return
+        cells = self._degraded_fn()
+        if not cells:
+            return
+        for pos, q in cells.items():
+            v = counts_np.get(pos)
+            if v is None or v.ndim != 3:       # (nsb, R, E)
+                continue
+            hit = ((v > 0) & q[:, None, :]).any(axis=(0, 2))
+            for r, h in rows:
+                if hit[r]:
+                    h.degraded = True
 
     def drain(self) -> List[RequestHandle]:
         """Run ``step()`` until no request is queued or running; returns the
@@ -1755,14 +1845,34 @@ class InferenceEngine:
         if self.queue and idle and len(self.queue) == queue_before:
             stalled += 1
             if stalled > 256:
-                raise RuntimeError(
-                    f"admission stalled: {len(self.queue)} queued "
-                    f"request(s) cannot reserve KV under the shared "
-                    f"HBM envelope and no in-flight work remains to "
-                    f"free bytes (envelope used "
-                    f"{self.budget.used}/{self.budget.cap})")
+                raise EngineStallError(self._stall_snapshot())
             return stalled
         return 0
+
+    def _stall_snapshot(self) -> Dict[str, object]:
+        """Diagnostic state for ``EngineStallError``: everything an
+        operator needs to tell a budget wedge from a stuck transfer from
+        a cold start that never finished."""
+        now = self._now()
+        frac = getattr(self.backend, "ready_frac", None)
+        pend_fn = getattr(self.backend, "pending_promotions", None)
+        pending = []
+        if pend_fn is not None:
+            pending = [{"pos": str(pos), "layer": int(l), "expert": int(e),
+                        "age_s": float(age)}
+                       for pos, l, e, age in pend_fn(now)]
+        return {
+            "queued_total": len(self.queue),
+            "queue_depths": self.queue.depths(),
+            "running": sum(1 for h in self.slots if h is not None),
+            "budget_used": int(self.budget.used),
+            "budget_cap": int(self.budget.cap),
+            "budget_headroom_frac": float(self.budget.headroom_frac()),
+            "residency_ready_frac":
+                float(frac()) if frac is not None else 1.0,
+            "pending_promotions": pending,
+            "counters": dict(self.counters),
+        }
 
     def replay(self, stream, realtime: bool = True,
                virtual_step_s: float = 2e-3) -> List[RequestHandle]:

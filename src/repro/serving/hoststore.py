@@ -35,6 +35,8 @@ import jax
 import numpy as np
 
 from repro.core.ver import ExpertBankQ, write_lo_expert, write_lo_rows
+from repro.fault.inject import TransferFault
+from repro.fault.retry import RetryExhausted, RetryPolicy, retry_call
 
 
 @dataclasses.dataclass
@@ -98,8 +100,17 @@ class HostExpertStore:
         self.lo_resident = self.lo_valid.copy()
         self._staging: List[_PendingLo] = []
         self.stats = {"hi_loads": 0, "hi_bytes_loaded": 0,
-                      "lo_staged": 0, "lo_bytes_staged": 0}
+                      "lo_staged": 0, "lo_bytes_staged": 0,
+                      "retries": 0, "retry_stall_s": 0.0, "quarantines": 0}
         self.tracer = None   # FlightRecorder, attached by the serving layer
+        # Fault tolerance: host loads and staging retry under ``retry``;
+        # a cell whose staging source exhausts its retries is quarantined —
+        # served from host (demand-fetch stall, zero-weight device rows
+        # never referenced as valid) instead of blocking ``lo_complete``
+        # forever. Healing: a later successful re-stage clears the flag.
+        self.injector = None  # repro.fault.inject.FaultInjector
+        self.retry = RetryPolicy()
+        self.quarantined = np.zeros((self.L, self.E), bool)
 
     # -- host_hi mapping interface (TransitionManager / EPCoordinator) ----
     def items(self):
@@ -114,8 +125,46 @@ class HostExpertStore:
     def swap_experts(self, layer: int, e: int, f: int) -> None:
         """EP relabeling: the residency/presence masks follow their expert
         (the hi row swap itself runs through the mapping interface)."""
-        for m in (self.hi_present, self.lo_valid, self.lo_resident):
+        for m in (self.hi_present, self.lo_valid, self.lo_resident,
+                  self.quarantined):
             m[layer, [e, f]] = m[layer, [f, e]]
+
+    # -- fault plumbing ---------------------------------------------------
+    def _seed(self) -> int:
+        return self.injector.seed if self.injector is not None else 0
+
+    def _fire(self, site: str, **ctx) -> None:
+        """Evaluate the fault plan at a host-transfer site. ``stall`` is
+        absorbed as modeled stall seconds; ``fail`` raises a retryable
+        `TransferFault`; ``corrupt`` is a failed checksum — also retried."""
+        if self.injector is None:
+            return
+        f = self.injector.fire(site, **ctx)
+        if f is None:
+            return
+        if f.kind == "stall":
+            self.stats["retry_stall_s"] += f.stall_s
+            return
+        raise TransferFault(site, kind=f.kind, seq=f.seq)
+
+    def _retry(self, fn, site: str, key: int):
+        """Run one host transfer under the shared retry policy, accounting
+        retries + modeled backoff. `RetryExhausted` propagates to the
+        caller's graceful-degradation path."""
+        try:
+            out, retries, waited = retry_call(
+                fn, self.retry, seed=self._seed(), key=key, site=site,
+                tracer=self.tracer)
+        except RetryExhausted as e:
+            # The attempts were still made (and their backoff modeled) —
+            # account them before the degradation path takes over.
+            self.stats["retries"] += e.attempts - 1
+            self.stats["retry_stall_s"] += e.waited_s
+            raise
+        if retries:
+            self.stats["retries"] += retries
+            self.stats["retry_stall_s"] += waited
+        return out
 
     # -- hi tier (host side) ----------------------------------------------
     def ensure_hi(self, layer: int, expert: int) -> None:
@@ -128,7 +177,12 @@ class HostExpertStore:
             raise RuntimeError(
                 f"expert ({layer}, {expert}) absent from the host store "
                 f"and no hi_loader configured")
-        rows = self._hi_loader(layer, expert)
+
+        def attempt():
+            self._fire("host_hi", layer=layer, expert=expert)
+            return self._hi_loader(layer, expert)
+
+        rows = self._retry(attempt, "host_hi", (layer << 16) | expert)
         nbytes = 0
         for name, arr in self.hi.items():
             r = np.asarray(rows[name])
@@ -144,7 +198,10 @@ class HostExpertStore:
             raise RuntimeError("no lo_loader configured for lo staging")
         cl, rows = self._lo_cache
         if cl != layer:
-            rows = self._lo_loader(layer)
+            def attempt():
+                self._fire("host_lo", layer=layer)
+                return self._lo_loader(layer)
+            rows = self._retry(attempt, "host_lo", layer)
             self._lo_cache = (layer, rows)
         return rows
 
@@ -154,7 +211,10 @@ class HostExpertStore:
         the bank; returns the bytes in flight. The rows stay unreferenced
         (``lo_valid`` unflipped) until ``publish_lo`` sees the copy's own
         result arrays ready."""
-        rows = self._lo_rows(layer)
+        def fetch():
+            self._fire("stage_lo", layer=layer, experts=1)
+            return self._lo_rows(layer)
+        rows = self._retry(fetch, "stage_lo", (layer << 16) | expert)
         arrays = []
         nbytes = 0
         li, ei = np.int32(layer), np.int32(expert)
@@ -185,7 +245,12 @@ class HostExpertStore:
         identical to issuing ``stage_lo`` per cell."""
         idx = np.asarray(list(experts), np.int32)
         res = np.asarray(list(resident), bool)
-        rows = self._lo_rows(layer)
+
+        def fetch():
+            self._fire("stage_lo", layer=layer, experts=int(idx.size))
+            return self._lo_rows(layer)
+
+        rows = self._retry(fetch, "stage_lo", layer)
         arrays = []
         nbytes = 0
         li = np.int32(layer)
@@ -228,6 +293,9 @@ class HostExpertStore:
                                   ex.shape)
             self.lo_valid[p.layer, ex] = True
             self.lo_resident[p.layer, ex[res]] = True
+            # Healing: real rows just landed for these cells — any
+            # quarantine from an earlier failed staging is lifted.
+            self.quarantined[p.layer, ex] = False
             published += int(ex.size)
         self._staging = still
         if published and self.tracer is not None:
@@ -240,9 +308,28 @@ class HostExpertStore:
 
     @property
     def lo_complete(self) -> bool:
-        """Every expert's device lo rows hold real weights — the serving
-        gate on a streaming cold start."""
-        return bool(self.lo_valid.all()) and not self._staging
+        """Every expert's device lo rows hold real weights (or the cell is
+        quarantined and served from host) — the serving gate on a streaming
+        cold start. Quarantine keeps one unreadable shard from blocking
+        ``serving_ready()`` forever."""
+        return bool((self.lo_valid | self.quarantined).all()) \
+            and not self._staging
+
+    def quarantine(self, layer: int, experts) -> int:
+        """Mark cells whose staging source exhausted its retries: they are
+        served from the host tier (demand-fetch pricing, requests routed to
+        them flagged degraded) and re-staged opportunistically until a copy
+        lands and heals them."""
+        ex = np.atleast_1d(np.asarray(experts, np.int64))
+        ex = ex[~self.lo_valid[layer, ex]]      # valid cells need no rescue
+        fresh = ex[~self.quarantined[layer, ex]]
+        self.quarantined[layer, fresh] = True
+        n = int(fresh.size)
+        self.stats["quarantines"] += n
+        if n and self.tracer is not None:
+            self.tracer.instant("quarantine", cat="fault", layer=layer,
+                                experts=n)
+        return n
 
     def check_invariants(self) -> None:
         """Residency-ladder invariants: a lo-resident cell must be valid
@@ -250,6 +337,13 @@ class HostExpertStore:
         unpublished cell is never already marked valid by that staging."""
         assert (self.lo_valid | ~self.lo_resident).all(), \
             "lo_resident cell with invalid device rows"
+        # A quarantined cell is by definition not materialized on device:
+        # never valid (healing clears the flag at publish) and never
+        # counted resident by the allocator.
+        assert not (self.quarantined & self.lo_valid).any(), \
+            "quarantined cell marked lo_valid"
+        assert not (self.quarantined & self.lo_resident).any(), \
+            "quarantined cell counted lo_resident"
         if self._hi_loader is None:
             assert self.hi_present.all()
 

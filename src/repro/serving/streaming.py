@@ -31,11 +31,13 @@ from __future__ import annotations
 
 import json
 import os
+import zipfile
 from typing import Dict, List, Optional
 
 import jax
 import numpy as np
 
+from repro.fault.inject import TransferFault
 from repro.quant.qtensor import quantize
 
 
@@ -132,25 +134,51 @@ class ShardSource:
         self.lo_bits = int(self.manifest["lo_bits"])
         self.group_size = int(self.manifest["group_size"])
         self.positions: List[str] = list(self.manifest["positions"])
-        self.stats = {"lo_reads": 0, "hi_reads": 0, "bytes_read": 0}
+        self.stats = {"lo_reads": 0, "hi_reads": 0, "bytes_read": 0,
+                      "fault_stall_s": 0.0}
+        # Fault injection (``shard_lo``/``shard_hi`` sites): missing and
+        # corrupt npz files — injected or real — surface as retryable
+        # `TransferFault`s; the retry loop lives in the consuming
+        # ``HostExpertStore`` loaders.
+        self.injector = None
 
     def shapes(self, pos) -> Dict[str, tuple]:
         return {n: tuple(s)
                 for n, s in self.manifest["shapes"][str(pos)].items()}
 
+    def _fire(self, site: str, **ctx) -> None:
+        if self.injector is None:
+            return
+        f = self.injector.fire(site, **ctx)
+        if f is None:
+            return
+        if f.kind == "stall":
+            self.stats["fault_stall_s"] += f.stall_s   # modeled slow read
+            return
+        raise TransferFault(site, kind=f.kind, seq=f.seq)
+
+    def _read_npz(self, site: str, path: str) -> Dict[str, np.ndarray]:
+        try:
+            with np.load(path) as z:
+                return {k: z[k] for k in z.files}
+        except (OSError, ValueError, zipfile.BadZipFile, KeyError) as e:
+            # Missing or corrupt shard on disk: same retryable surface as
+            # an injected fault, so one degradation path covers both.
+            raise TransferFault(site, detail=f"{path}: {e}") from e
+
     def lo_layer(self, pos, layer: int) -> Dict[str, np.ndarray]:
-        with np.load(os.path.join(
-                self.path, "lo", f"p{pos}_l{layer}.npz")) as z:
-            rows = {k: z[k] for k in z.files}
+        self._fire("shard_lo", pos=str(pos), layer=layer)
+        rows = self._read_npz("shard_lo", os.path.join(
+            self.path, "lo", f"p{pos}_l{layer}.npz"))
         self.stats["lo_reads"] += 1
         self.stats["bytes_read"] += sum(a.nbytes for a in rows.values())
         return rows
 
     def hi_expert(self, pos, layer: int, expert: int
                   ) -> Dict[str, np.ndarray]:
-        with np.load(os.path.join(
-                self.path, "hi", f"p{pos}_l{layer}_e{expert}.npz")) as z:
-            rows = {k: z[k] for k in z.files}
+        self._fire("shard_hi", pos=str(pos), layer=layer, expert=expert)
+        rows = self._read_npz("shard_hi", os.path.join(
+            self.path, "hi", f"p{pos}_l{layer}_e{expert}.npz"))
         self.stats["hi_reads"] += 1
         self.stats["bytes_read"] += sum(a.nbytes for a in rows.values())
         return rows

@@ -192,7 +192,9 @@ def test_stat_extras_pinned():
     assert _BackendExtras("static") == ()
     assert _BackendExtras("dynaexq") == (
         "deferred", "lo_resident_frac", "hi_loads", "residency_ready_frac",
-        "migrations")
+        "migrations", "quarantined")
+    assert {"retries", "fault_cancels"} <= set(STAT_KEYS)
+    assert "watchdog_cancels" in ENGINE_STAT_KEYS
     assert _BackendExtras("offload") == ("hits", "misses")
     assert len(STAT_KEYS) == len(set(STAT_KEYS))
     assert len(ENGINE_STAT_KEYS) == len(set(ENGINE_STAT_KEYS))
